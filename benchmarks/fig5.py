@@ -1,0 +1,43 @@
+"""Fig. 5 reproduction: analog/digital area + power breakdown of the
+mixed-signal designs (paper: digital ~54% of area on average; analog
+~89% of power)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hwcost, selection
+from repro.data import datasets
+
+
+def run(n_epochs: int = 120, seed: int = 0, verbose: bool = True):
+    linear_systems = {}
+    mixed = {}
+    for name in datasets.DATASETS:
+        ds = datasets.load(name)
+        res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
+                                n_epochs=n_epochs, seed=seed)
+        linear_systems[name] = res.linear_circuit
+        mixed[name] = res.mixed_circuit
+    cm = hwcost.calibrate_digital(linear_systems)
+
+    rows = []
+    for name, sys in mixed.items():
+        c = hwcost.system_cost(sys, cm)
+        rows.append((name, c.analog_area_frac, 1 - c.analog_area_frac,
+                     c.analog_power_frac, 1 - c.analog_power_frac))
+    mean_dig_area = float(np.mean([r[2] for r in rows]))
+    mean_an_power = float(np.mean([r[3] for r in rows]))
+
+    if verbose:
+        print("dataset,analog_area_frac,digital_area_frac,"
+              "analog_power_frac,digital_power_frac")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.2f},{r[2]:.2f},{r[3]:.2f},{r[4]:.2f}")
+        print(f"mean_digital_area_frac,{mean_dig_area:.2f},paper,0.54")
+        print(f"mean_analog_power_frac,{mean_an_power:.2f},paper,0.89")
+    return rows, {"mean_digital_area_frac": mean_dig_area,
+                  "mean_analog_power_frac": mean_an_power}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Kernel micro-bench: Pallas (interpret) correctness + jnp-path timing.
+
+On this CPU container the Pallas bodies run in the interpreter (numerics
+validation), so wall-clock timing is measured on the pure-jnp oracle —
+the same math XLA compiles — to give a stable us_per_call baseline and
+to populate run.py's CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True):
+    rng = np.random.RandomState(0)
+    rows = []
+
+    # RBF kernel matrix (the paper's hot loop)
+    x = jnp.asarray(rng.rand(512, 5), jnp.float32)
+    z = jnp.asarray(rng.rand(256, 5), jnp.float32)
+    f_ref = jax.jit(lambda a, b: ref.rbf_matrix(a, b, 4.0))
+    us = _time(f_ref, x, z)
+    err = float(jnp.max(jnp.abs(
+        ops.rbf_matrix(x, z, 4.0, bm=128, bn=128) - f_ref(x, z))))
+    rows.append(("rbf_matrix_512x256x5", us, f"maxerr={err:.2e}"))
+
+    # sech2 hardware kernel
+    f_s = jax.jit(lambda a, b: ref.sech2_matrix(a, b, 4.0))
+    us = _time(f_s, x, z)
+    err = float(jnp.max(jnp.abs(
+        ops.rbf_matrix(x, z, 4.0, kind="sech2", bm=128, bn=128) - f_s(x, z))))
+    rows.append(("sech2_matrix_512x256x5", us, f"maxerr={err:.2e}"))
+
+    # flash attention vs reference
+    q = jnp.asarray(rng.randn(1, 4, 256, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 256, 64), jnp.float32)
+    f_a = jax.jit(lambda a, b, c: ref.attention(a, b, c, causal=True))
+    us = _time(f_a, q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.flash_attention(q, k, v, bq=128, bk=128) - f_a(q, k, v))))
+    rows.append(("attention_b1h4s256d64", us, f"maxerr={err:.2e}"))
+
+    # SSD scan
+    bh, s, dh, ds = 4, 256, 32, 16
+    xs = jnp.asarray(rng.randn(bh, s, dh) * 0.3, jnp.float32)
+    a = jnp.asarray(-np.abs(rng.randn(bh, s)) * 0.3, jnp.float32)
+    bm = jnp.asarray(rng.randn(bh, s, ds) * 0.3, jnp.float32)
+    cm = jnp.asarray(rng.randn(bh, s, ds) * 0.3, jnp.float32)
+    from repro.models.ssm import ssd_chunked
+    # oracle view: batch 1, heads = bh, one state group per head
+    f_ssd = jax.jit(lambda x_, a_, b_, c_: ssd_chunked(
+        x_.transpose(1, 0, 2)[None], a_.T[None],
+        b_.transpose(1, 0, 2)[None], c_.transpose(1, 0, 2)[None],
+        chunk=64)[0])
+    us = _time(f_ssd, xs, a, bm, cm)
+    y_pl, _ = ops.ssd_scan(xs, a, bm, cm, chunk=64)
+    y_ref = f_ssd(xs, a, bm, cm)[0].transpose(1, 0, 2)
+    err = float(jnp.max(jnp.abs(y_pl - y_ref)))
+    rows.append(("ssd_bh4s256", us, f"maxerr={err:.2e}"))
+
+    if verbose:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark orchestrator: one entry per paper table/figure + kernels +
+roofline.  Prints ``name,us_per_call,derived`` style CSV blocks."""
+from __future__ import annotations
+
+import os
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    print("== Fig. 4: analog behavioral-model fidelity ==")
+    from benchmarks import fig4
+    fig4.run()
+
+    print("\n== Table II: accuracy / area / power ==")
+    from benchmarks import table2
+    table2.run()
+
+    print("\n== Fig. 5: analog/digital breakdown ==")
+    from benchmarks import fig5
+    fig5.run()
+
+    print("\n== Kernel micro-bench (Pallas interpret vs jnp oracle) ==")
+    from benchmarks import kernelbench
+    kernelbench.run()
+
+    if os.path.isdir("runs/dryrun") and os.listdir("runs/dryrun"):
+        print("\n== Roofline (single-pod 16x16) ==")
+        from benchmarks import roofline
+        roofline.run()
+    else:
+        print("\n(roofline skipped: run `python -m repro.launch.dryrun "
+              "--all --mesh both` first)")
+    print(f"\ntotal_bench_seconds,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

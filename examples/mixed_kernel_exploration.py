@@ -1,0 +1,23 @@
+"""Full paper reproduction in one script: Fig. 4 + Table II + Fig. 5.
+
+  PYTHONPATH=src python examples/mixed_kernel_exploration.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import fig4, fig5, table2
+
+
+def main():
+    print("== Fig. 4: analog model fidelity ==")
+    fig4.run()
+    print("\n== Table II ==")
+    table2.run()
+    print("\n== Fig. 5: breakdown ==")
+    fig5.run()
+
+
+if __name__ == "__main__":
+    main()

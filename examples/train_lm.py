@@ -1,0 +1,43 @@
+"""End-to-end LM training driver (deliverable (b)).
+
+Default preset trains a tiny model in ~a minute on CPU; --preset 100m is
+the assignment's "~100M model for a few hundred steps" configuration
+(run it on real hardware, or be patient).
+
+  PYTHONPATH=src python examples/train_lm.py                  # tiny
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="runs/train_lm")
+    args = ap.parse_args()
+
+    if args.preset == "tiny":
+        argv = ["--arch", "granite-20b", "--reduced",
+                "--steps", str(args.steps or 60),
+                "--global-batch", "8", "--seq-len", "128",
+                "--ckpt-dir", args.ckpt_dir, "--lr", "1e-3"]
+    else:  # ~100M params: 12L x 768 x 3072, 50k vocab
+        argv = ["--arch", "granite-20b", "--reduced",
+                "--d-model", "768", "--d-ff", "3072", "--n-layers", "12",
+                "--steps", str(args.steps or 300),
+                "--global-batch", "32", "--seq-len", "512",
+                "--grad-accum", "4",
+                "--ckpt-dir", args.ckpt_dir]
+    losses = train_mod.main(argv)
+    assert losses[-1] < losses[0], "loss must decrease"
+    print("OK: loss decreased", losses[0], "->", losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro — Mixed-Kernel Mixed-Signal SVMs for Flexible Electronics, in JAX.
+
+A production-grade JAX framework reproducing and extending
+"Design and Optimization of Mixed-Kernel Mixed-Signal SVMs for Flexible
+Electronics" (Afentaki et al., 2025), plus the multi-pod LM substrate for the
+assigned architecture pool (see DESIGN.md).
+
+Subsystems:
+
+  repro.core         paper's contribution (SVM, analog model, selection, cost)
+  repro.data         datasets + token pipeline
+  repro.models       LM architectures
+  repro.training     optimizer / train_step
+  repro.serving      KV cache / prefill / decode
+  repro.distributed  sharding rules, mesh utils, PP, elastic, compression
+  repro.checkpoint   fault-tolerant checkpointing
+  repro.kernels      Pallas TPU kernels (+ refs)
+  repro.configs      architecture configs
+  repro.launch       mesh / dryrun / train / serve entrypoints
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing."""
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, restore, save,
+)

@@ -1,0 +1,107 @@
+"""Shared helpers for architecture configs: shape grid + input specs.
+
+Each ``src/repro/configs/<id>.py`` exposes:
+  make_config()          full assigned config (dims verbatim from the table)
+  reduced()              tiny same-family config for CPU smoke tests
+  ARCH                   the arch id string
+
+The four assigned input shapes (seq_len, global_batch):
+  train_4k     lowers train_step
+  prefill_32k  lowers prefill_step
+  decode_32k   lowers serve_step (1 token vs a seq_len cache)
+  long_500k    lowers serve_step; sub-quadratic archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.serving import engine
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sh = SHAPES[shape_name]
+    s, b, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    i32 = jnp.int32
+
+    if kind == "train":
+        if cfg.family == "audio":
+            se, sd = s // cfg.enc_seq_divisor, s // cfg.dec_seq_divisor
+            batch = {
+                "frames": _sds((b, se, cfg.d_model), cfg.compute_dtype),
+                "tokens": _sds((b, sd), i32),
+                "labels": _sds((b, sd), i32),
+            }
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s - cfg.n_patches), i32),
+                "labels": _sds((b, s - cfg.n_patches), i32),
+                "patch_embeds": _sds((b, cfg.n_patches, cfg.d_model),
+                                     cfg.compute_dtype),
+            }
+        else:
+            batch = {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+        return {"batch": batch}
+
+    if kind == "prefill":
+        if cfg.family == "audio":
+            se, sd = s // cfg.enc_seq_divisor, s // cfg.dec_seq_divisor
+            batch = {"frames": _sds((b, se, cfg.d_model), cfg.compute_dtype),
+                     "tokens": _sds((b, sd), i32)}
+        elif cfg.family == "vlm":
+            batch = {
+                "tokens": _sds((b, s - cfg.n_patches), i32),
+                "patch_embeds": _sds((b, cfg.n_patches, cfg.d_model),
+                                     cfg.compute_dtype),
+            }
+        else:
+            batch = {"tokens": _sds((b, s), i32)}
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len cache
+    state = engine.state_shapes(cfg, b, s)
+    return {"state": state, "tokens": _sds((b, 1), i32)}
+
+
+def reduced_common(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    small = dict(
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=256,
+        vocab_size=512,
+        d_head=32,
+        dtype="float32",
+        remat="none",
+        attn_block=64,
+    )
+    if cfg.family == "moe":
+        small.update(n_experts=8, top_k=2, d_ff=64,
+                     n_shared_experts=min(cfg.n_shared_experts, 1))
+    if cfg.family in ("ssm", "hybrid"):
+        small.update(ssm_state=16, ssm_head_dim=16, ssm_heads=0)
+    if cfg.family == "hybrid":
+        small.update(window=32, global_layers=(0,))
+    if cfg.family == "vlm":
+        small.update(n_patches=16)
+    if cfg.family == "audio":
+        small.update(n_enc_layers=2)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,19 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (GQA kv=1, i.e. MQA)
+d_ff=24576 vocab=49152 — llama-arch, code [arXiv:2405.04324; hf]."""
+from repro.models.common import ModelConfig
+from repro.configs.base import reduced_common
+
+ARCH = "granite-20b"
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="dense",
+        n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab_size=49152, d_head=128,
+        norm="rmsnorm", act="silu",
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduced_common(make_config(), n_kv_heads=1)

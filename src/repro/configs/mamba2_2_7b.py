@@ -1,0 +1,22 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality) [arXiv:2405.21060; unverified]."""
+from repro.models.common import ModelConfig
+from repro.configs.base import reduced_common
+
+ARCH = "mamba2-2.7b"
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH, family="ssm",
+        n_layers=64, d_model=2560, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        norm="rmsnorm", act="silu",
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_groups=1,
+    )
+
+
+def reduced() -> ModelConfig:
+    return reduced_common(make_config(), n_heads=0, n_kv_heads=0, d_ff=0)
+
+

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: mixed-kernel mixed-signal SVMs.
+
+Layout:
+  kernels.py          linear / RBF / hardware-sech2 kernel math (Eqs. 2-6)
+  svm.py              JAX dual-coordinate-ascent SVM solver + CV grid search
+  analog.py           circuit surrogate ("SPICE") + behavioral model (Sec. IV-A)
+  quant.py            ADC / fixed-point quantization (Sec. V-A2)
+  ovo.py              OvO decomposition, encoder decision logic, digital datapaths
+  selection.py        Algorithm 1 - separation-driven mixed-kernel exploration
+  hwcost.py           FlexIC area/power cost model (stands in for Synopsys DC)
+  mixed_precision.py  TPU analogue: separation-driven precision domains
+"""

@@ -1,0 +1,322 @@
+"""Analog RBF classifier: circuit surrogate + behavioral model (paper III-B, IV-A).
+
+Two layers, mirroring the paper's methodology exactly:
+
+1. ``CircuitParams`` + the ``*_circuit`` functions — a transistor-level
+   *surrogate simulator* standing in for Cadence Spectre.  It evaluates the
+   actual subthreshold device equations of the FlexIC cells (exponential I-V
+   with slope factor n, threshold mismatch, mirror ratio error, finite input
+   range) rather than the ideal math.  DC sweeps of this surrogate play the
+   role of the paper's SPICE sweeps.
+
+2. ``AnalogRBFModel`` — the high-level *behavioral model* of Sec. IV-A: the
+   measured transfer curve is kept as sampled data, an ideal Gaussian
+   ``A0 exp(-gamma0 (dv - mu)^2)`` is fitted to it (Eq. 7) to extract gamma0,
+   kernel widths gamma* are realised by input scaling s = sqrt(gamma*/gamma0)
+   (Eq. 8), and the alpha multiplier is a logistic fitted as (x0, s) with the
+   software-side inverse mapping  dV_alpha = x0 + s ln(1/alpha - 1)  (Eq. 9).
+
+``AnalogBinaryClassifier`` deploys a trained RBF ``SVMModel`` onto this
+hardware model: alpha normalisation into the (0,1) multiplier range, signed
+accumulation of per-SV currents on +/- rails, and a comparator producing the
+1-bit digital output (analog-in digital-out — no ADC).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels import N_SLOPE, V_T
+from repro.core.svm import SVMModel
+
+# --------------------------------------------------------------------------
+# Circuit surrogate ("SPICE")
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitParams:
+    """Process/bias parameters of the FlexIC subthreshold cells."""
+
+    n: float = N_SLOPE            # subthreshold slope factor
+    v_t: float = V_T              # thermal voltage (V)
+    i_bias: float = 150e-9        # kernel chain bias current I_in (A)
+    v_supply: float = 1.0         # analog supply (V), regulated from 1.5 V
+    v_range: float = 0.40         # usable differential input range (V)
+    sigma_vth: float = 3.0e-3     # per-device threshold mismatch (V)
+    mirror_err: float = 0.02      # readout mirror ratio error (rel.)
+    lambda_ds: float = 0.01       # residual V_DS sensitivity (rel.)
+    comparator_offset: float = 1.0e-10  # comparator input offset (A)
+
+
+def _pair_fraction(x: jnp.ndarray) -> jnp.ndarray:
+    """Subthreshold differential-pair current split: I1/I_tail."""
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def gaussian_cell_circuit(
+    dv: jnp.ndarray,
+    p: CircuitParams,
+    offsets: Optional[jnp.ndarray] = None,  # (4,) vth offsets + mirror/ds errs
+) -> jnp.ndarray:
+    """I_out/I_in of one Gaussian cell (Q1..Q6 of Fig. 2) with non-idealities.
+
+    Ideal limit (offsets = 0): Eq. (4),
+      I_out/I_in = 1 / ((1+e^-x)(1+e^x)) = (1/4) sech^2(x/2),  x = dv/(n V_T).
+    """
+    if offsets is None:
+        offsets = jnp.zeros((4,))
+    nvt = p.n * p.v_t
+    dvc = jnp.clip(dv, -p.v_range, p.v_range)  # input rails
+    x = (dvc - offsets[0] * p.sigma_vth) / nvt
+    x2 = (dvc - offsets[1] * p.sigma_vth) / nvt
+    f1 = _pair_fraction(x)            # (Q1, Q2) pair
+    f2 = 1.0 - _pair_fraction(x2)     # cascaded complementary (Q3, Q4) pair
+    mirror = 1.0 + offsets[2] * p.mirror_err      # Q6/Q4 readout ratioing
+    vds_mod = 1.0 + offsets[3] * p.lambda_ds      # weak V_DS dependence
+    return f1 * f2 * mirror * vds_mod
+
+
+def alpha_multiplier_circuit(
+    dva: jnp.ndarray,
+    p: CircuitParams,
+    offsets: Optional[jnp.ndarray] = None,  # (2,) vth offset, slope error
+) -> jnp.ndarray:
+    """I_out/I_in of the alpha multiplier: logistic in the control voltage."""
+    if offsets is None:
+        offsets = jnp.zeros((2,))
+    nvt = p.n * p.v_t * (1.0 + offsets[1] * 0.02)
+    return 1.0 / (1.0 + jnp.exp((dva - offsets[0] * p.sigma_vth) / nvt))
+
+
+def dc_sweep_gaussian(
+    p: CircuitParams, key: Optional[jax.Array] = None, n_points: int = 257
+) -> tuple[np.ndarray, np.ndarray]:
+    """DC sweep of the Gaussian cell: (dv, I_out/I_in). Plays SPICE's role."""
+    dv = jnp.linspace(-p.v_range, p.v_range, n_points)
+    offsets = jax.random.normal(key, (4,)) if key is not None else jnp.zeros((4,))
+    out = gaussian_cell_circuit(dv, p, offsets)
+    return np.asarray(dv), np.asarray(out)
+
+
+def dc_sweep_alpha(
+    p: CircuitParams, key: Optional[jax.Array] = None, n_points: int = 257
+) -> tuple[np.ndarray, np.ndarray]:
+    dva = jnp.linspace(-0.25, 0.25, n_points)
+    offsets = jax.random.normal(key, (2,)) if key is not None else jnp.zeros((2,))
+    return np.asarray(dva), np.asarray(alpha_multiplier_circuit(dva, p, offsets))
+
+
+# --------------------------------------------------------------------------
+# Fits (Sec. IV-A): ideal Gaussian (Eq. 7) and logistic (Eq. 9)
+# --------------------------------------------------------------------------
+
+
+def fit_gaussian(dv: np.ndarray, i_out: np.ndarray) -> tuple[float, float, float]:
+    """Weighted LS fit of A0 exp(-g0 (dv-mu)^2) -> (A0, gamma0, mu).
+
+    log I = a + b dv + c dv^2 with weights I^2 (emphasises the bell's core,
+    where Eq. 5's Taylor matching holds), then gamma0 = -c, mu = b/(2 gamma0).
+    """
+    i = np.clip(np.asarray(i_out, np.float64), 1e-12, None)
+    w = i * i
+    v = np.asarray(dv, np.float64)
+    basis = np.stack([np.ones_like(v), v, v * v], axis=1)
+    wb = basis * w[:, None]
+    coef = np.linalg.solve(basis.T @ wb, wb.T @ np.log(i))
+    a, b, c = coef
+    gamma0 = max(-c, 1e-9)
+    mu = b / (2.0 * gamma0)
+    a0 = float(np.exp(a + gamma0 * mu * mu))
+    return a0, float(gamma0), float(mu)
+
+
+def fit_logistic(dva: np.ndarray, ratio: np.ndarray) -> tuple[float, float]:
+    """Fit  dV_alpha = x0 + s * ln(1/ratio - 1)  (Eq. 9) -> (x0, s)."""
+    r = np.asarray(ratio, np.float64)
+    keep = (r > 1e-4) & (r < 1.0 - 1e-4)
+    z = np.log(1.0 / r[keep] - 1.0)
+    v = np.asarray(dva, np.float64)[keep]
+    s, x0 = np.polyfit(z, v, 1)
+    return float(x0), float(s)
+
+
+def nrmse(ref: np.ndarray, meas: np.ndarray) -> float:
+    ref = np.asarray(ref, np.float64)
+    meas = np.asarray(meas, np.float64)
+    rng = float(ref.max() - ref.min()) or 1.0
+    return float(np.sqrt(np.mean((ref - meas) ** 2)) / rng)
+
+
+def pearson_r(a: np.ndarray, b: np.ndarray) -> float:
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    return float(np.corrcoef(a, b)[0, 1])
+
+
+# --------------------------------------------------------------------------
+# Behavioral model (Sec. IV-A) and hardware-deployed classifier
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogRBFModel:
+    """High-level behavioral model of one fabricated analog RBF core."""
+
+    params: CircuitParams
+    dv_grid: np.ndarray          # measured sweep abscissa (V)
+    kernel_curve: np.ndarray     # measured I_out/I_in, normalised to peak 1
+    a0: float                    # fitted Gaussian amplitude (Eq. 7)
+    gamma0: float                # fitted gamma0 (1/V^2)
+    mu: float                    # fitted center offset (V)
+    alpha_x0: float              # logistic fit (Eq. 9)
+    alpha_s: float
+    dva_grid: np.ndarray         # measured alpha-sweep abscissa (V)
+    alpha_curve: np.ndarray      # measured alpha multiplier ratio
+    v_scale: float = 0.5         # feature-unit -> volt mapping
+
+    @classmethod
+    def from_circuit(
+        cls,
+        p: CircuitParams = CircuitParams(),
+        key: Optional[jax.Array] = None,
+        v_scale: float = 0.5,
+    ) -> "AnalogRBFModel":
+        """Calibrate the behavioral model from surrogate-SPICE DC sweeps."""
+        dv, curve = dc_sweep_gaussian(p, key)
+        a0, g0, mu = fit_gaussian(dv, curve)
+        dva, ratio = dc_sweep_alpha(p, key)
+        x0, s = fit_logistic(dva, ratio)
+        return cls(
+            params=p, dv_grid=dv, kernel_curve=curve / curve.max(),
+            a0=a0, gamma0=g0, mu=mu, alpha_x0=x0, alpha_s=s,
+            dva_grid=dva, alpha_curve=ratio, v_scale=v_scale,
+        )
+
+    # -- kernel ------------------------------------------------------------
+    def gamma0_feature(self) -> float:
+        """Fitted cell gamma expressed in (normalised-feature)^-2 units."""
+        return self.gamma0 * self.v_scale * self.v_scale
+
+    def input_scale(self, gamma_star) -> jnp.ndarray:
+        """Eq. (8): s_gamma = sqrt(gamma*/gamma0).  jnp so it traces under
+        vmap'd hyper-parameter grids during hardware-in-the-loop training."""
+        return jnp.sqrt(jnp.asarray(gamma_star) / self.gamma0_feature())
+
+    def kernel_1d(self, dv_volts: jnp.ndarray) -> jnp.ndarray:
+        """Interpolate the measured transfer curve (paper: 'use the SPICE
+        data together with the fitted gamma0')."""
+        return jnp.interp(
+            dv_volts, jnp.asarray(self.dv_grid), jnp.asarray(self.kernel_curve),
+            left=float(self.kernel_curve[0]), right=float(self.kernel_curve[-1]),
+        )
+
+    def kernel_response(
+        self, x: jnp.ndarray, sv: jnp.ndarray, gamma_star
+    ) -> jnp.ndarray:
+        """Separable D-dim kernel (Eq. 6 + Eq. 8): x (n,d), sv (m,d) -> (n,m).
+
+        This IS the paper's high-level behavioral model, and it is also the
+        kernel used to TRAIN analog-bound classifiers (hardware-in-the-loop
+        co-optimization) — so the deployed circuit computes with the exact
+        kernel it was trained with.
+        """
+        s = self.input_scale(gamma_star)
+        dv = self.v_scale * s * (x[:, None, :] - sv[None, :, :])
+        return jnp.prod(self.kernel_1d(dv), axis=-1)
+
+    # -- alpha multiplier ----------------------------------------------------
+    def alpha_control_voltage(self, alpha: jnp.ndarray) -> jnp.ndarray:
+        """Software mapping Eq. (9): desired alpha -> control differential."""
+        a = jnp.clip(alpha, 1e-4, 1.0 - 1e-4)
+        return self.alpha_x0 + self.alpha_s * jnp.log(1.0 / a - 1.0)
+
+    def alpha_realized(self, dva: jnp.ndarray) -> jnp.ndarray:
+        """Alpha the circuit actually realises for a control voltage —
+        interpolated from the *measured* sweep of this fabricated instance
+        (the same instance the logistic was fitted to)."""
+        grid = jnp.asarray(self.dva_grid)
+        curve = jnp.asarray(self.alpha_curve)
+        order = jnp.argsort(grid)  # interp needs ascending x
+        return jnp.interp(
+            dva, grid[order], curve[order],
+            left=float(curve[np.argmin(self.dva_grid)]),
+            right=float(curve[np.argmax(self.dva_grid)]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogBinaryClassifier:
+    """A trained RBF SVM deployed on the analog hardware model (Sec. III-B)."""
+
+    hw: AnalogRBFModel
+    support_x: np.ndarray   # (m, d) hardwired SV bias voltages
+    support_y: np.ndarray   # (m,) rail routing
+    alpha_hw: np.ndarray    # (m,) normalised to (0, 1)
+    bias_hw: float          # constant rail current (units of I_in)
+    gamma_star: float
+
+    @classmethod
+    def deploy(
+        cls,
+        model: SVMModel,
+        hw: AnalogRBFModel,
+        alpha_floor_rel: float = 1.0 / 256.0,
+    ) -> "AnalogBinaryClassifier":
+        """Deploy an RBF-family SVM onto the analog hardware model.
+
+        ``alpha_floor_rel`` prunes support vectors whose normalised dual
+        coefficient falls below the alpha-control DAC resolution (8-bit by
+        default): such alphas are indistinguishable from switch leakage in
+        the fabricated circuit, so their cells are simply not instantiated.
+        The pruned mass is bounded by m * floor, keeping the decision
+        function perturbation below comparator resolution.
+        """
+        if model.kind not in ("rbf", "sech2", "hw"):
+            raise ValueError("only RBF-family classifiers are deployed in analog")
+        alpha = np.asarray(model.alpha, np.float64)
+        amax = float(alpha.max()) if alpha.size else 1.0
+        keep = np.flatnonzero(alpha >= alpha_floor_rel * amax)
+        # Positive rescale (sign-invariant): alphas into the multiplier's (0,1).
+        scale = amax * 1.05
+        return cls(
+            hw=hw,
+            support_x=model.support_x[keep],
+            support_y=model.support_y[keep],
+            alpha_hw=alpha[keep] / scale,
+            bias_hw=float(model.bias / scale),
+            gamma_star=float(model.gamma),
+        )
+
+    def rail_currents(self, x: np.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(I_plus, I_minus) per input row, in units of I_in."""
+        xj = jnp.asarray(x, jnp.float32)
+        k = self.hw.kernel_response(
+            xj, jnp.asarray(self.support_x, jnp.float32), self.gamma_star
+        )  # (n, m)
+        # Alpha path: desired -> control voltage (Eq. 9) -> realised (circuit).
+        dva = self.hw.alpha_control_voltage(jnp.asarray(self.alpha_hw, jnp.float32))
+        a = self.hw.alpha_realized(dva)
+        cur = k * a[None, :]
+        pos = jnp.asarray(self.support_y > 0, jnp.float32)
+        i_plus = cur @ pos + jnp.maximum(self.bias_hw, 0.0)
+        i_minus = cur @ (1.0 - pos) + jnp.maximum(-self.bias_hw, 0.0)
+        return i_plus, i_minus
+
+    def predict_bits(self, x: np.ndarray) -> np.ndarray:
+        """Comparator output: 1 if the + rail wins (class i of the pair)."""
+        i_plus, i_minus = self.rail_currents(x)
+        off = self.hw.params.comparator_offset / self.hw.params.i_bias
+        return np.asarray(i_plus - i_minus + off >= 0.0, np.int32)
+
+    @property
+    def n_support(self) -> int:
+        return int(self.support_x.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.support_x.shape[1])

@@ -1,0 +1,101 @@
+"""Kernel functions for the mixed-kernel SVM (paper Eq. 2-6).
+
+Three kernel families:
+  * linear      — K(x, z) = x.z                              (digital domain)
+  * rbf         — K(x, z) = exp(-gamma ||x - z||^2)          (ideal Gaussian)
+  * sech2 (hw)  — the hardware transfer of the cascaded subthreshold
+                  differential pairs, Eq. (4):
+                      I_out/I_in = 1/((1+e^{-x})(1+e^{x})) = (1/4) sech^2(x/2)
+                  with x = dv / (n * V_T).  Near the origin this matches the
+                  Gaussian with gamma0 = 1 / (4 n^2 V_T^2)  (Eq. 5).
+
+All kernels operate on the squared-distance decomposition
+``||x - z||^2 = ||x||^2 + ||z||^2 - 2 x.z`` so the dominant term is a matmul
+(MXU-friendly); the Pallas kernel in ``repro.kernels.rbf`` implements the
+tiled version and is validated against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Thermal voltage at 300 K (V) and typical IGZO subthreshold slope factor.
+V_T: float = 0.02585
+N_SLOPE: float = 1.38
+
+
+def pairwise_sq_dists(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """||x_i - z_j||^2 for x:(n,d), z:(m,d) -> (n,m), matmul-dominant form."""
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    zz = jnp.sum(z * z, axis=-1)[None, :]
+    xz = x @ z.T
+    return jnp.maximum(xx + zz - 2.0 * xz, 0.0)
+
+
+def linear_kernel(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """K(x, z) = x.z  (paper Sec. II-A)."""
+    return x @ z.T
+
+
+def rbf_kernel(x: jnp.ndarray, z: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Ideal Gaussian RBF kernel, Eq. (2)."""
+    return jnp.exp(-gamma * pairwise_sq_dists(x, z))
+
+
+def gamma_subthreshold(n: float = N_SLOPE, v_t: float = V_T) -> float:
+    """gamma0 of the un-scaled hardware cell, Eq. (5): 1 / (4 n^2 V_T^2)."""
+    return 1.0 / (4.0 * n * n * v_t * v_t)
+
+
+def sech2_cell(dv: jnp.ndarray, n: float = N_SLOPE, v_t: float = V_T) -> jnp.ndarray:
+    """Single-dimension hardware Gaussian cell transfer I_out/I_in, Eq. (4).
+
+    Normalised so that sech2_cell(0) == 1 (the 1/4 peak factor and the 1/4^D
+    product attenuation of Eq. (6) cancel in the decision function because the
+    comparator only sees the *difference* of rail currents; absolute current
+    scale is carried by the bias current in the behavioural model).
+    """
+    x = dv / (n * v_t)
+    # sech^2(x/2) == 4 / (2 + e^x + e^-x); write it in the cascaded-pair form
+    # of Eq. (4) times 4 for the normalisation described above.
+    return 4.0 / ((1.0 + jnp.exp(-x)) * (1.0 + jnp.exp(x)))
+
+
+def sech2_kernel(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    gamma: jnp.ndarray,
+    v_scale: float = 1.0,
+    n: float = N_SLOPE,
+    v_t: float = V_T,
+) -> jnp.ndarray:
+    """Hardware separable kernel, Eq. (6) + input scaling of Eq. (8).
+
+    Features are mapped to voltages by ``dv = v_scale * (x_d - z_d)`` and the
+    requested ``gamma`` (in feature units) is realised by scaling the input
+    relative to the native cell gamma:  s = sqrt(gamma / gamma0_feature)
+    where gamma0_feature = gamma0_volts * v_scale^2.
+    """
+    gamma0_feat = gamma_subthreshold(n, v_t) * v_scale * v_scale
+    s = jnp.sqrt(gamma / gamma0_feat)
+    # (n, m, d) differences; D <= 5 in hardware so this stays tiny for the
+    # paper's workloads.  The product across dimensions is Eq. (6).
+    dv = v_scale * (x[:, None, :] - z[None, :, :]) * s
+    return jnp.prod(sech2_cell(dv, n, v_t), axis=-1)
+
+
+def kernel_matrix(
+    kind, x: jnp.ndarray, z: jnp.ndarray, gamma: jnp.ndarray | float = 1.0
+) -> jnp.ndarray:
+    """Dispatch on kernel kind; ``kind`` may also be a callable
+    (x, z, gamma) -> K, e.g. the calibrated analog behavioral model for
+    hardware-in-the-loop training."""
+    if callable(kind):
+        return kind(x, z, jnp.asarray(gamma))
+    if kind == "linear":
+        return linear_kernel(x, z)
+    if kind == "rbf":
+        return rbf_kernel(x, z, jnp.asarray(gamma))
+    if kind == "sech2":
+        return sech2_kernel(x, z, jnp.asarray(gamma))
+    raise ValueError(f"unknown kernel kind: {kind!r}")

@@ -1,0 +1,154 @@
+"""Mixed-precision domain assignment — the TPU analogue of "mixed-signal".
+
+DESIGN.md §3: on TPU the paper's domain split (approximate-analog vs
+exact-digital) maps to precision domains: int8 ("analog" — cheap,
+approximate) vs bf16/fp32 ("digital" — exact).  Algorithm 1's
+separation-driven strategy transfers unchanged, at *module* granularity:
+
+    for each module m:
+        quality_cheap  = quality(model with m in the cheap domain)
+        quality_exact  = quality(model with m in the exact domain)
+        assign m to cheap unless the exact domain is strictly better by
+        more than `tolerance`
+
+i.e. exactly the paper's "keep RBF only where it buys accuracy", inverted:
+keep high precision only where it buys quality.  Used by the qwen2.5-32b
+decode hillclimb (int8 weights halve the memory roofline term) and tested
+on small models in-container.
+
+Also provides the int8 quantized-weight container (`QuantTensor`) consumed
+by ``repro.models`` when a config selects `weight_domains`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantTensor:
+    """Symmetric per-channel int8 weight: w ~= q * scale (scale per last dim)."""
+
+    q: jax.Array       # int8, same shape as w
+    scale: jax.Array   # (..., 1) broadcastable f32
+
+    @classmethod
+    def quantize(cls, w: jax.Array, axis: int = -1) -> "QuantTensor":
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+        return cls(q=q, scale=scale.astype(jnp.float32))
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.size + self.scale.size * 4
+
+
+jax.tree_util.register_pytree_node(
+    QuantTensor,
+    lambda t: ((t.q, t.scale), None),
+    lambda _, c: QuantTensor(q=c[0], scale=c[1]),
+)
+
+
+def dequant_matmul(x: jax.Array, w: QuantTensor) -> jax.Array:
+    """x @ dequant(w) — the pattern XLA fuses into the gather of the matmul."""
+    return x @ w.dequantize(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Separation-driven domain assignment (Algorithm 1, precision edition)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DomainAssignment:
+    modules: list[str]
+    domain: dict[str, str]            # module -> 'cheap' | 'exact'
+    quality_cheap: dict[str, float]
+    quality_exact: dict[str, float]
+
+    @property
+    def n_cheap(self) -> int:
+        return sum(v == "cheap" for v in self.domain.values())
+
+
+def assign_domains(
+    modules: Sequence[str],
+    quality_with_domains: Callable[[dict[str, str]], float],
+    tolerance: float = 0.0,
+) -> DomainAssignment:
+    """Per-module greedy separation, mirroring Algorithm 1's per-pair loop.
+
+    ``quality_with_domains`` evaluates the end-to-end model quality (higher
+    is better — accuracy, or -perplexity) under a full module->domain map.
+    Each module is probed independently against the all-exact reference
+    (the analogue of training both kernels per pair), then the joint cheap
+    assignment keeps every module whose independent probe showed no loss
+    beyond ``tolerance``.
+    """
+    base = {m: "exact" for m in modules}
+    q_exact_all = quality_with_domains(dict(base))
+    q_cheap: dict[str, float] = {}
+    q_exact: dict[str, float] = {}
+    domain: dict[str, str] = {}
+    for m in modules:
+        probe = dict(base)
+        probe[m] = "cheap"
+        q_cheap[m] = quality_with_domains(probe)
+        q_exact[m] = q_exact_all
+        # keep exact ONLY if it is strictly better beyond tolerance
+        domain[m] = "exact" if (q_exact_all - q_cheap[m]) > tolerance else "cheap"
+    return DomainAssignment(
+        modules=list(modules), domain=domain,
+        quality_cheap=q_cheap, quality_exact=q_exact,
+    )
+
+
+def quantize_tree_where(
+    params, domain_of_path: Callable[[tuple], str]
+):
+    """Quantize leaves whose tree path maps to the 'cheap' domain.
+
+    2-D+ float leaves in cheap modules become QuantTensor; everything else
+    passes through.  Embedding/norm params should be routed 'exact' by the
+    caller's ``domain_of_path``.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        key = tuple(
+            getattr(p, "key", getattr(p, "idx", getattr(p, "name", str(p))))
+            for p in path
+        )
+        if (
+            isinstance(leaf, jax.Array)
+            and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+            and domain_of_path(key) == "cheap"
+        ):
+            out.append(QuantTensor.quantize(leaf))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_param_bytes(params) -> int:
+    """Total parameter bytes, QuantTensor-aware (for roofline accounting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantTensor)
+    ):
+        if isinstance(leaf, QuantTensor):
+            total += leaf.nbytes
+        elif hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

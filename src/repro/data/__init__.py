@@ -1,0 +1,2 @@
+"""Datasets (paper Sec. V-A1) and the LM token pipeline substrate."""
+from repro.data import datasets, pipeline  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distribution substrate: partition rules, compression, PP, elastic."""
+from repro.distributed import compression, elastic, partition, pipeline  # noqa: F401

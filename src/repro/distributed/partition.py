@@ -1,0 +1,179 @@
+"""Parameter partition rules per architecture family (DESIGN.md §6).
+
+Builds a PartitionSpec pytree matching the param tree of
+``repro.models.transformer.init_params``:
+
+  TP   ('model'): q heads / kv proj out-dim / ffn hidden / vocab / experts
+  FSDP (rules.fsdp, usually 'data'): the remaining large dim of every
+        matrix (ZeRO-3); None -> replicate over data
+  layer-stacked leaves get None prepended for the L dim
+
+Optimizer-state specs mirror param specs (same shapes); Quant8 moments
+shard their flat-block dims over fsdp only.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ShardRules
+from repro.training.optimizer import Quant8
+
+
+def fit_spec(spec: P, shape: tuple, axis_sizes: dict) -> P:
+    """Drop sharding on any dim the mesh does not evenly divide.
+
+    jit in_shardings require exact divisibility (uneven GSPMD padding is
+    not allowed for arguments), so specs are fitted against the actual
+    mesh: e.g. granite-moe's vocab 49155 over tp=16 falls back to
+    replicated-vocab, sharded-d_model.
+    """
+    fitted = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            fitted.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= axis_sizes.get(a, 1)
+        fitted.append(ax if size and shape[i] % size == 0 else None)
+    return P(*fitted)
+
+
+def fit_tree(specs, sds_tree, axis_sizes: dict):
+    """fit_spec over a whole (spec, ShapeDtypeStruct) tree pair."""
+    return jax.tree.map(
+        lambda spec, sd: fit_spec(spec, sd.shape, axis_sizes),
+        specs, sds_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _spec_for(path: tuple[str, ...], leaf, rules: ShardRules) -> P:
+    tp, fs = rules.tp, rules.fsdp
+    name = path[-1]
+    joined = "/".join(path)
+    nd = getattr(leaf, "ndim", 0)
+
+    def stacked(spec: P) -> P:
+        """Prepend None for the layer dim when the leaf is stacked."""
+        if path[0] in ("layers", "enc_layers") and nd == len(spec) + 1:
+            return P(None, *spec)
+        return spec
+
+    # embeddings
+    if path[0] in ("embed", "unembed"):
+        return P(tp, fs)
+    # norms, scalars, small per-head params
+    if nd <= 1 or name in ("scale", "b", "conv_b", "a_log", "dt_bias",
+                           "d_skip", "norm", "bias"):
+        if name == "b" and nd >= 1:
+            pass  # bias vectors fall through to replicate below
+        return stacked(P()) if nd else P()
+    # attention
+    if "attn" in joined or "xattn" in joined:
+        if name == "w":
+            if path[-2] == "wo":
+                return stacked(P(tp, fs))
+            return stacked(P(fs, tp))          # wq, wk, wv
+    # dense mlp
+    if name == "w":
+        if path[-2] == "wd":
+            return stacked(P(tp, fs))
+        if path[-2] in ("wg", "wu", "in_proj"):
+            return stacked(P(fs, tp))
+        if path[-2] == "out_proj":
+            return stacked(P(tp, fs))
+        if path[-2] == "router":
+            return stacked(P(fs, None))
+    # moe expert banks (E, D, F) / (E, F, D): EP over tp
+    if name in ("wg", "wu") and nd >= 3:
+        return stacked(P(tp, fs, None))
+    if name == "wd" and nd >= 3:
+        return stacked(P(tp, None, fs))
+    # ssm conv (k, C)
+    if name == "conv_w":
+        return stacked(P(None, tp))
+    return stacked(P(*([None] * nd)))
+
+
+def param_specs(cfg: ModelConfig, params, rules: ShardRules):
+    """PartitionSpec tree for a param pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        specs.append(_spec_for(keys, leaf, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(cfg: ModelConfig, p_specs, opt_sds, rules: ShardRules):
+    """Optimizer-state specs: moments mirror params; Quant8 moments shard
+    their flat (n_blocks, block) payload over fsdp."""
+    def mom(spec, sd):
+        if isinstance(sd, Quant8):
+            return Quant8(q=P(rules.fsdp, None), hi=P(rules.fsdp, None),
+                          shape=sd.shape)
+        return spec
+
+    is_leaf = lambda x: isinstance(x, (P, Quant8))
+    return {
+        "m": jax.tree.map(mom, p_specs, opt_sds["m"], is_leaf=is_leaf),
+        "v": jax.tree.map(mom, p_specs, opt_sds["v"], is_leaf=is_leaf),
+        "step": P(),
+    }
+
+
+def batch_specs(batch_shapes: dict, rules: ShardRules) -> dict:
+    """Batch dims shard over dp; everything else replicated."""
+    def spec(sds):
+        return P(rules.dp, *([None] * (len(sds.shape) - 1)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def serve_state_specs(cfg: ModelConfig, state_shapes: dict,
+                      rules: ShardRules, dp_size: int, tp_size: int,
+                      kv_len_tp: bool = False) -> dict:
+    """Serve-cache specs, divisibility-aware.
+
+    Caches are (L, B, H, cap, dh)-like: batch shards over dp when it
+    divides (decode_32k, B=128); at B=1 (long_500k) the cache length
+    shards over dp instead (sequence-sharded cache) and heads over tp
+    when divisible (mamba2 nh=80 over 16; hymba kv=5 replicates)."""
+
+    def spec(sds):
+        shape = sds.shape
+        if len(shape) == 0:
+            return P()
+        # leading dim is a layer stack -> dims shift by one
+        axes: list = [None] * len(shape)
+        b_dim = 1
+        if shape[b_dim] % dp_size == 0 and shape[b_dim] >= dp_size:
+            axes[b_dim] = rules.dp
+            cap_ok_axis = None
+        else:
+            # B too small: shard the longest remaining dim over dp
+            cand = max(range(2, len(shape)), key=lambda i: shape[i],
+                       default=None) if len(shape) > 2 else None
+            if cand is not None and shape[cand] % dp_size == 0:
+                axes[cand] = rules.dp
+        # heads (dim 2 in kv caches, 5-dim arrays) over tp when divisible
+        if rules.tp and len(shape) == 5 and axes[2] is None \
+                and shape[2] % tp_size == 0 and shape[2] >= tp_size:
+            axes[2] = rules.tp
+        # kv_len_tp: shard the cache-length dim over tp (decode variant —
+        # attention against the cache becomes a tp-partial softmax)
+        if kv_len_tp and rules.tp and len(shape) == 5 and axes[3] is None \
+                and rules.tp not in axes and shape[3] % tp_size == 0:
+            axes[3] = rules.tp
+        return P(*axes)
+
+    return jax.tree.map(spec, state_shapes)

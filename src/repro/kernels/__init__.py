@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
+
+  rbf.py              paper hot loop: tiled RBF / sech2 kernel matrix (MXU)
+  flash_attention.py  online-softmax attention, causal/sliding-window, GQA
+  ssd.py              Mamba2 SSD chunked scan
+  ops.py              jit'd wrappers w/ interpret-mode dispatch
+  ref.py              pure-jnp oracles (ground truth for tests)
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""Pallas TPU flash attention (online-softmax, causal + sliding window).
+
+Standard 3-axis grid (batch*head, q_blocks, kv_blocks) with the kv axis
+innermost and sequential; running max / denominator / accumulator live in
+VMEM scratch that persists across kv iterations.  GQA is handled in the
+index maps (kv head = q head // group) so K/V are never materialized per
+q-head.  Fully-masked kv blocks are skipped with ``pl.when`` — for sliding
+window attention this is what makes long-context cost O(S*W) instead of
+O(S^2).
+
+The S x S score matrix never exists in HBM: one (bq, bk) tile of logits
+lives in VMEM per iteration — this is the memory-roofline win over naive
+attention; FLOPs are unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, n_kv_blocks: int, kv_len: int,
+    causal: bool, window: int | None, q_offset: int, scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level skip: can any (qpos, kpos) in this tile be unmasked?
+    q_lo = qi * bq + q_offset
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    k_hi = k_lo + bk - 1
+    live = k_lo < kv_len        # padded kv blocks are fully dead
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, dh)
+        logits = jax.lax.dot_general(                     # (bq, bk) on MXU
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len    # kv padding
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        p = jnp.exp(logits - m_new) * mask                # zero masked lanes
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,            # (b, hq, sq, dh)
+    k: jnp.ndarray,            # (b, hkv, skv, dh)
+    v: jnp.ndarray,            # (b, hkv, skv, dh)
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / float(dh) ** 0.5
+
+    # flatten heads into the leading grid axis
+    qf = q.reshape(b * hq, sq, dh)
+    kf = k.reshape(b * hkv, skv, dh)
+    vf = v.reshape(b * hkv, skv, dh)
+
+    sq_p = -(-sq // bq) * bq
+    skv_p = -(-skv // bk) * bk
+    if sq_p != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sq_p - sq), (0, 0)))
+    if skv_p != skv:
+        # padded kv keys sit at positions >= skv; causal masking with
+        # q_offset < skv keeps them dead as long as padding >= real span.
+        kf = jnp.pad(kf, ((0, 0), (0, skv_p - skv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skv_p - skv), (0, 0)))
+
+    n_kv_blocks = skv_p // bk
+    grid = (b * hq, sq_p // bq, n_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq, bk=bk, n_kv_blocks=n_kv_blocks, kv_len=skv,
+        causal=causal, window=window, q_offset=q_offset, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, dh),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :sq, :].reshape(b, hq, sq, dh)

@@ -1,0 +1,46 @@
+"""Public jit'd entry points for the Pallas kernels, with automatic
+interpret-mode dispatch (CPU containers run the kernel bodies in the
+Pallas interpreter; on TPU the same calls compile to Mosaic).
+
+Each op has a ``ref`` twin in repro.kernels.ref used for validation and
+as the default in dry-run lowering (DESIGN.md: roofline terms are derived
+from the jnp path so HLO cost analysis reflects the algorithm, while the
+Pallas path is validated for numerics separately).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref  # noqa: F401  (re-exported oracle)
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rbf import kernel_matrix_pallas as _rbf
+from repro.kernels.ssd import ssd_scan_pallas as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rbf_matrix(x, z, gamma, kind: str = "rbf", interpret: bool | None = None,
+               **kw):
+    """Tiled RBF / sech2 kernel matrix (paper hot loop)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rbf(x, z, gamma, kind=kind, interpret=interpret, **kw)
+
+
+def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
+                    interpret: bool | None = None, **kw):
+    """Online-softmax attention; GQA via index maps; O(S*W) for windows."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                  interpret=interpret, **kw)
+
+
+def ssd_scan(x, a, bmat, cmat, chunk: int = 128,
+             interpret: bool | None = None):
+    """Chunked Mamba2 SSD scan -> (y, final_state)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd(x, a, bmat, cmat, chunk=chunk, interpret=interpret)

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the semantic ground truth: simple, obviously-correct
+implementations used by tests (assert_allclose vs the kernels in
+interpret mode) and as the fallback compute path on platforms without
+Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RBF kernel matrix (the paper's hot loop)
+# ---------------------------------------------------------------------------
+
+
+def rbf_matrix(x: jnp.ndarray, z: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """K[i, j] = exp(-gamma * ||x_i - z_j||^2);  x: (n, d), z: (m, d)."""
+    d2 = (
+        jnp.sum(x * x, -1)[:, None]
+        + jnp.sum(z * z, -1)[None, :]
+        - 2.0 * (x @ z.T)
+    )
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def sech2_matrix(
+    x: jnp.ndarray, z: jnp.ndarray, gamma: float,
+    n_slope: float = 1.38, v_t: float = 0.02585, v_scale: float = 0.5,
+) -> jnp.ndarray:
+    """Hardware separable kernel (Eq. 6): product of per-dim sech2 cells."""
+    gamma0 = 1.0 / (4.0 * n_slope**2 * v_t**2) * v_scale**2
+    s = jnp.sqrt(gamma / gamma0)
+    dv = v_scale * s * (x[:, None, :] - z[None, :, :]) / (n_slope * v_t)
+    cell = 4.0 / ((1.0 + jnp.exp(-dv)) * (1.0 + jnp.exp(dv)))
+    return jnp.prod(cell, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jnp.ndarray,          # (b, hq, sq, dh)
+    k: jnp.ndarray,          # (b, hkv, skv, dh)
+    v: jnp.ndarray,          # (b, hkv, skv, dh)
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Plain GQA attention with optional causal/sliding-window masking.
+
+    ``q_offset`` positions the query block within the kv sequence (for
+    decode: sq == 1, q_offset == cache length - 1).
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, dh)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) / jnp.sqrt(float(dh))
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v)
+    return out.reshape(b, hq, sq, dh)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality), chunk-free sequential reference
+# ---------------------------------------------------------------------------
+
+
+def ssd(
+    x: jnp.ndarray,      # (b, s, h, dh)     inputs (already gated/projected)
+    a: jnp.ndarray,      # (b, s, h)         log-decay per step (a = -softplus)
+    bmat: jnp.ndarray,   # (b, s, g, ds)     input->state projection ("B")
+    cmat: jnp.ndarray,   # (b, s, g, ds)     state->output projection ("C")
+    init_state: jnp.ndarray | None = None,  # (b, h, dh, ds)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential scan reference of SSD:  S_t = exp(a_t) S_{t-1} + x_t B_t^T.
+
+    Heads h are grouped over state groups g (h % g == 0), mirroring GQA.
+    Returns (y, final_state) with y: (b, s, h, dh).
+    """
+    b, s, h, dh = x.shape
+    g = bmat.shape[2]
+    rep = h // g
+    bm = jnp.repeat(bmat, rep, axis=2)  # (b, s, h, ds)
+    cm = jnp.repeat(cmat, rep, axis=2)
+    ds = bm.shape[-1]
+    s0 = init_state if init_state is not None else jnp.zeros((b, h, dh, ds), x.dtype)
+
+    def step(state, t):
+        xt, at, bt, ct = t
+        state = jnp.exp(at)[..., None, None] * state + xt[..., None] * bt[:, :, None, :]
+        yt = jnp.einsum("bhds,bhs->bhd", state, ct)
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), final

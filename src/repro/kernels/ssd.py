@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD decomposition (Dao & Gu, 2024) splits the linear recurrence
+
+    S_t = exp(a_t) S_{t-1} + x_t B_t^T,      y_t = S_t C_t
+
+into chunks of length L: within a chunk the output is a *masked matmul*
+(quadratic in L — MXU work), and across chunks only the (dh x ds) state is
+carried.  This is the TPU-native form: the sequential dependency collapses
+from S steps to S/L steps, and each chunk is dense matmul work.
+
+Grid: (batch*heads, n_chunks), chunk axis sequential; the running state
+lives in VMEM scratch persisted across chunk iterations (re-initialised at
+chunk 0).  The final state is emitted for serving (prefill -> decode
+handoff).
+
+Within a chunk (cum = inclusive cumsum of a):
+    y_intra = ((C B^T) * decay) @ x        decay[t,j] = exp(cum_t - cum_j), j<=t
+    y_inter = (C * exp(cum)) @ S_prev^T
+    S_new   = exp(cum_L) S_prev + x^T @ (B * exp(cum_L - cum))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref, state_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (L, dh)
+    a = a_ref[0].astype(jnp.float32)          # (L,)
+    bmat = b_ref[0].astype(jnp.float32)       # (L, ds)
+    cmat = c_ref[0].astype(jnp.float32)       # (L, ds)
+
+    cum = jnp.cumsum(a)                        # inclusive
+    total = cum[-1]
+
+    # --- intra-chunk (quadratic, MXU) ---
+    g = jax.lax.dot_general(                   # C @ B^T : (L, L)
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = j_idx <= t_idx
+    logdecay = cum[:, None] - cum[None, :]     # cum_t - cum_j
+    decay = jnp.where(causal, jnp.exp(jnp.minimum(logdecay, 0.0)), 0.0)
+    y_intra = jax.lax.dot(
+        (g * decay).astype(jnp.float32), x, preferred_element_type=jnp.float32
+    )                                          # (L, dh)
+
+    # --- inter-chunk (carried state) ---
+    s_prev = state_scr[...]                    # (dh, ds)
+    y_inter = jax.lax.dot_general(             # (L, dh)
+        cmat * jnp.exp(cum)[:, None], s_prev,
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # --- state update ---
+    w = jnp.exp(total - cum)[:, None]          # (L, 1)
+    s_new = jnp.exp(total) * s_prev + jax.lax.dot_general(
+        x, bmat * w, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (dh, ds)
+    state_scr[...] = s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,       # (bh, s, dh)  — batch*heads flattened
+    a: jnp.ndarray,       # (bh, s)
+    bmat: jnp.ndarray,    # (bh, s, ds)  — already group-expanded to heads
+    cmat: jnp.ndarray,    # (bh, s, ds)
+    chunk: int = 128,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (bh, s, dh), final_state: (bh, dh, ds))."""
+    bh, s, dh = x.shape
+    ds = bmat.shape[-1]
+    assert s % chunk == 0, "pad sequence to a chunk multiple upstream"
+    grid = (bh, s // chunk)
+
+    y, sfin = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dh, ds), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), x.dtype),
+            jax.ShapeDtypeStruct((bh, dh, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, a, bmat, cmat)
+    return y, sfin

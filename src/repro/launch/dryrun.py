@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * build the step fn + ShapeDtypeStruct inputs + sharding specs
+    (repro.launch.steps),
+  * jit(...).lower(...).compile() under the production mesh,
+  * record memory_analysis(), cost_analysis(), and the collective
+    schedule parsed from the post-SPMD optimized HLO,
+  * dump one JSON per cell into --out (default runs/dryrun/).
+
+This is deliverable (e): compile failures (sharding mismatch, OOM at
+compile, unsupported collective) are bugs.  benchmarks/roofline.py
+consumes the JSONs for deliverable (g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in filter(None, dims.split(",")):
+        n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-opcode result-bytes totals from the partitioned HLO.
+
+    Shapes in the post-SPMD module are per-partition, so the totals are
+    per-device traffic proxies; roofline.py applies the ring factors
+    (all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n, all-to-all
+    (n-1)/n) using each op's replica-group size, parsed here too.
+    """
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, op = m.groups()
+        if tuple_body:  # tuple result (e.g. all-reduce of N operands)
+            nbytes = sum(_shape_bytes(t, d)
+                         for t, d in _SHAPE_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        # replica group size: iota format [g,s]<=[n] or explicit {{...}}
+        tail = hlo_text[m.end():m.end() + 400]
+        gsize = None
+        mg = re.search(r"replica_groups=\[(\d+),(\d+)\]", tail)
+        if mg:
+            gsize = int(mg.group(2))
+        else:
+            mg = re.search(r"replica_groups=\{\{([0-9, ]*)\}", tail)
+            if mg:
+                gsize = len(mg.group(1).split(","))
+        rec = out.setdefault(op, {"count": 0, "bytes": 0, "by_group": {}})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        key = str(gsize or "?")
+        rec["by_group"][key] = rec["by_group"].get(key, 0) + nbytes
+    return out
+
+
+def block_cost(arch: str, shape_name: str, multi_pod: bool, mesh,
+               variant: str = "") -> dict:
+    """Per-layer marginal cost, for scan trip-count correction.
+
+    XLA's HloCostAnalysis visits while-loop bodies ONCE, so the full
+    module undercounts the layer scan by ~L x.  We lower one layer block
+    standalone (train cells: fwd+bwd under the same remat policy) twice —
+    scanned (matching what the full module counted) and fully unrolled
+    (true per-layer cost) — and roofline.py reconstructs:
+
+        total = full_raw - body_scanned + L * body_unrolled
+    """
+    import dataclasses as dc
+
+    from repro.models import transformer as tfm
+    from repro.models.common import ShardRules
+    from repro.distributed import partition
+    import jax.numpy as jnp
+
+    cell = steps_mod.build_cell(arch, shape_name, multi_pod, variant)
+    cfg, rules, kind = cell["cfg"], cell["rules"], cell["kind"]
+    if kind == "decode":
+        return {}  # decode layers are unrolled in production: already exact
+
+    sh = {"train_4k": (4096, 256), "prefill_32k": (32768, 32)}[shape_name]
+    s, b = sh
+    if cfg.family == "vlm":
+        s += cfg.n_patches
+    if cfg.family == "audio":
+        s = s // cfg.dec_seq_divisor
+    dt = cfg.compute_dtype
+
+    params_sds = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    lp_sds = jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(sd.shape[1:], sd.dtype),
+        params_sds["layers"])
+    axis_sizes = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                  else {"data": 16, "model": 16})
+    lp_specs = partition.fit_tree(
+        jax.tree.map(lambda sp: jax.sharding.PartitionSpec(*sp[1:]),
+                     partition.param_specs(cfg, params_sds, rules)["layers"],
+                     is_leaf=lambda x: isinstance(
+                         x, jax.sharding.PartitionSpec)),
+        lp_sds, axis_sizes)
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    x_spec = jax.sharding.PartitionSpec(rules.dp, None, None)
+
+    out = {"n_layers": cfg.n_layers, "n_enc_layers": cfg.n_enc_layers}
+    for tag, unroll in (("scanned", False), ("unrolled", True)):
+        c = dc.replace(cfg, scan_unroll=unroll)
+        pos = jnp.arange(s)
+
+        def raw_block(lp, x):
+            y, _ = tfm.block_forward(c, rules, lp, x, pos)
+            return y
+
+        # same remat policy as the production scan body, so the correction
+        # counts the backward recompute the real module pays for.
+        rematted = tfm._remat(c, raw_block)
+
+        def block_fn(lp, x):
+            return jnp.sum(rematted(lp, x).astype(jnp.float32))
+
+        fn = jax.grad(block_fn, argnums=(0, 1)) if kind == "train" \
+            else block_fn
+        shardings = jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec), (lp_specs, x_spec),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(fn, in_shardings=shardings).lower(
+                lp_sds, x_sds).compile()
+        ca = compiled.cost_analysis() or {}
+        out[tag] = {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "collectives": parse_collectives(compiled.as_text()),
+        }
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "", save_hlo: str | None = None) -> dict:
+    t0 = time.time()
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    cell = steps_mod.build_cell(arch, shape_name, multi_pod, variant)
+
+    shardings = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), cell["in_specs"],
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(cell["fn"], in_shardings=shardings).lower(
+            *cell["args_sds"])
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    try:
+        block = block_cost(arch, shape_name, multi_pod, mesh, variant)
+    except Exception as e:  # noqa: BLE001 — block correction is best-effort
+        block = {"error": repr(e)}
+
+    cfg = cell["cfg"]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "variant": variant or "baseline",
+        "kind": cell["kind"],
+        "compile_s": round(time.time() - t0, 1),
+        "chips": 512 if multi_pod else 256,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "flops_per_device": ca.get("flops", 0.0),
+        "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "collectives": colls,
+        "block_cost": block,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full assigned grid")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        cells = [(a, s) for a in configs.ARCHS for s in configs.shapes_for(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+            if args.variant:
+                tag += "_" + re.sub(r"[^A-Za-z0-9]+", "-", args.variant)
+            try:
+                rec = run_cell(arch, shape, mp, args.variant, args.save_hlo)
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                coll_b = sum(v["bytes"] for v in rec["collectives"].values())
+                print(f"OK   {tag:60s} compile={rec['compile_s']:6.1f}s "
+                      f"flops/dev={rec['flops_per_device']:.3e} "
+                      f"coll_bytes/dev={coll_b:.3e} "
+                      f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — report, continue grid
+                failures.append((tag, repr(e)))
+                print(f"FAIL {tag}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(t for t, _ in failures))
+    print("all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

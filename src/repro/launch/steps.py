@@ -1,0 +1,166 @@
+"""Step builders + sharding spec trees for the dry-run and drivers.
+
+For each cell (arch x shape) this produces:
+  fn            the jittable step (train_step / prefill_step / serve_step)
+  args_sds      ShapeDtypeStruct pytree of its inputs
+  in_specs      PartitionSpec pytree matching args_sds
+  out_specs     PartitionSpec pytree (or None -> let SPMD choose)
+
+Variants (the §Perf hillclimb knobs) are config/rule transformations
+applied before building: remat policy, fsdp on/off, 8-bit optimizer,
+int8 weights for decode, scan-attention block size, MoE capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs import base as cfg_base
+from repro.distributed import partition
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, ShardRules
+from repro.serving import engine
+from repro.training import optimizer as opt_mod
+from repro.training import step as step_mod
+
+
+def apply_variant(cfg: ModelConfig, rules: ShardRules, opt_cfg,
+                  variant: str):
+    """Parse 'k=v,k=v' variant strings into config/rule overrides."""
+    quant_weights = False
+    extras = {"castbf16": False, "kvtp": False}
+    for item in filter(None, (variant or "").split(",")):
+        k, _, v = item.partition("=")
+        if k == "remat":
+            cfg = dataclasses.replace(cfg, remat=v)
+        elif k == "fsdp":
+            rules = dataclasses.replace(
+                rules, fsdp=None if v in ("none", "off") else v)
+        elif k == "sp":
+            rules = dataclasses.replace(
+                rules, sp=None if v in ("none", "off") else v)
+        elif k == "opt8":
+            opt_cfg = dataclasses.replace(opt_cfg, quantize_state=v == "on")
+        elif k == "attn_block":
+            cfg = dataclasses.replace(cfg, attn_block=int(v))
+        elif k == "cap":
+            cfg = dataclasses.replace(cfg, capacity_factor=float(v))
+        elif k == "wq":
+            quant_weights = v == "int8"
+        elif k == "dtype":
+            cfg = dataclasses.replace(cfg, dtype=v)
+        elif k == "castbf16":
+            extras["castbf16"] = v == "on"
+        elif k == "kvtp":
+            extras["kvtp"] = v == "on"
+        elif k == "moegroups":
+            cfg = dataclasses.replace(cfg, moe_groups=int(v))
+        elif k == "moe2d":
+            cfg = dataclasses.replace(cfg, moe_two_d=v == "on")
+        elif k == "kv":
+            cfg = dataclasses.replace(cfg, kv_dtype=v)
+        elif k == "unroll":
+            cfg = dataclasses.replace(cfg, scan_unroll=v == "on")
+        elif k == "scan_attn":
+            cfg = dataclasses.replace(cfg, use_scan_attention=v == "on")
+        else:
+            raise ValueError(f"unknown variant key {k!r}")
+    return cfg, rules, opt_cfg, quant_weights, extras
+
+
+def _sds_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if not isinstance(x, jax.ShapeDtypeStruct) else x, tree)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = ""):
+    """Returns dict(fn, args_sds, in_specs, kind, cfg)."""
+    mod = configs.get(arch)
+    cfg = mod.make_config()
+    rules = ShardRules(dp=("pod", "data") if multi_pod else ("data",))
+    opt_cfg = opt_mod.AdamWConfig()
+    cfg, rules, opt_cfg, quant_w, extras = apply_variant(
+        cfg, rules, opt_cfg, variant)
+
+    sh = cfg_base.SHAPES[shape_name]
+    kind = sh["kind"]
+    specs_in = cfg_base.input_specs(cfg, shape_name)
+
+    axis_sizes = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+                  else {"data": 16, "model": 16})
+
+    # parameter skeleton via eval_shape (no allocation)
+    params_sds = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+    if kind != "train":
+        # serving runs in compute dtype (bf16) and optionally int8 weights
+        def cast(sd):
+            if sd.dtype == jnp.float32 and len(sd.shape) >= 2:
+                return jax.ShapeDtypeStruct(
+                    sd.shape, jnp.int8 if quant_w else cfg.compute_dtype)
+            return sd
+        serve_params_sds = jax.tree.map(cast, params_sds)
+    p_specs = partition.fit_tree(
+        partition.param_specs(cfg, params_sds, rules), params_sds, axis_sizes)
+
+    if kind == "train":
+        opt_sds = jax.eval_shape(
+            lambda: opt_mod.init_state(opt_cfg, params_sds))
+        state_sds = {"params": params_sds, "opt": opt_sds,
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_specs = {
+            "params": p_specs,
+            "opt": partition.fit_tree(
+                partition.opt_specs(cfg, p_specs, opt_sds, rules),
+                opt_sds, axis_sizes),
+            "step": P(),
+        }
+        batch_sds = specs_in["batch"]
+        batch_specs = partition.fit_tree(
+            partition.batch_specs(batch_sds, rules), batch_sds, axis_sizes)
+        fn = step_mod.make_train_step(
+            cfg, rules, opt_cfg, cast_params_bf16=extras["castbf16"])
+        return dict(fn=fn, args_sds=(state_sds, batch_sds),
+                    in_specs=(state_specs, batch_specs), kind=kind,
+                    cfg=cfg, rules=rules)
+
+    if kind == "prefill":
+        batch_sds = specs_in["batch"]
+        batch_specs = partition.fit_tree(
+            partition.batch_specs(batch_sds, rules), batch_sds, axis_sizes)
+        cap = sh["seq_len"] + (cfg.n_patches if cfg.family == "vlm" else 0)
+
+        if cfg.family == "audio":
+            def fn(params, batch):
+                return engine.prefill_audio(cfg, params, batch, cap, rules)
+        else:
+            def fn(params, batch):
+                return engine.prefill(cfg, params, batch, cap, rules)
+        return dict(fn=fn, args_sds=(serve_params_sds, batch_sds),
+                    in_specs=(p_specs, batch_specs), kind=kind,
+                    cfg=cfg, rules=rules)
+
+    # decode
+    state_sds = specs_in["state"]
+    tok_sds = specs_in["tokens"]
+    dp_size = 32 if multi_pod else 16
+    st_specs = partition.fit_tree(
+        partition.serve_state_specs(cfg, state_sds, rules,
+                                    dp_size=dp_size, tp_size=16,
+                                    kv_len_tp=extras["kvtp"]),
+        state_sds, axis_sizes)
+    b = tok_sds.shape[0]
+    tok_spec = P(rules.dp, None) if b % dp_size == 0 else P(None, None)
+
+    def fn(params, state, tokens):
+        return engine.decode_step(cfg, params, state, tokens, rules)
+
+    return dict(fn=fn, args_sds=(serve_params_sds, state_sds, tok_sds),
+                in_specs=(p_specs, st_specs, tok_spec), kind=kind,
+                cfg=cfg, rules=rules)

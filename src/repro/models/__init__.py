@@ -1,0 +1,2 @@
+"""LM substrate: attention, MLP/MoE, SSM, and per-family model assembly."""
+from repro.models import attention, common, mlp, ssm, transformer  # noqa: F401

@@ -1,0 +1,185 @@
+"""Attention layer: GQA + RoPE + (optional) sliding window, three paths.
+
+* ``attend_full``  — reference softmax(QK^T)V; fine for short sequences.
+* ``attend_scan``  — flash-style online softmax over KV blocks via
+  ``lax.scan`` in pure JAX: the S x S score matrix never materializes in
+  HBM (one (sq_blk, bk) tile at a time), which is what keeps the 32k
+  prefill memory-roofline sane in the dry-run.  Mirrors the Pallas kernel
+  (repro.kernels.flash_attention) numerically; the Pallas path is used on
+  real TPUs, this path lowers everywhere.
+* ``attend_decode`` — 1 query token against a KV cache (ring buffer for
+  SWA layers), no softmax trick needed ((1, S) logits are tiny).
+
+All paths share the GQA grouping: q heads (b, hq, s, dh) fold to
+(b, hkv, group, s, dh) so K/V are never repeated in memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_apply, dense_init, rope
+
+NEG_INF = -1e30
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale_o = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * dh, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, cfg.d_model,
+                         scale=scale_o, bias=cfg.out_bias),
+    }
+
+
+def qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray):
+    """x: (b, s, d) -> q (b, hq, s, dh), k/v (b, hkv, s, dh), rope applied."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = dense_apply(p["wq"], x).reshape(b, s, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    k = dense_apply(p["wk"], x).reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    v = dense_apply(p["wv"], x).reshape(b, s, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(q, hkv):
+    b, hq, s, dh = q.shape
+    return q.reshape(b, hkv, hq // hkv, s, dh)
+
+
+def attend_full(q, k, v, causal: bool = True, window=None, q_offset: int = 0):
+    """(b, hq, sq, dh) x (b, hkv, skv, dh) -> (b, hq, sq, dh)."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    qg = _group(q, hkv)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32)
+    logits /= float(dh) ** 0.5
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v)
+    return out.reshape(b, hq, sq, dh)
+
+
+def attend_scan(q, k, v, causal: bool = True, window=None,
+                block: int = 1024, q_offset: int = 0, unroll: bool = False):
+    """Online-softmax over KV blocks; peak memory O(sq * block) per head."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    if skv % block:
+        pad = block - skv % block
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nb = k.shape[2] // block
+    qg = _group(q, hkv).astype(jnp.float32) / float(dh) ** 0.5
+    kb = k.reshape(b, hkv, nb, block, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nb, block, dh).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ki, kblk, vblk = inp
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kblk.astype(jnp.float32))
+        kpos = ki * block + jnp.arange(block)[None, :]
+        mask = kpos < skv
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new) * mask[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    group = hq // hkv
+    m0 = jnp.full((b, hkv, group, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    acc0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (jnp.arange(nb), kb, vb),
+                                  unroll=nb if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def attend(cfg: ModelConfig, q, k, v, causal=True, window=None, q_offset=0):
+    if cfg.use_scan_attention and k.shape[2] > cfg.attn_block:
+        return attend_scan(q, k, v, causal, window, cfg.attn_block, q_offset,
+                           unroll=cfg.scan_unroll)
+    return attend_full(q, k, v, causal, window, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache (full or ring-buffer/SWA)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """k/v: (b, hkv, cap, dh).  For SWA layers cap == window (ring)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    ring: bool
+
+    @classmethod
+    def create(cls, b, hkv, cap, dh, dtype, ring=False):
+        return cls(
+            k=jnp.zeros((b, hkv, cap, dh), dtype),
+            v=jnp.zeros((b, hkv, cap, dh), dtype),
+            ring=ring,
+        )
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Insert one token's k/v at absolute position ``pos`` (ring-aware).
+    int8 caches (kv_dtype override) quantize with a fixed scale — the
+    dry-run dataflow stand-in for per-head scaled KV quantization."""
+    if cache.k.dtype != k_new.dtype:
+        k_new = (k_new * 16.0).astype(cache.k.dtype)
+        v_new = (v_new * 16.0).astype(cache.v.dtype)
+    cap = cache.k.shape[2]
+    slot = (pos % cap) if cache.ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=2)
+    return cache._replace(k=k, v=v)
+
+
+def attend_decode(cfg: ModelConfig, q, cache: KVCache, pos, window=None):
+    """q: (b, hq, 1, dh) vs cache; ``pos`` is the current absolute position."""
+    b, hq, _, dh = q.shape
+    cap = cache.k.shape[2]
+    hkv = cache.k.shape[1]
+    qg = _group(q, hkv).astype(jnp.float32) / float(dh) ** 0.5
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, cache.k.astype(jnp.float32))
+    slots = jnp.arange(cap)
+    if cache.ring:
+        # slot holds absolute position p iff p = latest write to that slot;
+        # valid when the slot's position is within (pos-window, pos].
+        age = (pos % cap - slots) % cap            # 0 == newest
+        valid = (age <= jnp.minimum(pos, cap - 1))
+        if window is not None:
+            valid &= age < window
+    else:
+        valid = slots <= pos
+        if window is not None:
+            valid &= slots > pos - window
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, cache.v.astype(jnp.float32))
+    return out.reshape(b, hq, 1, dh).astype(q.dtype)

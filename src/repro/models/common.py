@@ -1,0 +1,230 @@
+"""Shared model substrate: config, norms, rope, init, sharding helpers.
+
+One ``ModelConfig`` covers every assigned architecture family (dense /
+moe / ssm / hybrid / vlm / audio-enc-dec); family-specific fields are
+simply unused elsewhere.  All shapes follow the assignment table
+verbatim (src/repro/configs/<id>.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                # 0 -> d_model // n_heads
+
+    # attention details
+    qkv_bias: bool = False
+    out_bias: bool = False
+    mlp_bias: bool = False
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None           # sliding-window size (SWA layers)
+    global_layers: Sequence[int] = ()      # full-attention layers in SWA stacks
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    act: str = "silu"                      # silu | gelu
+    parallel_block: bool = False           # attn + mlp in parallel (command-r)
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_two_d: bool = False     # shard MoE dispatch capacity over dp too
+    moe_groups: int = 1         # GShard-style per-group (per-dp-shard) routing
+    kv_dtype: str = ""          # serve-cache dtype override (e.g. 'int8')
+
+    # SSM (mamba2 / hybrid)
+    ssm_state: int = 0
+    ssm_heads: int = 0                     # 0 -> derived from d_inner/ssm_head_dim
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_width: int = 4
+
+    # enc-dec (whisper)
+    n_enc_layers: int = 0                  # 0 -> decoder-only
+    enc_seq_divisor: int = 2               # stub conv stride: frames = S / 2
+    dec_seq_divisor: int = 8               # decoder tokens = S / 8
+
+    # vlm stub frontend
+    n_patches: int = 0                     # prepended precomputed patch embeds
+
+    # training-time details
+    dtype: str = "bfloat16"
+    remat: str = "full"                    # none | full | dots
+    attn_block: int = 1024                 # kv block for scan-attention
+    use_scan_attention: bool = True        # online-softmax lax.scan attention
+    scan_unroll: bool = False              # unroll scans (analysis lowering)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or (self.d_inner // self.ssm_head_dim)
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline accounting)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        Hq, Hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = D * Hq * dh + 2 * D * Hkv * dh + Hq * dh * D
+        mlp = 3 * D * F
+        if self.family == "moe":
+            mlp = self.n_experts * 3 * D * self.d_ff + D * self.n_experts
+            mlp += self.n_shared_experts * 3 * D * self.d_ff
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di, ds, g = self.d_inner, self.ssm_state, self.ssm_groups
+            nh = self.n_ssm_heads
+            ssm = D * (2 * di + 2 * g * ds + nh) + di * D + 3 * nh
+        blocks = {
+            "dense": attn + mlp, "vlm": attn + mlp, "audio": attn + mlp,
+            "moe": attn + mlp,
+            "ssm": ssm,
+            "hybrid": attn + mlp + ssm,
+        }[self.family]
+        total = L * blocks + 2 * V * D  # embed + unembed
+        if self.family == "audio":  # encoder stack + cross-attn in decoder
+            total += self.n_enc_layers * (attn + mlp) + L * attn
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active-per-token params (MoE: routed top-k + shared only)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, V, L = self.d_model, self.vocab_size, self.n_layers
+        Hq, Hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = D * Hq * dh + 2 * D * Hkv * dh + Hq * dh * D
+        mlp = (self.top_k + self.n_shared_experts) * 3 * D * self.d_ff \
+            + D * self.n_experts
+        return int(L * (attn + mlp) + 2 * V * D)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRules:
+    """Axis names for the logical parallel dims (DESIGN.md §6).
+
+    dp: data-parallel mesh axes (('pod','data') multi-pod, ('data',) single)
+    tp: tensor-parallel axis   ('model')
+    fsdp: axis params/optimizer are additionally sharded over (ZeRO-3); None
+          replicates params over dp.
+    sp: sequence-parallel axis for long-context activations; None disables.
+    """
+
+    dp: tuple = ("data",)
+    tp: Optional[str] = "model"
+    fsdp: Optional[str] = "data"
+    sp: Optional[str] = None
+
+    def act(self, *rest) -> P:
+        """Activation spec: batch over dp, then given axes."""
+        return P(self.dp, *rest)
+
+
+def shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm(x, scale, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale
+    if bias is not None:
+        out = out + bias
+    return out.astype(x.dtype)
+
+
+def norm_apply(cfg: ModelConfig, x, p):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p.get("bias"))
+
+
+def norm_init(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def activation(cfg: ModelConfig, x):
+    return jax.nn.silu(x) if cfg.act == "silu" else jax.nn.gelu(x)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding; x: (..., s, dh), positions: (s,) or (b, s)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head dims: x is (b, h, s, dh); ang (s, half) or (b,s,half)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float = 0.02,
+               bias: bool = False, dtype=jnp.float32):
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    w = p["w"]
+    y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block — projections, depthwise causal conv, chunked scan.
+
+The sequence mixer follows the SSD (state-space duality) formulation:
+within chunks the recurrence is evaluated as masked matmuls (MXU work),
+across chunks only the (heads, dh, ds) state is carried — see
+repro/kernels/ssd.py for the Pallas version and the math.  Here we keep a
+pure-jnp chunked implementation (`ssd_chunked`) used for lowering (the
+dry-run and CPU tests) — identical math, compact HLO (lax.scan over
+chunks), representative FLOPs.  Serving uses the O(1) recurrent step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_apply, dense_init, rmsnorm
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, nh = cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * g * ds
+    return {
+        # fused in_proj: [z (di), x (di), B (g*ds), C (g*ds), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * g * ds + nh),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d,
+                               scale=0.02 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+class SSMState(NamedTuple):
+    """Recurrent state for decode: ssm (b, nh, dh, ds), conv (b, w-1, conv_dim)."""
+    ssm: jnp.ndarray
+    conv: jnp.ndarray
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, b: int, dtype=jnp.float32):
+        nh, dh, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * ds
+        return cls(
+            ssm=jnp.zeros((b, nh, dh, ds), jnp.float32),
+            conv=jnp.zeros((b, cfg.conv_width - 1, conv_dim), dtype),
+        )
+
+
+def _split(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, g, ds, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * ds]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _conv_causal(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv over (b, s, c) with kernel (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, a, bmat, cmat, chunk: int = 128, init_state=None,
+                unroll: bool = False):
+    """Chunked SSD, pure jnp (same math as kernels/ssd.py).
+
+    x: (b, s, nh, dh), a: (b, s, nh), bmat/cmat: (b, s, g, ds).
+    Returns (y, final_state (b, nh, dh, ds)).
+    """
+    b, s, nh, dh = x.shape
+    g, ds = bmat.shape[2], bmat.shape[3]
+    rep = nh // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    # chunked views: (nc, b, L, ...)
+    xc = x.reshape(b, nc, chunk, nh, dh).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(b, nc, chunk, nh).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nc, chunk, g, ds).transpose(1, 0, 2, 3, 4)
+    cc = cmat.reshape(b, nc, chunk, g, ds).transpose(1, 0, 2, 3, 4)
+
+    s0 = init_state if init_state is not None else \
+        jnp.zeros((b, nh, dh, ds), jnp.float32)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        xk, ak, bk, ck = inp          # (b,L,nh,dh) (b,L,nh) (b,L,g,ds) (b,L,g,ds)
+        bk = jnp.repeat(bk, rep, axis=2)   # (b, L, nh, ds)
+        ck = jnp.repeat(ck, rep, axis=2)
+        cum = jnp.cumsum(ak, axis=1)       # (b, L, nh) inclusive
+        total = cum[:, -1]                 # (b, nh)
+        gmat = jnp.einsum("blhs,bjhs->bhlj", ck, bk)           # (b,nh,L,L)
+        logdec = cum.transpose(0, 2, 1)[:, :, :, None] - \
+            cum.transpose(0, 2, 1)[:, :, None, :]              # cum_l - cum_j
+        dec = jnp.where(causal[None, None], jnp.exp(jnp.minimum(logdec, 0.0)), 0.0)
+        y_intra = jnp.einsum("bhlj,bjhd->blhd", gmat * dec, xk)
+        y_inter = jnp.einsum("blhs,bhds,blh->blhd", ck, state, jnp.exp(cum))
+        w = jnp.exp(total[:, None, :] - cum)                   # (b, L, nh)
+        s_new = jnp.exp(total)[:, :, None, None] * state + \
+            jnp.einsum("blhd,blhs,blh->bhds", xk, bk, w)
+        return s_new, (y_intra + y_inter).astype(x.dtype)
+
+    final, ys = jax.lax.scan(step, s0, (xc, ac, bc, cc),
+                             unroll=nc if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, sp, nh, dh)[:, :s]
+    return y, final
+
+
+def apply_seq(cfg: ModelConfig, p: dict, x: jnp.ndarray,
+              init_state=None, chunk: int | None = None):
+    """Full-sequence Mamba2 mixer. x: (b, s, d) -> (y, SSMState)."""
+    b, s, _ = x.shape
+    nh, dh, ds, g = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xbc, dt = _split(cfg, dense_apply(p["in_proj"], x))
+    conv_tail = xbc[:, -(cfg.conv_width - 1):, :]
+    xbc = _conv_causal(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :cfg.d_inner].reshape(b, s, nh, dh)
+    bmat = xbc[..., cfg.d_inner:cfg.d_inner + g * ds].reshape(b, s, g, ds)
+    cmat = xbc[..., cfg.d_inner + g * ds:].reshape(b, s, g, ds)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (b, s, nh)
+    a = -jnp.exp(p["a_log"])[None, None, :] * dt                     # log decay
+    xin = xs.astype(jnp.float32) * dt[..., None]
+    y, s_fin = ssd_chunked(xin, a, bmat.astype(jnp.float32),
+                           cmat.astype(jnp.float32),
+                           chunk=chunk or 128,
+                           init_state=init_state.ssm if init_state else None,
+                           unroll=cfg.scan_unroll)
+    y = y + xin * p["d_skip"][None, None, :, None]                   # D skip
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    state = SSMState(ssm=s_fin, conv=conv_tail)
+    return dense_apply(p["out_proj"], y), state
+
+
+def apply_step(cfg: ModelConfig, p: dict, x: jnp.ndarray, state: SSMState):
+    """O(1) decode step. x: (b, 1, d) -> (y (b, 1, d), new state)."""
+    b = x.shape[0]
+    nh, dh, ds, g = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xbc, dt = _split(cfg, dense_apply(p["in_proj"], x))           # (b,1,*)
+    window = jnp.concatenate([state.conv, xbc], axis=1)              # (b, w, c)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    xs = conv_out[..., :cfg.d_inner].reshape(b, nh, dh)
+    bmat = conv_out[..., cfg.d_inner:cfg.d_inner + g * ds].reshape(b, g, ds)
+    cmat = conv_out[..., cfg.d_inner + g * ds:].reshape(b, g, ds)
+    rep = nh // g
+    bmat = jnp.repeat(bmat, rep, axis=1)                             # (b, nh, ds)
+    cmat = jnp.repeat(cmat, rep, axis=1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b, nh)
+    decay = jnp.exp(-jnp.exp(p["a_log"])[None] * dtv)                # (b, nh)
+    xin = xs.astype(jnp.float32) * dtv[..., None]
+    s_new = decay[..., None, None] * state.ssm + \
+        xin[..., None] * bmat[:, :, None, :]
+    y = jnp.einsum("bhds,bhs->bhd", s_new, cmat) + xin * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return dense_apply(p["out_proj"], y), SSMState(ssm=s_new, conv=window[:, 1:])

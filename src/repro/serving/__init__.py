@@ -1,0 +1,2 @@
+"""Serving substrate: KV caches, prefill/decode steps, batching engine."""
+from repro.serving import engine  # noqa: F401

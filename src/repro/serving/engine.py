@@ -1,0 +1,296 @@
+"""Prefill / decode for every architecture family.
+
+State layout (a plain dict pytree so pjit shardings are easy to derive):
+
+  kv_k / kv_v     (L, B, Hkv, cap, dh)    full causal caches
+  ring_k / ring_v (L, B, Hkv, W, dh)      SWA ring buffers (hybrid)
+  glob_k / glob_v (nG, B, Hkv, cap, dh)   full caches for the global layers
+  ssm / conv      (L, B, nh, dh, ds) / (L, B, w-1, conv_dim)
+  xk / xv         (L, B, Hkv, Se, dh)     whisper cross-attention kv
+  pos             ()                      absolute decode position (int32)
+
+Decode unrolls the layer loop (static per-layer cache wiring — ring vs
+full vs recurrent), while prefill reuses the scanned full-sequence stack
+and then packs its collected kv into the cache layout.  The ring buffers
+are what make hybrid long-context decode O(W) in memory for SWA layers —
+only the cfg.global_layers carry full-length caches (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import ModelConfig, ShardRules, dense_apply, norm_apply
+from repro.models import transformer as tfm
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+
+def state_shapes(cfg: ModelConfig, batch: int, cap: int) -> dict:
+    """Shape/dtype skeleton of the serve state (also used by the dry-run)."""
+    import jax.numpy as _jnp
+    dt = _jnp.dtype(cfg.kv_dtype) if cfg.kv_dtype else cfg.compute_dtype
+    dh = cfg.head_dim
+    s: dict[str, Any] = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    L, B, Hkv = cfg.n_layers, batch, cfg.n_kv_heads
+
+    def sds(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        s["kv_k"] = sds((L, B, Hkv, cap, dh))
+        s["kv_v"] = sds((L, B, Hkv, cap, dh))
+    elif cfg.family == "audio":
+        cap_dec = max(cap // cfg.dec_seq_divisor, 64)
+        se = cap // cfg.enc_seq_divisor
+        s["kv_k"] = sds((L, B, Hkv, cap_dec, dh))
+        s["kv_v"] = sds((L, B, Hkv, cap_dec, dh))
+        s["xk"] = sds((L, B, Hkv, se, dh))
+        s["xv"] = sds((L, B, Hkv, se, dh))
+    elif cfg.family == "ssm":
+        s["ssm"] = sds((L, B, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32)
+        s["conv"] = sds((L, B, cfg.conv_width - 1,
+                         cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state))
+    elif cfg.family == "hybrid":
+        w = min(cfg.window or cap, cap)
+        ng = max(len(cfg.global_layers), 1)
+        s["ring_k"] = sds((L, B, Hkv, w, dh))
+        s["ring_v"] = sds((L, B, Hkv, w, dh))
+        s["glob_k"] = sds((ng, B, Hkv, cap, dh))
+        s["glob_v"] = sds((ng, B, Hkv, cap, dh))
+        s["ssm"] = sds((L, B, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32)
+        s["conv"] = sds((L, B, cfg.conv_width - 1,
+                         cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state))
+    return s
+
+
+def init_state(cfg: ModelConfig, batch: int, cap: int) -> dict:
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        state_shapes(cfg, batch, cap))
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token, unrolled layers)
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn(cfg, p, x, pos, k_cache, v_cache, ring: bool, window):
+    """Shared attention decode: returns (attn_out, new_k_cache, new_v_cache)."""
+    h = norm_apply(cfg, x, p["norm1"])
+    q, k, v = attn.qkv(cfg, p["attn"], h, jnp.reshape(pos, (1,)))
+    cache = attn.KVCache(k=k_cache, v=v_cache, ring=ring)
+    cache = attn.cache_update(cache, k, v, pos)
+    out = attn.attend_decode(cfg, q, cache, pos, window=window)
+    b, hq, _, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+    return dense_apply(p["attn"]["wo"], out), cache.k, cache.v, h
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict,
+                tokens: jnp.ndarray, rules: ShardRules | None = None
+                ) -> tuple[dict, jnp.ndarray]:
+    """tokens: (B, 1) -> (new_state, logits (B, vocab))."""
+    rules = rules or ShardRules()
+    pos = state["pos"]
+    x = tfm.embed_tokens(cfg, params, tokens)
+    new_state = dict(state)
+    g_idx = 0
+
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            a_out, nk, nv, _ = _decode_attn(
+                cfg, p, x, pos, state["kv_k"][i], state["kv_v"][i],
+                ring=False, window=cfg.window)
+            new_state["kv_k"] = new_state["kv_k"].at[i].set(nk)
+            new_state["kv_v"] = new_state["kv_v"].at[i].set(nv)
+            x = x + a_out
+            h = norm_apply(cfg, x, p["norm2"])
+            if cfg.family == "moe":
+                m_out, _ = mlp_mod.apply_moe(cfg, rules, p["moe"], h)
+            else:
+                m_out = mlp_mod.apply_dense(cfg, p["mlp"], h)
+            if cfg.parallel_block:
+                x = x + m_out  # command-r folds into same residual anyway
+            else:
+                x = x + m_out
+
+        elif cfg.family == "audio":
+            a_out, nk, nv, _ = _decode_attn(
+                cfg, p, x, pos, state["kv_k"][i], state["kv_v"][i],
+                ring=False, window=None)
+            new_state["kv_k"] = new_state["kv_k"].at[i].set(nk)
+            new_state["kv_v"] = new_state["kv_v"].at[i].set(nv)
+            x = x + a_out
+            # cross attention against static encoder kv
+            h = norm_apply(cfg, x, p["norm_x"])
+            q, _, _ = attn.qkv(cfg, p["xattn"], h, jnp.reshape(pos, (1,)))
+            xc = attn.KVCache(k=state["xk"][i], v=state["xv"][i], ring=False)
+            se = xc.k.shape[2]
+            out = attn.attend_decode(cfg, q, xc, jnp.int32(se - 1), window=None)
+            b, hq, _, dh = out.shape
+            out = out.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+            x = x + dense_apply(p["xattn"]["wo"], out)
+            x = x + mlp_mod.apply_dense(cfg, p["mlp"],
+                                        norm_apply(cfg, x, p["norm2"]))
+
+        elif cfg.family == "ssm":
+            h = norm_apply(cfg, x, p["norm1"])
+            st = ssm_mod.SSMState(ssm=state["ssm"][i], conv=state["conv"][i])
+            y, st2 = ssm_mod.apply_step(cfg, p["ssm"], h, st)
+            new_state["ssm"] = new_state["ssm"].at[i].set(st2.ssm)
+            new_state["conv"] = new_state["conv"].at[i].set(st2.conv)
+            x = x + y
+
+        elif cfg.family == "hybrid":
+            is_global = i in cfg.global_layers
+            h = norm_apply(cfg, x, p["norm1"])
+            q, k, v = attn.qkv(cfg, p["attn"], h, jnp.reshape(pos, (1,)))
+            if is_global:
+                cache = attn.KVCache(k=state["glob_k"][g_idx],
+                                     v=state["glob_v"][g_idx], ring=False)
+                cache = attn.cache_update(cache, k, v, pos)
+                new_state["glob_k"] = new_state["glob_k"].at[g_idx].set(cache.k)
+                new_state["glob_v"] = new_state["glob_v"].at[g_idx].set(cache.v)
+                out = attn.attend_decode(cfg, q, cache, pos, window=None)
+                g_idx += 1
+            else:
+                cache = attn.KVCache(k=state["ring_k"][i],
+                                     v=state["ring_v"][i], ring=True)
+                cache = attn.cache_update(cache, k, v, pos)
+                new_state["ring_k"] = new_state["ring_k"].at[i].set(cache.k)
+                new_state["ring_v"] = new_state["ring_v"].at[i].set(cache.v)
+                out = attn.attend_decode(cfg, q, cache, pos, window=cfg.window)
+            b, hq, _, dh = out.shape
+            a_out = dense_apply(p["attn"]["wo"],
+                                out.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh))
+            st = ssm_mod.SSMState(ssm=state["ssm"][i], conv=state["conv"][i])
+            y, st2 = ssm_mod.apply_step(cfg, p["ssm"], h, st)
+            new_state["ssm"] = new_state["ssm"].at[i].set(st2.ssm)
+            new_state["conv"] = new_state["conv"].at[i].set(st2.conv)
+            x = x + 0.5 * (a_out + y)
+            x = x + mlp_mod.apply_dense(cfg, p["mlp"],
+                                        norm_apply(cfg, x, p["norm2"]))
+
+    logits = tfm.logits_from_x(cfg, params, x, rules)[:, -1]
+    new_state["pos"] = pos + 1
+    return new_state, logits
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cap: int,
+            rules: ShardRules | None = None) -> tuple[dict, jnp.ndarray]:
+    """Run the full-sequence stack, pack collected kv/ssm into serve state.
+
+    batch: {tokens (B, S)} (+ patch_embeds / frames per family).
+    Returns (state at pos=S, last-token logits (B, vocab)).
+    """
+    rules = rules or ShardRules()
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "audio prefill uses examples/serve path with encode_audio + "
+            "cross-kv packing; see tests/test_serving.py::test_whisper_decode")
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = tfm.embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    pos = jnp.arange(x.shape[1])
+    x, stacked = tfm.run_stack(cfg, rules, params["layers"], x, pos,
+                               collect_kv=True)
+    state = init_state(cfg, b, cap)
+    s_eff = x.shape[1]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        k, v = stacked["kv"]                     # (L, B, Hkv, S, dh)
+        state["kv_k"] = state["kv_k"].at[:, :, :, :s_eff].set(k.astype(state["kv_k"].dtype))
+        state["kv_v"] = state["kv_v"].at[:, :, :, :s_eff].set(v.astype(state["kv_v"].dtype))
+    elif cfg.family == "ssm":
+        st = stacked["ssm"]
+        state["ssm"] = st.ssm
+        state["conv"] = st.conv.astype(state["conv"].dtype)
+    elif cfg.family == "hybrid":
+        k, v = stacked["kv"]
+        w = state["ring_k"].shape[3]
+        n_fill = min(s_eff, w)
+        src = slice(s_eff - n_fill, s_eff)
+        slots = (jnp.arange(s_eff - n_fill, s_eff)) % w
+        state["ring_k"] = state["ring_k"].at[:, :, :, slots].set(
+            k[:, :, :, src].astype(state["ring_k"].dtype))
+        state["ring_v"] = state["ring_v"].at[:, :, :, slots].set(
+            v[:, :, :, src].astype(state["ring_v"].dtype))
+        for g, li in enumerate(cfg.global_layers):
+            state["glob_k"] = state["glob_k"].at[g, :, :, :s_eff].set(
+                k[li].astype(state["glob_k"].dtype))
+            state["glob_v"] = state["glob_v"].at[g, :, :, :s_eff].set(
+                v[li].astype(state["glob_v"].dtype))
+        st = stacked["ssm"]
+        state["ssm"] = st.ssm
+        state["conv"] = st.conv.astype(state["conv"].dtype)
+
+    state["pos"] = jnp.int32(s_eff)
+    logits = tfm.logits_from_x(cfg, params, x[:, -1:], rules)[:, -1]
+    return state, logits
+
+
+def prefill_audio(cfg: ModelConfig, params: dict, batch: dict, cap: int,
+                  rules: ShardRules | None = None):
+    """Whisper: encode frames, pack cross-kv, prefill decoder prompt."""
+    rules = rules or ShardRules()
+    enc_out = tfm.encode_audio(cfg, rules, params, batch["frames"])
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = tfm.embed_tokens(cfg, params, tokens)
+    pos = jnp.arange(s)
+    x, stacked = _audio_dec_collect(cfg, rules, params, x, pos, enc_out)
+    state = init_state(cfg, b, cap)
+    k, v = stacked["kv"]
+    state["kv_k"] = state["kv_k"].at[:, :, :, :s].set(k.astype(state["kv_k"].dtype))
+    state["kv_v"] = state["kv_v"].at[:, :, :, :s].set(v.astype(state["kv_v"].dtype))
+    xk, xv = stacked["xkv"]
+    se = min(xk.shape[3], state["xk"].shape[3])
+    state["xk"] = state["xk"].at[:, :, :, :se].set(xk[:, :, :, :se].astype(state["xk"].dtype))
+    state["xv"] = state["xv"].at[:, :, :, :se].set(xv[:, :, :, :se].astype(state["xv"].dtype))
+    state["pos"] = jnp.int32(s)
+    logits = tfm.logits_from_x(cfg, params, x[:, -1:], rules)[:, -1]
+    return state, logits
+
+
+def _audio_dec_collect(cfg, rules, params, x, positions, enc_out):
+    dh = cfg.head_dim
+
+    def body(x, p):
+        a_out, kv = tfm._attn_sub(cfg, rules, p, x, positions, causal=True)
+        x = x + a_out
+        h = norm_apply(cfg, x, p["norm_x"])
+        q, _, _ = attn.qkv(cfg, p["xattn"], h, positions)
+        b, se, _ = enc_out.shape
+        kx = dense_apply(p["xattn"]["wk"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+        vx = dense_apply(p["xattn"]["wv"], enc_out).reshape(
+            b, se, cfg.n_kv_heads, dh).transpose(0, 2, 1, 3)
+        out = attn.attend(cfg, q, kx, vx, causal=False)
+        bq, hq, sq, _ = out.shape
+        x = x + dense_apply(p["xattn"]["wo"],
+                            out.transpose(0, 2, 1, 3).reshape(bq, sq, hq * dh))
+        x = x + mlp_mod.apply_dense(cfg, p["mlp"],
+                                    norm_apply(cfg, x, p["norm2"]))
+        return x, {"kv": kv, "xkv": (kx, vx)}
+
+    return jax.lax.scan(body, x, params["layers"])

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, train step, training state."""
+from repro.training import optimizer, step  # noqa: F401

@@ -1,0 +1,141 @@
+"""AdamW from scratch (+ optional 8-bit block-quantized moments).
+
+The 8-bit state keeps per-block (size 256 along the flattened tail)
+absmax scales — the standard bitsandbytes-style scheme; at kimi-k2 scale
+this is the difference between optimizer states fitting on 512 chips or
+not (EXPERIMENTS.md §Dry-run memory table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    quantize_state: bool = False     # 8-bit moments
+    block: int = 256
+
+
+_LOG_TINY = -36.0  # log(~2e-16): magnitudes below this quantize to exact 0
+
+
+class Quant8(NamedTuple):
+    """Signed log-domain (dynamic-range) 8-bit code, bitsandbytes-style.
+
+    Linear absmax codes zero out the long tail of Adam's second moment
+    (most |v| << blockmax) and the update m/sqrt(v) explodes; log-domain
+    codes bound the MULTIPLICATIVE error instead (~e^(range/127) per
+    entry), which Adam tolerates.  code = sign * round(127 * (log|x| -
+    LOG_TINY) / (hi_b - LOG_TINY)) with one f32 ``hi`` per block.
+    """
+
+    q: jnp.ndarray          # int8, (n_blocks, block)
+    hi: jnp.ndarray         # f32 per-block log-magnitude max
+    shape: tuple            # static original shape
+
+    @classmethod
+    def encode(cls, x: jnp.ndarray, block: int) -> "Quant8":
+        flat = x.reshape(-1)
+        pad = (-flat.size) % block
+        flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+        mag = jnp.abs(flat)
+        logm = jnp.where(mag > 0, jnp.log(jnp.maximum(mag, 1e-300)), _LOG_TINY)
+        hi = jnp.maximum(jnp.max(logm, axis=1, keepdims=True),
+                         _LOG_TINY + 1e-3)
+        code = jnp.round(127.0 * (logm - _LOG_TINY) / (hi - _LOG_TINY))
+        code = jnp.clip(code, 0, 127) * jnp.sign(flat)
+        return cls(q=code.astype(jnp.int8), hi=hi.astype(jnp.float32),
+                   shape=tuple(x.shape))
+
+    def decode(self) -> jnp.ndarray:
+        code = self.q.astype(jnp.float32)
+        mag = jnp.exp(_LOG_TINY + jnp.abs(code) / 127.0
+                      * (self.hi - _LOG_TINY))
+        flat = (jnp.where(code == 0, 0.0, mag) * jnp.sign(code)).reshape(-1)
+        n = 1
+        for d in self.shape:
+            n *= d
+        return flat[:n].reshape(self.shape)
+
+
+jax.tree_util.register_pytree_node(
+    Quant8,
+    lambda t: ((t.q, t.hi), t.shape),
+    lambda shape, c: Quant8(q=c[0], hi=c[1], shape=shape),
+)
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(cfg: AdamWConfig, params) -> dict:
+    def zeros_like_maybe_q(p):
+        z = jnp.zeros_like(p, dtype=jnp.float32)
+        return Quant8.encode(z, cfg.block) if cfg.quantize_state else z
+
+    return {
+        "m": jax.tree.map(zeros_like_maybe_q, params),
+        "v": jax.tree.map(zeros_like_maybe_q, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(cfg: AdamWConfig, params, opt_state, grads):
+    """One AdamW step; returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** sf
+    bc2 = 1.0 - cfg.b2 ** sf
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_f = m.decode() if isinstance(m, Quant8) else m
+        v_f = v.decode() if isinstance(v, Quant8) else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * gf
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * gf * gf
+        update = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32)
+                 - lr * (update + decay * p.astype(jnp.float32)))
+        if isinstance(m, Quant8):
+            m_f = Quant8.encode(m_f, cfg.block)
+            v_f = Quant8.encode(v_f, cfg.block)
+        return new_p.astype(p.dtype), m_f, v_f
+
+    is_q = lambda x: isinstance(x, Quant8)
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = jax.tree.flatten(opt_state["m"], is_leaf=is_q)[0]
+    v_leaves = jax.tree.flatten(opt_state["v"], is_leaf=is_q)[0]
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_); new_m.append(nm); new_v.append(nv)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"m": jax.tree.unflatten(treedef, new_m),
+         "v": jax.tree.unflatten(treedef, new_v),
+         "step": step},
+    )

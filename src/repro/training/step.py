@@ -1,0 +1,110 @@
+"""Jittable train step: microbatched grad accumulation, clipping, AdamW.
+
+Gradient accumulation is a ``lax.scan`` over microbatches — besides
+bounding activation memory, the k-th microbatch's gradient all-reduce can
+overlap the (k+1)-th microbatch's compute under XLA's latency-hiding
+scheduler (independent dataflow chains), which is the collective/compute
+overlap trick recorded in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, ShardRules
+from repro.training import optimizer as opt_mod
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    rules: ShardRules,
+    opt_cfg: opt_mod.AdamWConfig,
+    grad_accum: int = 1,
+    clip_norm: float = 1.0,
+    loss_fn: Callable | None = None,
+    cast_params_bf16: bool = False,
+):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ..., "step": int32}
+    batch leaves have leading dim global_batch; with grad_accum > 1 they
+    are reshaped to (grad_accum, global_batch // grad_accum, ...).
+    """
+    loss_fn = loss_fn or (
+        lambda params, batch: tfm.forward_train(cfg, params, batch, rules))
+
+    if cast_params_bf16:
+        # cast master fp32 matrices to bf16 BEFORE the layer stack: the
+        # elementwise cast runs on the fsdp shards, so every parameter
+        # all-gather moves bf16 — half the collective bytes (§Perf).
+        base_loss = loss_fn
+
+        def loss_fn(params, batch):  # noqa: F811
+            cast = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if (hasattr(p, "dtype") and p.dtype == jnp.float32
+                    and p.ndim >= 2) else p, params)
+            return base_loss(cast, batch)
+
+    def micro_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            loss, metrics, grads = micro_grads(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, metrics, grads = micro_grads(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = opt_mod.apply_updates(
+            opt_cfg, params, state["opt"], grads)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=opt_mod.lr_schedule(opt_cfg, new_opt["step"]))
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: opt_mod.AdamWConfig, key):
+    params = tfm.init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": opt_mod.init_state(opt_cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,97 @@
+"""Analog surrogate + behavioral model tests (paper Sec. III-B, IV-A, Fig. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analog, kernels as kern, svm as svm_mod
+
+
+def test_ideal_circuit_matches_eq4():
+    """With zero non-idealities the surrogate IS Eq. (4)."""
+    p = analog.CircuitParams(sigma_vth=0.0, mirror_err=0.0, lambda_ds=0.0)
+    dv = jnp.linspace(-0.3, 0.3, 101)
+    out = analog.gaussian_cell_circuit(dv, p)
+    x = dv / (p.n * p.v_t)
+    ref = 1.0 / ((1.0 + jnp.exp(-x)) * (1.0 + jnp.exp(x)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_gaussian_fit_quality_fig4():
+    """Fig. 4 validation: fitted ideal Gaussian vs measured curve —
+    nRMSE and r in the paper's reported ballpark (<= 0.05, >= 0.99)."""
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(0))
+    fit = hw.a0 * np.exp(-hw.gamma0 * (hw.dv_grid - hw.mu) ** 2)
+    meas = hw.kernel_curve * hw.kernel_curve.max()  # un-normalised scale ok
+    n = analog.nrmse(meas / meas.max(), fit / fit.max())
+    r = analog.pearson_r(meas, fit)
+    assert n < 0.05, n
+    assert r > 0.99, r
+
+
+def test_alpha_logistic_fit_roundtrip():
+    """Eq. (9): desired alpha -> control voltage -> realised alpha."""
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(1))
+    want = jnp.asarray([0.05, 0.2, 0.5, 0.8, 0.95])
+    got = hw.alpha_realized(hw.alpha_control_voltage(want))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.02)
+
+
+def test_alpha_fit_nrmse_fig4():
+    """Alpha multiplier logistic fit quality (paper: nRMSE 0.0003)."""
+    p = analog.CircuitParams()
+    dva, ratio = analog.dc_sweep_alpha(p, key=jax.random.PRNGKey(2))
+    x0, s = analog.fit_logistic(dva, ratio)
+    fit = 1.0 / (1.0 + np.exp((dva - x0) / s))
+    assert analog.nrmse(ratio, fit) < 0.01
+
+
+def test_input_scaling_realizes_gamma():
+    """Eq. (8): scaling inputs by sqrt(g*/g0) realises kernel width g*."""
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(3))
+    for g_star in (2.0, 8.0):
+        # near-core sweep: Eq. (5)'s Taylor matching holds around the
+        # origin; the sech2 tails legitimately exceed the Gaussian.
+        x = jnp.asarray(np.linspace(0, 0.15, 8)[:, None], jnp.float32)
+        z = jnp.zeros((1, 1), jnp.float32)
+        k_hw = np.asarray(hw.kernel_response(x, z, g_star))[:, 0]
+        k_ideal = np.asarray(kern.rbf_kernel(x, z, g_star))[:, 0]
+        np.testing.assert_allclose(k_hw, k_ideal, atol=0.06)
+
+
+def test_product_across_dims_separable():
+    """Eq. (6): D-dim response == product of 1-D responses."""
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(4))
+    g = 4.0
+    x = jnp.asarray([[0.1, 0.3, 0.2]], jnp.float32)
+    z = jnp.zeros((1, 3), jnp.float32)
+    kd = float(hw.kernel_response(x, z, g)[0, 0])
+    k1 = 1.0
+    for d in range(3):
+        k1 *= float(hw.kernel_response(x[:, d:d + 1], z[:, :1], g)[0, 0])
+    assert abs(kd - k1) < 1e-5
+
+
+def test_deployment_bit_agreement():
+    """Hardware-in-the-loop trained classifier deployed on the analog
+    model agrees with its float decision on >= 97% of points (the paper's
+    'within 1% of software accuracy' operating regime)."""
+    rng = np.random.RandomState(5)
+    x = rng.rand(150, 3)
+    y = np.where((x[:, 0] - 0.5) ** 2 + (x[:, 1] - 0.5) ** 2 < 0.08, 1.0, -1.0)
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(5))
+    m = svm_mod.train_binary(x, y, hw.kernel_response, gamma=8.0, c=10.0,
+                             n_epochs=200)
+    clf = analog.AnalogBinaryClassifier.deploy(m, hw)
+    bits_hw = clf.predict_bits(x)
+    bits_float = (svm_mod.decision_function(m, x) >= 0).astype(np.int32)
+    assert np.mean(bits_hw == bits_float) >= 0.97
+
+
+def test_deploy_prunes_sub_dac_alphas():
+    rng = np.random.RandomState(6)
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(6))
+    m = svm_mod.SVMModel(
+        kind="rbf", support_x=rng.rand(4, 2), support_y=np.ones(4),
+        alpha=np.array([1.0, 0.5, 1e-5, 1e-6]), bias=0.0, gamma=2.0, c=1.0)
+    clf = analog.AnalogBinaryClassifier.deploy(m, hw)
+    assert clf.n_support == 2

@@ -1,0 +1,108 @@
+"""Quantization + OvO/encoder tests (paper Sec. III-C, V-A2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ovo, quant
+
+
+# -- quantization -----------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-2.0, 3.0), min_size=1, max_size=40),
+       st.integers(2, 8))
+def test_quantize_unit_bounds_and_idempotence(vals, bits):
+    x = np.asarray(vals)
+    q = np.asarray(quant.quantize_unit(x, bits))
+    assert np.all(q >= 0) and np.all(q <= 1)
+    # idempotence: re-quantizing is a fixed point
+    np.testing.assert_allclose(np.asarray(quant.quantize_unit(q, bits)), q,
+                               atol=1e-12)
+    # max error bound for in-range values
+    inr = (x >= 0) & (x <= 1)
+    if inr.any():
+        lsb = 1.0 / ((1 << bits) - 1)
+        # + f32 ulp slack: the ADC model computes in float32
+        assert np.max(np.abs(q[inr] - x[inr])) <= lsb / 2 + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=30),
+       st.integers(4, 12))
+def test_fixed_point_bound(vals, bits):
+    x = np.asarray(vals, np.float64)
+    xq, fp = quant.quantize_tensor(x, bits)
+    if np.max(np.abs(x)) > 0:
+        # error bounded by half an LSB at the chosen scale (f32 slack; the
+        # subnormal-amax case clamps the scale and rounds tiny x to 0)
+        bound = max(fp.scale / 2, np.max(np.abs(x)) * 1e-6) + 1e-12
+        assert np.max(np.abs(xq - x)) <= bound
+
+
+def test_csd_and_hardware_class():
+    assert quant.weight_hardware_class(0) == "zero"
+    for p in (1, 2, 4, 64):
+        assert quant.weight_hardware_class(p) == "pow2"
+        assert quant.weight_hardware_class(-p) == "pow2"
+    assert quant.weight_hardware_class(3) == "general"
+    # CSD: 7 = 8 - 1 -> 2 digits; 5 = 4 + 1 -> 2; 21 = 16+4+1 -> 3
+    assert quant.csd_nonzero_digits(7) == 2
+    assert quant.csd_nonzero_digits(5) == 2
+    assert quant.csd_nonzero_digits(21) == 3
+    assert quant.csd_nonzero_digits(1) == 1
+
+
+# -- OvO encoder ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [3, 4, 5])
+def test_encoder_equals_votes_exhaustive(k):
+    """The hardwired encoder (Fig. 1) == majority voting w/ tiebreak, for
+    EVERY possible bit pattern (exhaustive truth-table check)."""
+    table = ovo.build_encoder_table(k)
+    n_bits = len(ovo.class_pairs(k))
+    codes = np.arange(1 << n_bits)
+    bits = ((codes[:, None] >> np.arange(n_bits)[None]) & 1).astype(np.int32)
+    np.testing.assert_array_equal(
+        ovo.decide_encoder(bits, table), ovo.decide_votes(bits, k))
+
+
+def test_unanimous_winner():
+    """If one class wins all its pairwise games it must be predicted."""
+    k = 4
+    pairs = ovo.class_pairs(k)
+    for c in range(k):
+        bits = np.zeros((len(pairs),), np.int32)
+        for p, (i, j) in enumerate(pairs):
+            if i == c:
+                bits[p] = 1
+            elif j == c:
+                bits[p] = 0
+            else:
+                bits[p] = np.random.RandomState(c * 7 + p).randint(2)
+        assert ovo.decide_votes(bits, k) == c
+
+
+def test_digital_linear_classifier_quantized_path():
+    rng = np.random.RandomState(0)
+    from repro.core import svm as svm_mod
+    x = rng.rand(100, 4)
+    y = np.where(x @ np.array([1.0, -2.0, 0.5, 0.0]) + 0.3 > 0, 1.0, -1.0)
+    m = svm_mod.train_binary(x, y, "linear", c=10.0, n_epochs=200)
+    clf = ovo.DigitalLinearClassifier.deploy(m, weight_bits=8, input_bits=4)
+    bits = clf.predict_bits(x)
+    agree = np.mean(bits == (svm_mod.decision_function(m, x) >= 0))
+    assert agree >= 0.9  # 4-bit ADC costs a little accuracy, not much
+
+
+def test_digital_rbf_classifier_matches_float():
+    rng = np.random.RandomState(1)
+    from repro.core import svm as svm_mod
+    x = rng.rand(120, 3)
+    y = np.where(((x - 0.5) ** 2).sum(1) < 0.1, 1.0, -1.0)
+    m = svm_mod.train_binary(x, y, "rbf", gamma=8.0, c=10.0, n_epochs=200)
+    clf = ovo.DigitalRBFClassifier.deploy(m)
+    agree = np.mean(clf.predict_bits(x)
+                    == (svm_mod.decision_function(m, x) >= 0))
+    assert agree >= 0.93

@@ -1,0 +1,125 @@
+"""Unit tests for the SVM solver and kernel math (paper Sec. II)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kernels as kern
+from repro.core import svm as svm_mod
+
+
+def test_linear_separable_exact():
+    """Perfectly separable 2-D data: solver must classify perfectly and
+    the primal view w (Eq. 3) must agree with the dual decision."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(80, 2)
+    y = np.where(x[:, 0] + 2 * x[:, 1] > 0, 1.0, -1.0)
+    m = svm_mod.train_binary(x, y, "linear", c=10.0, n_epochs=300)
+    assert svm_mod.accuracy(m, x, y) >= 0.98  # soft-margin near-boundary slack
+    f_dual = kern.kernel_matrix("linear", jnp.asarray(x, jnp.float32),
+                                jnp.asarray(m.support_x, jnp.float32))
+    f_dual = np.asarray(f_dual) @ (m.alpha * m.support_y) + m.bias
+    f_primal = x @ m.w + m.bias
+    np.testing.assert_allclose(f_primal, f_dual, rtol=1e-4, atol=1e-4)
+
+
+def test_rbf_solves_xor():
+    """XOR is the canonical linear-failure case (paper's motivation for
+    mixed kernels)."""
+    rng = np.random.RandomState(1)
+    x = rng.rand(200, 2)
+    y = np.where((x[:, 0] > 0.5) ^ (x[:, 1] > 0.5), 1.0, -1.0)
+    m_lin = svm_mod.train_binary(x, y, "linear", c=10.0, n_epochs=200)
+    m_rbf = svm_mod.train_binary(x, y, "rbf", gamma=20.0, c=10.0, n_epochs=200)
+    assert svm_mod.accuracy(m_rbf, x, y) > 0.95
+    assert svm_mod.accuracy(m_rbf, x, y) > svm_mod.accuracy(m_lin, x, y) + 0.2
+
+
+def test_dual_satisfies_box_constraints():
+    rng = np.random.RandomState(2)
+    x = rng.rand(60, 3)
+    y = np.where(rng.rand(60) > 0.5, 1.0, -1.0)
+    kp = kern.kernel_matrix("rbf", jnp.asarray(x, jnp.float32),
+                            jnp.asarray(x, jnp.float32), 5.0) + 1.0
+    c = 2.5
+    alpha = np.asarray(svm_mod.dual_coordinate_ascent(
+        kp, jnp.asarray(y, jnp.float32), jnp.full((60,), c), 100))
+    assert np.all(alpha >= 0.0) and np.all(alpha <= c + 1e-6)
+
+
+def test_masked_samples_stay_zero():
+    """C_i = 0 freezes a sample (the CV-fold masking mechanism)."""
+    rng = np.random.RandomState(3)
+    x = rng.rand(40, 2)
+    y = np.where(rng.rand(40) > 0.5, 1.0, -1.0)
+    kp = kern.kernel_matrix("rbf", jnp.asarray(x, jnp.float32),
+                            jnp.asarray(x, jnp.float32), 5.0) + 1.0
+    box = np.full((40,), 1.0, np.float32)
+    box[::2] = 0.0
+    alpha = np.asarray(svm_mod.dual_coordinate_ascent(
+        kp, jnp.asarray(y, jnp.float32), jnp.asarray(box), 50))
+    assert np.all(alpha[::2] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 5),
+       st.floats(0.1, 50.0))
+def test_rbf_kernel_properties(n, d, gamma):
+    """K symmetric, K(x,x)=1, 0 < K <= 1 (hypothesis property test)."""
+    rng = np.random.RandomState(n * 7 + d)
+    x = jnp.asarray(rng.rand(n, d), jnp.float32)
+    k = np.asarray(kern.rbf_kernel(x, x, gamma))
+    # f32 matmul cancellation scales with gamma * |x|^2 ulps
+    tol = max(1e-5, gamma * 2e-5)
+    np.testing.assert_allclose(k, k.T, atol=tol)
+    np.testing.assert_allclose(np.diag(k), 1.0, atol=tol)
+    # >= 0: exp underflows to exact 0 for gamma * d^2 > ~88 in f32
+    assert np.all(k >= 0) and np.all(k <= 1 + tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 20), st.integers(1, 5))
+def test_rbf_kernel_psd(n, d):
+    rng = np.random.RandomState(n * 13 + d)
+    x = jnp.asarray(rng.rand(n, d), jnp.float32)
+    k = np.asarray(kern.rbf_kernel(x, x, 3.0), np.float64)
+    w = np.linalg.eigvalsh((k + k.T) / 2)
+    assert w.min() > -1e-5
+
+
+def test_sech2_matches_gaussian_near_origin():
+    """Eq. (5): Taylor matching — sech2 cell ~ Gaussian for small dv."""
+    gamma = 5.0
+    x = jnp.asarray(np.linspace(0, 0.08, 9)[:, None], jnp.float32)
+    z = jnp.zeros((1, 1), jnp.float32)
+    k_hw = np.asarray(kern.sech2_kernel(x, z, gamma))
+    k_id = np.asarray(kern.rbf_kernel(x, z, gamma))
+    np.testing.assert_allclose(k_hw, k_id, atol=5e-3)
+
+
+def test_sech2_fatter_tails():
+    """Far from origin the hardware kernel exceeds the ideal Gaussian —
+    the 'inherent functional approximation' the paper discusses."""
+    gamma = 10.0
+    x = jnp.asarray([[1.0]], jnp.float32)
+    z = jnp.zeros((1, 1), jnp.float32)
+    assert float(kern.sech2_kernel(x, z, gamma)[0, 0]) > float(
+        kern.rbf_kernel(x, z, gamma)[0, 0])
+
+
+def test_gamma_subthreshold_value():
+    """gamma0 = 1/(4 n^2 V_T^2), Eq. (5)."""
+    g = kern.gamma_subthreshold(1.38, 0.02585)
+    assert abs(g - 1.0 / (4 * 1.38**2 * 0.02585**2)) < 1e-9
+
+
+def test_cv_grid_shapes_and_range():
+    rng = np.random.RandomState(4)
+    x = rng.rand(50, 3)
+    y = np.where(x[:, 0] > 0.5, 1.0, -1.0)
+    acc = svm_mod.cv_grid_accuracy(x, y, "rbf", np.array([1.0, 10.0]),
+                                   np.array([1.0, 10.0, 100.0]),
+                                   n_folds=3, n_epochs=30)
+    assert acc.shape == (2, 3)
+    assert np.all(acc >= 0) and np.all(acc <= 1)

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the paper's system (Table II flow)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import hwcost, mixed_precision, selection
+from repro.data import datasets
+
+
+@pytest.fixture(scope="module")
+def balance_result():
+    ds = datasets.load("balance")
+    res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
+                            n_epochs=100, seed=0)
+    return ds, res
+
+
+def test_algorithm1_selects_mixed_kernels(balance_result):
+    _, res = balance_result
+    # Balance has one genuinely non-linear pair (the L/R torque boundary
+    # is multiplicative) — Algorithm 1 must keep at least one RBF and at
+    # least one linear classifier (Table II: 1/2).
+    assert 1 <= res.n_rbf <= 2
+    assert res.n_rbf + sum(k == "linear" for k in res.kernel_map) == 3
+
+
+def test_mixed_beats_or_equals_linear(balance_result):
+    ds, res = balance_result
+    acc_mixed = res.mixed_circuit.accuracy(ds.x_test, ds.y_test)
+    acc_lin = res.linear_circuit.accuracy(ds.x_test, ds.y_test)
+    assert acc_mixed >= acc_lin - 0.01
+
+
+def test_circuit_tracks_float_within_1pct(balance_result):
+    """Paper: circuit accuracy within ~1% of software."""
+    ds, res = balance_result
+    f = res.mixed_float.accuracy(ds.x_test, ds.y_test)
+    c = res.mixed_circuit.accuracy(ds.x_test, ds.y_test)
+    assert abs(f - c) <= 0.015
+
+
+def test_cost_ordering_matches_paper(balance_result):
+    """linear << mixed << digital-RBF in area; RBF digital is the power
+    hog (Table II orderings)."""
+    _, res = balance_result
+    cm = hwcost.CostModel()
+    lin = hwcost.system_cost(res.linear_circuit, cm)
+    mix = hwcost.system_cost(res.mixed_circuit, cm)
+    rbf = hwcost.system_cost(res.rbf_circuit, cm)
+    assert lin.area_mm2 < mix.area_mm2 < rbf.area_mm2
+    assert lin.power_mw < mix.power_mw < rbf.power_mw
+    assert rbf.area_mm2 / mix.area_mm2 > 20     # paper: ~108x average
+    assert rbf.power_mw / mix.power_mw > 5      # paper: ~17x average
+
+
+def test_analog_power_dominates_mixed(balance_result):
+    """Fig. 5: analog RBF dominates mixed power (~89%)."""
+    _, res = balance_result
+    cm = hwcost.CostModel()
+    mix = hwcost.system_cost(res.mixed_circuit, cm)
+    if res.n_rbf:
+        assert mix.analog_power_frac > 0.5
+
+
+def test_calibration_improves_fit():
+    """calibrate_digital moves the linear column toward Table II."""
+    sys_by_ds = {}
+    for name in ("balance", "seeds", "vertebral"):
+        ds = datasets.load(name)
+        res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
+                                n_epochs=60, seed=0)
+        sys_by_ds[name] = res.linear_circuit
+    cm = hwcost.calibrate_digital(sys_by_ds)
+    err = 0.0
+    for name, sys in sys_by_ds.items():
+        got = hwcost.system_cost(sys, cm)
+        ref_a, _ = hwcost.TABLE2_LINEAR[name]
+        err += abs(np.log(got.area_mm2 / ref_a))
+    assert err / 3 < 0.8  # within ~2.2x on average post-calibration
+
+
+def test_mixed_precision_separation_on_toy():
+    """Algorithm-1-style domain assignment: modules that do not matter go
+    cheap; the one that matters stays exact."""
+    modules = ["m1", "m2", "m3"]
+
+    def quality(domains):
+        # m2 in cheap domain costs 0.1 quality; others are free to quantize
+        return 1.0 - (0.1 if domains["m2"] == "cheap" else 0.0)
+
+    a = mixed_precision.assign_domains(modules, quality, tolerance=0.01)
+    assert a.domain == {"m1": "cheap", "m2": "exact", "m3": "cheap"}
+    assert a.n_cheap == 2
+
+
+def test_quant_tensor_roundtrip():
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+    q = mixed_precision.QuantTensor.quantize(w)
+    back = np.asarray(q.dequantize(jnp.float32))
+    assert np.max(np.abs(back - np.asarray(w))) < np.abs(np.asarray(w)).max() / 100
+    assert q.nbytes < w.size * 4 / 3.5
