@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import hwcost, selection
+from repro.api import MixedKernelSVM
+from repro.core import hwcost
 from repro.data import datasets
 
 
@@ -14,10 +15,10 @@ def run(n_epochs: int = 120, seed: int = 0, verbose: bool = True):
     mixed = {}
     for name in datasets.DATASETS:
         ds = datasets.load(name)
-        res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
-                                n_epochs=n_epochs, seed=seed)
-        linear_systems[name] = res.linear_circuit
-        mixed[name] = res.mixed_circuit
+        est = MixedKernelSVM(n_epochs=n_epochs, seed=seed).fit(
+            ds.x_train, ds.y_train)
+        linear_systems[name] = est.bank("linear")
+        mixed[name] = est.bank("circuit")
     cm = hwcost.calibrate_digital(linear_systems)
 
     rows = []

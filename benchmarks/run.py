@@ -20,6 +20,10 @@ def main() -> None:
     from benchmarks import fig5
     fig5.run()
 
+    print("\n== SVM inference: object path vs compiled machine ==")
+    from benchmarks import svm_infer
+    svm_infer.run()
+
     print("\n== Kernel micro-bench (Pallas interpret vs jnp oracle) ==")
     from benchmarks import kernelbench
     kernelbench.run()

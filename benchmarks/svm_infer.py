@@ -1,0 +1,88 @@
+"""SVM inference micro-benchmark: legacy object path vs CompiledMachine.
+
+Times the mixed-signal 'circuit' machine (the paper's deliverable: digital
+linear + analog RBF classifiers + encoder) on Balance Scale, at batch sizes
+{64, 1024, 4096}, and emits a JSON record for the perf trajectory:
+
+  PYTHONPATH=src python benchmarks/svm_infer.py [--out runs/svm_infer.json]
+
+The object path is the per-classifier Python loop (`MulticlassSVM.predict`);
+the compiled path is the single jit-compiled batched program produced by
+`repro.api.compile_machine`.  Both compute the same machine — equality is
+asserted on every batch before timing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+BATCH_SIZES = (64, 1024, 4096)
+
+
+def _median_ms(fn, iters: int) -> float:
+    fn()  # warmup (jit compile / BLAS init)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def run(n_epochs: int = 60, seed: int = 0, target: str = "circuit",
+        verbose: bool = True) -> dict:
+    from repro.api import MixedKernelSVM
+    from repro.data import datasets
+
+    ds = datasets.load("balance")
+    est = MixedKernelSVM(n_epochs=n_epochs, seed=seed).fit(
+        ds.x_train, ds.y_train)
+    bank = est.bank(target)
+    machine = est.deploy(target)
+
+    rng = np.random.RandomState(seed)
+    rows = {}
+    for n in BATCH_SIZES:
+        x = ds.x_test[rng.randint(0, len(ds.x_test), n)]
+        if not np.array_equal(bank.predict(x), machine.predict(x)):
+            raise AssertionError(f"object/compiled mismatch at batch {n}")
+        t_obj = _median_ms(lambda: bank.predict(x), iters=5)
+        t_cmp = _median_ms(lambda: machine.predict(x), iters=30)
+        rows[n] = {
+            "object_ms": round(t_obj, 4),
+            "compiled_ms": round(t_cmp, 4),
+            "speedup": round(t_obj / t_cmp, 2),
+        }
+
+    result = {
+        "benchmark": "svm_infer",
+        "dataset": "balance",
+        "target": target,
+        "kernel_map": est.kernel_map_,
+        "batches": rows,
+    }
+    if verbose:
+        print("batch,object_ms,compiled_ms,speedup")
+        for n, r in rows.items():
+            print(f"{n},{r['object_ms']},{r['compiled_ms']},{r['speedup']}")
+        print(json.dumps(result))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write JSON here as well")
+    ap.add_argument("--target", default="circuit")
+    ap.add_argument("--n-epochs", type=int, default=60)
+    args = ap.parse_args()
+    result = run(n_epochs=args.n_epochs, target=args.target)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

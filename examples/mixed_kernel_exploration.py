@@ -1,10 +1,14 @@
 """Full paper reproduction in one script: Fig. 4 + Table II + Fig. 5.
 
+  python examples/mixed_kernel_exploration.py      (after `pip install -e .`)
   PYTHONPATH=src python examples/mixed_kernel_exploration.py
 """
 import sys
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # running from a checkout without `pip install -e .`
+    sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 from benchmarks import fig4, fig5, table2

@@ -1,18 +1,28 @@
 """Quickstart: the paper's full flow on Balance Scale in ~30 seconds.
 
 1. load the dataset (exactly regenerated from its published rule),
-2. run Algorithm 1 (separation-driven mixed-kernel exploration, with
-   hardware-in-the-loop training of the analog-bound classifiers),
+2. fit a MixedKernelSVM: Algorithm 1 (separation-driven mixed-kernel
+   exploration, with hardware-in-the-loop training of the analog-bound
+   classifiers),
 3. deploy: linear -> bespoke digital, RBF -> analog behavioral model,
-4. report Table-II-style accuracy + area/power.
+   compiled to ONE batched JAX inference path,
+4. report Table-II-style accuracy + area/power, and round-trip the trained
+   machine through save/load without retraining.
 
+  python examples/quickstart.py            (after `pip install -e .`)
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
+import tempfile
 
-sys.path.insert(0, "src")
+try:
+    import repro  # noqa: F401
+except ImportError:  # running from a checkout without `pip install -e .`
+    sys.path.insert(0, "src")
 
-from repro.core import hwcost, selection
+from repro.api import MixedKernelSVM
+from repro.core import hwcost
 from repro.data import datasets
 
 
@@ -21,27 +31,38 @@ def main():
     print(f"dataset=balance train={ds.x_train.shape} test={ds.x_test.shape} "
           f"classes={ds.n_classes}")
 
-    res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
-                            n_epochs=120)
-    print(f"\nAlgorithm 1 kernel map (per OvO pair): {res.kernel_map}")
-    for p in res.pairs:
+    est = MixedKernelSVM(n_epochs=120).fit(ds.x_train, ds.y_train)
+    print(f"\nAlgorithm 1 kernel map (per OvO pair): {est.kernel_map_}")
+    for p in est.pairs_:
         print(f"  pair {p.pair}: linear_cv={p.acc_linear:.3f} "
               f"rbf_cv={p.acc_rbf:.3f} -> {p.kernel}")
 
     cm = hwcost.CostModel()
     print("\ndesign            acc%   area mm^2   power mW")
-    for name, sys_ in [("all-linear (dig)", res.linear_circuit),
-                       ("all-RBF (dig)", res.rbf_circuit),
-                       ("mixed (ours)", res.mixed_circuit)]:
-        acc = 100 * sys_.accuracy(ds.x_test, ds.y_test)
-        c = hwcost.system_cost(sys_, cm)
+    for name, target in [("all-linear (dig)", "linear"),
+                         ("all-RBF (dig)", "rbf"),
+                         ("mixed (ours)", "circuit")]:
+        acc = 100 * est.score(ds.x_test, ds.y_test, target=target)
+        c = hwcost.system_cost(est.bank(target), cm)
         print(f"{name:16s}  {acc:5.1f}   {c.area_mm2:9.4f}   {c.power_mw:8.4f}")
 
-    mix = hwcost.system_cost(res.mixed_circuit, cm)
-    rbf = hwcost.system_cost(res.rbf_circuit, cm)
+    mix = hwcost.system_cost(est.bank("circuit"), cm)
+    rbf = hwcost.system_cost(est.bank("rbf"), cm)
     print(f"\nmixed vs digital-RBF: {rbf.area_mm2 / mix.area_mm2:.0f}x area, "
           f"{rbf.power_mw / mix.power_mw:.0f}x power  "
           f"(paper: 108x / 17x averages)")
+
+    # The deployed machine is ONE compiled artifact: a single jit-compiled
+    # batched predict, and it serializes without retraining.
+    machine = est.deploy("circuit")
+    print(f"\n{machine.describe()}")
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "balance_machine")
+        est.save(path)
+        est2 = MixedKernelSVM.load(path)
+        same = (est2.predict(ds.x_test, target="circuit")
+                == machine.predict(ds.x_test)).all()
+        print(f"save/load round-trip predictions identical: {bool(same)}")
 
 
 if __name__ == "__main__":

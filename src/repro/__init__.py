@@ -7,6 +7,8 @@ assigned architecture pool (see DESIGN.md).
 
 Subsystems:
 
+  repro.api          public estimator + compiled-machine API (MixedKernelSVM,
+                     compile_machine) — start here
   repro.core         paper's contribution (SVM, analog model, selection, cost)
   repro.data         datasets + token pipeline
   repro.models       LM architectures
@@ -19,4 +21,15 @@ Subsystems:
   repro.launch       mesh / dryrun / train / serve entrypoints
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_API_EXPORTS = ("MixedKernelSVM", "CompiledMachine", "compile_machine")
+
+
+def __getattr__(name):
+    """Lazy re-export of the public API (keeps `import repro` dependency-free)."""
+    if name in _API_EXPORTS:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,20 @@
+"""repro.api — the unified estimator + compiled-machine API (DESIGN.md §1).
+
+Two first-class objects replace the old ``selection.explore`` grab-bag:
+
+* :class:`MixedKernelSVM` — sklearn-style estimator: ``fit`` runs the
+  paper's Algorithm 1 (with hardware-in-the-loop co-optimization),
+  ``deploy(target)`` lowers any Table-II design point, ``save``/``load``
+  round-trip a trained machine without retraining.
+
+* :class:`CompiledMachine` — a bank of OvO bit-classifiers lowered by
+  :func:`compile_machine` into padded, stacked arrays with ONE jit-compiled
+  batched ``predict``: linear pairs in one fused matmul, RBF/sech2 pairs in
+  the tiled Pallas kernel (TPU) or its identical-math jnp path (CPU), the
+  analog pairs through the calibrated measured-curve kernel, and the packed
+  decision encoder — a single device round-trip per batch.
+"""
+from repro.api.compiled import CompiledMachine, compile_machine
+from repro.api.estimator import MixedKernelSVM
+
+__all__ = ["CompiledMachine", "compile_machine", "MixedKernelSVM"]

@@ -1,0 +1,620 @@
+"""CompiledMachine: one batched JAX inference path for an OvO classifier bank.
+
+The legacy object path (``MulticlassSVM.predict_bits``) is a host-side Python
+loop: one ``predict_bits`` call per pair classifier, each with its own device
+dispatches and host round-trips.  ``compile_machine`` *lowers* any bank of
+bit-classifiers into padded, stacked arrays grouped into a small number of
+homogeneous "banks", and ``CompiledMachine.predict`` evaluates the whole
+machine — every pair score, the comparator bits, and the decision encoder —
+inside a single jit-compiled function: one device round-trip per batch.
+
+Pytree layout (DESIGN.md §1.2)
+------------------------------
+Pairs are grouped by datapath; each group is one bank of stacked arrays:
+
+* ``_LinearBank``  — all pairs whose score is an affine form.  One fused
+  matmul ``x_q @ W.T + b`` scores every linear pair at once.
+  Fields: ``w (P, d)``, ``b (P,)``; static: ``input_bits``, ``pair_idx``.
+
+* ``_KernelBank``  — kernel pairs sharing (kernel kind, input quantization,
+  transfer curve).  Support vectors are padded to the bank max ``M`` and
+  stacked; padded slots carry coefficient 0 so they contribute exactly
+  nothing.  Fields: ``sv (P, M, d)``, ``coef_pos/coef_neg (P, M)``,
+  ``bias_pos/bias_neg/offset/gamma/scale (P,)`` plus the measured transfer
+  curve (``grid``, ``curve``) for the analog 'hw' kind.  The pos/neg split
+  mirrors the analog rails: ``f = (K @ c+ + b+) - (K @ c- + b-) + offset``
+  reproduces the comparator's current difference bit-for-bit; digital and
+  float pairs simply keep the negative rail empty.
+
+Kernel dispatch: 'rbf' and 'sech2' banks go to the tiled Pallas kernel
+(``repro.kernels.ops.rbf_matrix``) when ``use_pallas`` is on (default: only
+on TPU, where the tiles compile to Mosaic; the CPU container would run the
+Pallas interpreter, so it uses the identical-math jnp path instead).  The
+'hw' kind evaluates the calibrated measured-curve kernel (interp + product)
+exactly as the behavioral model does.
+
+The decision encoder is the packed truth table of ``build_encoder_table``
+for P <= 12 pair bits (the paper's K <= 5 regime); larger machines fall back
+to the equivalent votes-matmul + argmax (lowest-index tiebreak).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernels as kern
+from repro.core import quant
+from repro.core.analog import AnalogBinaryClassifier
+from repro.core.ovo import (
+    DigitalLinearClassifier,
+    DigitalRBFClassifier,
+    MulticlassSVM,
+    build_encoder_table,
+    class_pairs,
+)
+from repro.core.svm import SVMModel
+
+_FORMAT_VERSION = 1
+
+#: Encoder truth tables are materialised up to this many pair bits
+#: (2^12 = 4096 entries); beyond that the votes matmul is used.
+MAX_TABLE_BITS = 12
+
+
+# ---------------------------------------------------------------------------
+# Per-pair lowering specs (host-side, produced by compile_machine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _LinearSpec:
+    pair: int
+    input_bits: int          # 0 = float input, else ADC bits
+    w: np.ndarray            # (d,)
+    b: float
+
+
+@dataclasses.dataclass
+class _KernelSpec:
+    pair: int
+    kind: str                # 'rbf' | 'sech2' | 'hw'
+    input_bits: int
+    sv: np.ndarray           # (m, d)
+    coef_pos: np.ndarray     # (m,)
+    coef_neg: np.ndarray     # (m,)
+    bias_pos: float
+    bias_neg: float
+    offset: float            # comparator offset (analog), else 0
+    gamma: float             # rbf/sech2 width; unused for 'hw'
+    scale: float             # 'hw': prefolded v_scale * input_scale(gamma*)
+    shift: float = 0.0       # 'hw': fitted center offset mu (kernel_1d query)
+    grid: Optional[np.ndarray] = None    # 'hw': measured sweep abscissa (V)
+    curve: Optional[np.ndarray] = None   # 'hw': measured transfer, peak 1
+    left: float = 0.0        # interp clamp values
+    right: float = 0.0
+
+
+def _f32(a) -> np.ndarray:
+    return np.asarray(a, np.float32)
+
+
+def _lower_svm_model(idx: int, model: SVMModel) -> _LinearSpec | _KernelSpec:
+    """Lower a float SVMModel (a FloatBitClassifier's payload)."""
+    if model.kind == "linear" and model.w is not None:
+        return _LinearSpec(pair=idx, input_bits=0, w=_f32(model.w),
+                           b=float(model.bias))
+    coef = _f32(model.alpha * model.support_y)
+    base = dict(pair=idx, input_bits=0, sv=_f32(model.support_x),
+                coef_pos=coef, coef_neg=np.zeros_like(coef),
+                bias_pos=float(model.bias), bias_neg=0.0, offset=0.0)
+    if model.kind in ("rbf", "sech2"):
+        return _KernelSpec(kind=model.kind, gamma=float(model.gamma),
+                           scale=1.0, **base)
+    if model.kind == "hw":
+        hw = getattr(model.kernel_fn, "__self__", None)
+        if hw is None:
+            raise TypeError(
+                "cannot lower kind='hw' model: kernel_fn is not a bound "
+                "AnalogRBFModel.kernel_response method")
+        # Prefold the Eq.-8 input scaling exactly as kernel_response does:
+        # dv = (v_scale * s) * (x - sv), with the product taken in f32.
+        scale = float(jnp.float32(hw.v_scale)
+                      * hw.input_scale(jnp.float32(model.gamma)))
+        curve = _f32(hw.kernel_curve)
+        return _KernelSpec(kind="hw", gamma=float(model.gamma), scale=scale,
+                           shift=float(hw.mu), grid=_f32(hw.dv_grid),
+                           curve=curve, left=float(hw.kernel_curve[0]),
+                           right=float(hw.kernel_curve[-1]), **base)
+    raise TypeError(f"cannot lower SVMModel of kind {model.kind!r}")
+
+
+def _lower_classifier(idx: int, clf) -> _LinearSpec | _KernelSpec:
+    """Lower one bit-classifier object into its stacked-array spec."""
+    if isinstance(clf, DigitalLinearClassifier):
+        return _LinearSpec(pair=idx, input_bits=clf.input_bits,
+                           w=_f32(clf.w_q), b=float(clf.b_q))
+    if isinstance(clf, DigitalRBFClassifier):
+        coef = _f32(clf.coef)
+        return _KernelSpec(
+            pair=idx, kind="rbf", input_bits=clf.input_bits,
+            sv=_f32(clf.support_x), coef_pos=coef,
+            coef_neg=np.zeros_like(coef), bias_pos=float(clf.bias),
+            bias_neg=0.0, offset=0.0, gamma=float(clf.gamma), scale=1.0)
+    if isinstance(clf, AnalogBinaryClassifier):
+        hw = clf.hw
+        # Freeze the alpha path at compile time with the very same f32 ops
+        # the behavioral model runs per call: desired alpha -> control
+        # voltage (Eq. 9) -> realised alpha (measured sweep).
+        dva = hw.alpha_control_voltage(jnp.asarray(clf.alpha_hw, jnp.float32))
+        a = _f32(hw.alpha_realized(dva))
+        pos = (clf.support_y > 0)
+        scale = float(jnp.float32(hw.v_scale)
+                      * hw.input_scale(jnp.float32(clf.gamma_star)))
+        return _KernelSpec(
+            pair=idx, kind="hw", input_bits=0, sv=_f32(clf.support_x),
+            coef_pos=a * pos, coef_neg=a * (~pos),
+            bias_pos=float(max(clf.bias_hw, 0.0)),
+            bias_neg=float(max(-clf.bias_hw, 0.0)),
+            offset=float(hw.params.comparator_offset / hw.params.i_bias),
+            gamma=float(clf.gamma_star), scale=scale, shift=float(hw.mu),
+            grid=_f32(hw.dv_grid), curve=_f32(hw.kernel_curve),
+            left=float(hw.kernel_curve[0]), right=float(hw.kernel_curve[-1]))
+    if isinstance(clf, SVMModel):
+        return _lower_svm_model(idx, clf)
+    model = getattr(clf, "model", None)   # FloatBitClassifier & duck-typed
+    if isinstance(model, SVMModel):
+        return _lower_svm_model(idx, model)
+    raise TypeError(f"cannot lower classifier of type {type(clf).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Banks: grouped, padded, stacked arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _LinearBank:
+    input_bits: int
+    pair_idx: np.ndarray     # (P,)
+    w: jnp.ndarray           # (P, d)
+    b: jnp.ndarray           # (P,)
+
+    @classmethod
+    def build(cls, specs: list[_LinearSpec]) -> "_LinearBank":
+        return cls(
+            input_bits=specs[0].input_bits,
+            pair_idx=np.asarray([s.pair for s in specs]),
+            w=jnp.asarray(np.stack([s.w for s in specs])),
+            b=jnp.asarray(np.asarray([s.b for s in specs], np.float32)),
+        )
+
+
+@dataclasses.dataclass
+class _KernelBank:
+    kind: str
+    input_bits: int
+    pair_idx: np.ndarray     # (P,)
+    sv: jnp.ndarray          # (P, M, d), zero-padded to bank max M
+    coef_pos: jnp.ndarray    # (P, M), 0 on padded slots
+    coef_neg: jnp.ndarray    # (P, M)
+    bias_pos: jnp.ndarray    # (P,)
+    bias_neg: jnp.ndarray    # (P,)
+    offset: jnp.ndarray      # (P,)
+    gamma: jnp.ndarray       # (P,)
+    scale: jnp.ndarray       # (P,)
+    shift: jnp.ndarray = None  # (P,) 'hw' center offsets
+    grid: Optional[jnp.ndarray] = None
+    curve: Optional[jnp.ndarray] = None
+    left: float = 0.0
+    right: float = 0.0
+    # Uniform-grid fast path for the measured-curve interpolation (derived
+    # from `grid` at build/load time, not serialized).
+    uniform_grid: bool = False
+    inv_step: float = 0.0
+
+    @classmethod
+    def build(cls, specs: list[_KernelSpec]) -> "_KernelBank":
+        m_max = max(s.sv.shape[0] for s in specs)
+
+        def pad(a):
+            out = np.zeros((m_max,) + a.shape[1:], np.float32)
+            out[: a.shape[0]] = a
+            return out
+
+        s0 = specs[0]
+        return cls(
+            kind=s0.kind, input_bits=s0.input_bits,
+            pair_idx=np.asarray([s.pair for s in specs]),
+            sv=jnp.asarray(np.stack([pad(s.sv) for s in specs])),
+            coef_pos=jnp.asarray(
+                np.stack([pad(s.coef_pos) for s in specs])),
+            coef_neg=jnp.asarray(
+                np.stack([pad(s.coef_neg) for s in specs])),
+            bias_pos=jnp.asarray(
+                np.asarray([s.bias_pos for s in specs], np.float32)),
+            bias_neg=jnp.asarray(
+                np.asarray([s.bias_neg for s in specs], np.float32)),
+            offset=jnp.asarray(
+                np.asarray([s.offset for s in specs], np.float32)),
+            gamma=jnp.asarray(
+                np.asarray([s.gamma for s in specs], np.float32)),
+            scale=jnp.asarray(
+                np.asarray([s.scale for s in specs], np.float32)),
+            shift=jnp.asarray(
+                np.asarray([s.shift for s in specs], np.float32)),
+            grid=None if s0.grid is None else jnp.asarray(s0.grid),
+            curve=None if s0.curve is None else jnp.asarray(s0.curve),
+            left=s0.left, right=s0.right,
+            **_grid_fast_path(s0.grid),
+        )
+
+
+def _grid_is_uniform(grid: np.ndarray, rel_tol: float = 1e-3) -> bool:
+    """True when ``grid`` is a cast linspace (the DC-sweep abscissa)."""
+    steps = np.diff(np.asarray(grid, np.float64))
+    if steps.size == 0 or np.any(steps <= 0):
+        return False
+    mean = steps.mean()
+    return bool(np.max(np.abs(steps - mean)) <= rel_tol * abs(mean))
+
+
+def _uniform_interp(v, curve, lo, hi, left, right, inv_step):
+    """``jnp.interp`` on a uniform ascending grid: O(1) bin location.
+
+    The DC-sweep abscissa is a linspace, so the segment index and the
+    interpolation fraction come from one multiply (``u = (v-lo)*inv_step``)
+    instead of a per-query binary search, and only the two bracketing curve
+    values are gathered.  The result tracks ``jnp.interp`` to ~1e-6 (the
+    fraction's f32 rounding times the max segment slope; same order as the
+    eager-vs-jit fusion noise the compiled path already carries);
+    out-of-range queries clamp to ``left``/``right`` exactly like the
+    behavioral model's ``kernel_1d``.
+    """
+    n_seg = curve.shape[0] - 1
+    u = (v - lo) * inv_step
+    i = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, n_seg - 1)
+    t = u - i.astype(jnp.float32)
+    f0 = jnp.take(curve, i)
+    f1 = jnp.take(curve, i + 1)
+    f = f0 + t * (f1 - f0)
+    f = jnp.where(v < lo, left, f)
+    f = jnp.where(v > hi, right, f)
+    return f
+
+
+def _grid_fast_path(grid) -> dict:
+    if grid is None or not _grid_is_uniform(grid):
+        return {"uniform_grid": False, "inv_step": 0.0}
+    g = np.asarray(grid, np.float64)
+    return {"uniform_grid": True,
+            "inv_step": float((g.shape[0] - 1) / (g[-1] - g[0]))}
+
+
+def _kernel_group_key(s: _KernelSpec):
+    curve_key = None
+    if s.grid is not None:
+        curve_key = (s.grid.shape[0], hash(s.grid.tobytes()),
+                     hash(s.curve.tobytes()))
+    return (s.kind, s.input_bits, curve_key)
+
+
+# ---------------------------------------------------------------------------
+# The compiled machine
+# ---------------------------------------------------------------------------
+
+
+class CompiledMachine:
+    """A bank of OvO bit-classifiers lowered to one jit-compiled predict.
+
+    Construct via :func:`compile_machine` (from live classifier objects) or
+    :meth:`CompiledMachine.load` (from an ``.npz`` + ``.json`` pair).
+    """
+
+    def __init__(
+        self,
+        n_classes: int,
+        linear_banks: list[_LinearBank],
+        kernel_banks: list[_KernelBank],
+        kernel_map: Optional[list[str]] = None,
+        use_pallas: Optional[bool] = None,
+    ):
+        self.n_classes = int(n_classes)
+        self._linear_banks = linear_banks
+        self._kernel_banks = kernel_banks
+        self.n_pairs = sum(len(b.pair_idx) for b in linear_banks) + \
+            sum(len(b.pair_idx) for b in kernel_banks)
+        expect = len(class_pairs(self.n_classes))
+        if self.n_pairs != expect:
+            raise ValueError(
+                f"{self.n_pairs} lowered pairs for {self.n_classes} classes "
+                f"(expected {expect})")
+        self.kernel_map = list(kernel_map) if kernel_map is not None else None
+        dims = {int(b.w.shape[1]) for b in linear_banks} | \
+            {int(b.sv.shape[2]) for b in kernel_banks}
+        if len(dims) > 1:
+            raise ValueError(f"inconsistent feature counts across banks: {dims}")
+        self.n_features = dims.pop() if dims else 0
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+
+        # Column order after bank concatenation -> pair order inversion.
+        order = np.concatenate(
+            [b.pair_idx for b in linear_banks]
+            + [b.pair_idx for b in kernel_banks]).astype(np.int64)
+        inv = np.empty_like(order)
+        inv[order] = np.arange(self.n_pairs)
+        self._inv_perm = jnp.asarray(inv)
+
+        # Decision encoder: packed truth table in the FE regime, votes
+        # matmul beyond it (identical semantics, see ovo.decide_votes).
+        pairs = class_pairs(self.n_classes)
+        if self.n_pairs <= MAX_TABLE_BITS:
+            self._table = jnp.asarray(build_encoder_table(self.n_classes))
+            self._bit_weights = jnp.asarray(
+                (1 << np.arange(self.n_pairs)).astype(np.int32))
+            self._vote_a = self._vote_b = None
+        else:
+            a = np.zeros((self.n_pairs, self.n_classes), np.int32)
+            b = np.zeros((self.n_pairs, self.n_classes), np.int32)
+            for p, (i, j) in enumerate(pairs):
+                a[p, i] = 1
+                b[p, j] = 1
+            self._table = self._bit_weights = None
+            self._vote_a = jnp.asarray(a)
+            self._vote_b = jnp.asarray(b)
+
+        self._forward_jit = jax.jit(self._forward)
+
+    # -- construction-time summary -----------------------------------------
+
+    @property
+    def n_linear_pairs(self) -> int:
+        return sum(len(b.pair_idx) for b in self._linear_banks)
+
+    @property
+    def n_kernel_pairs(self) -> int:
+        return sum(len(b.pair_idx) for b in self._kernel_banks)
+
+    def describe(self) -> str:
+        parts = [f"CompiledMachine(K={self.n_classes}, P={self.n_pairs})"]
+        for b in self._linear_banks:
+            parts.append(f"  linear bank: {len(b.pair_idx)} pairs, "
+                         f"d={b.w.shape[1]}, input_bits={b.input_bits}")
+        for b in self._kernel_banks:
+            parts.append(f"  {b.kind} bank: {len(b.pair_idx)} pairs, "
+                         f"M={b.sv.shape[1]}, d={b.sv.shape[2]}, "
+                         f"input_bits={b.input_bits}")
+        return "\n".join(parts)
+
+    # -- the single batched forward pass ------------------------------------
+
+    def _pair_kernel(self, bank: _KernelBank, xv: jnp.ndarray,
+                     sv: jnp.ndarray, gamma, scale, shift) -> jnp.ndarray:
+        """(n, M) kernel matrix of ONE pair (vmapped over the bank)."""
+        if bank.kind == "hw":
+            d = int(bank.sv.shape[-1])
+
+            def cell(dv):
+                if bank.uniform_grid:
+                    return _uniform_interp(dv, bank.curve,
+                                           bank.grid[0], bank.grid[-1],
+                                           bank.left, bank.right,
+                                           jnp.float32(bank.inv_step))
+                return jnp.interp(dv, bank.grid, bank.curve,
+                                  left=bank.left, right=bank.right)
+
+            # Per-dimension accumulation: (n, M) temporaries instead of one
+            # (n, M, d) tensor — same sequential multiply order as jnp.prod,
+            # far less memory traffic.  d <= 5 in hardware.
+            acc = None
+            for k in range(d):
+                dv = scale * (xv[:, k:k + 1] - sv[None, :, k]) + shift
+                k1 = cell(dv)
+                acc = k1 if acc is None else acc * k1
+            return acc
+        if self.use_pallas:
+            from repro.kernels import ops
+
+            return ops.rbf_matrix(xv, sv, gamma, kind=bank.kind, v_scale=1.0)
+        return kern.kernel_matrix(bank.kind, xv, sv, gamma)
+
+    def _bank_scores(self, bank: _KernelBank, xv: jnp.ndarray) -> jnp.ndarray:
+        """(n, P) decision scores for one kernel bank, kernel + contraction
+        fused per pair: the (n, M) kernel tile feeds one (M, 2) GEMM for the
+        +/- rails while it is still hot."""
+
+        def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off):
+            k = self._pair_kernel(bank, xv, sv, gamma, scale, shift)
+            rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
+            return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
+
+        return jax.vmap(one, out_axes=1)(
+            bank.sv, bank.gamma, bank.scale, bank.shift,
+            bank.coef_pos, bank.coef_neg,
+            bank.bias_pos, bank.bias_neg, bank.offset)
+
+    def _forward(self, x: jnp.ndarray):
+        """x (n, d) f32 -> (scores (n, P), bits (n, P), labels (n,))."""
+        xq_cache: dict[int, jnp.ndarray] = {}
+
+        def xq(bits: int) -> jnp.ndarray:
+            if bits not in xq_cache:
+                xq_cache[bits] = x if bits == 0 else quant.quantize_unit(x, bits)
+            return xq_cache[bits]
+
+        cols = []
+        for bank in self._linear_banks:
+            cols.append(xq(bank.input_bits) @ bank.w.T + bank.b[None, :])
+        for bank in self._kernel_banks:
+            cols.append(self._bank_scores(bank, xq(bank.input_bits)))
+        scores = jnp.concatenate(cols, axis=1)[:, self._inv_perm]
+        bits = (scores >= 0.0).astype(jnp.int32)
+        if self._table is not None:
+            labels = jnp.take(self._table, bits @ self._bit_weights)
+        else:
+            votes = bits @ self._vote_a + (1 - bits) @ self._vote_b
+            labels = jnp.argmax(votes, axis=-1)
+        return scores, bits, labels
+
+    # -- host API ------------------------------------------------------------
+
+    def _run(self, x: np.ndarray):
+        x = jnp.asarray(np.asarray(x), jnp.float32)
+        if x.ndim != 2 or (self.n_features and x.shape[1] != self.n_features):
+            raise ValueError(
+                f"expected (n, {self.n_features}) inputs, got shape {x.shape}")
+        return self._forward_jit(x)
+
+    def decision_scores(self, x: np.ndarray) -> np.ndarray:
+        """Raw per-pair decision scores (n, P) — pre-comparator."""
+        return np.asarray(self._run(x)[0])
+
+    def predict_bits(self, x: np.ndarray) -> np.ndarray:
+        """Comparator bits (n, P), pair order of ``class_pairs``."""
+        return np.asarray(self._run(x)[1])
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Class labels (n,) via the packed decision encoder."""
+        return np.asarray(self._run(x)[2])
+
+    def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(x) == np.asarray(y)))
+
+    score = accuracy
+
+    # -- serialization (npz arrays + json structure) -------------------------
+
+    def save(self, path: str) -> None:
+        """Write ``<path>.npz`` (arrays) + ``<path>.json`` (structure)."""
+        path = _strip_ext(path)
+        arrays: dict[str, np.ndarray] = {}
+        meta_banks = []
+        for i, b in enumerate(self._linear_banks):
+            arrays[f"lin{i}.w"] = np.asarray(b.w)
+            arrays[f"lin{i}.b"] = np.asarray(b.b)
+            arrays[f"lin{i}.pair_idx"] = b.pair_idx
+            meta_banks.append({"type": "linear", "id": f"lin{i}",
+                               "input_bits": b.input_bits})
+        for i, b in enumerate(self._kernel_banks):
+            for name in ("sv", "coef_pos", "coef_neg", "bias_pos", "bias_neg",
+                         "offset", "gamma", "scale", "shift"):
+                arrays[f"ker{i}.{name}"] = np.asarray(getattr(b, name))
+            arrays[f"ker{i}.pair_idx"] = b.pair_idx
+            entry = {"type": "kernel", "id": f"ker{i}", "kind": b.kind,
+                     "input_bits": b.input_bits, "left": b.left,
+                     "right": b.right}
+            if b.grid is not None:
+                arrays[f"ker{i}.grid"] = np.asarray(b.grid)
+                arrays[f"ker{i}.curve"] = np.asarray(b.curve)
+            meta_banks.append(entry)
+        meta = {
+            "format": "repro.api.CompiledMachine",
+            "version": _FORMAT_VERSION,
+            "n_classes": self.n_classes,
+            "kernel_map": self.kernel_map,
+            "banks": meta_banks,
+        }
+        np.savez(path + ".npz", **arrays)
+        with open(path + ".json", "w") as f:
+            json.dump(meta, f, indent=2)
+
+    @classmethod
+    def load(cls, path: str, use_pallas: Optional[bool] = None
+             ) -> "CompiledMachine":
+        path = _strip_ext(path)
+        with open(path + ".json") as f:
+            meta = json.load(f)
+        if meta.get("format") != "repro.api.CompiledMachine":
+            raise ValueError(f"{path}.json is not a CompiledMachine save")
+        npz = np.load(path + ".npz")
+        linear_banks, kernel_banks = [], []
+        for entry in meta["banks"]:
+            bid = entry["id"]
+            if entry["type"] == "linear":
+                linear_banks.append(_LinearBank(
+                    input_bits=int(entry["input_bits"]),
+                    pair_idx=npz[f"{bid}.pair_idx"],
+                    w=jnp.asarray(npz[f"{bid}.w"]),
+                    b=jnp.asarray(npz[f"{bid}.b"])))
+            else:
+                has_grid = f"{bid}.grid" in npz
+                kernel_banks.append(_KernelBank(
+                    kind=entry["kind"], input_bits=int(entry["input_bits"]),
+                    pair_idx=npz[f"{bid}.pair_idx"],
+                    sv=jnp.asarray(npz[f"{bid}.sv"]),
+                    coef_pos=jnp.asarray(npz[f"{bid}.coef_pos"]),
+                    coef_neg=jnp.asarray(npz[f"{bid}.coef_neg"]),
+                    bias_pos=jnp.asarray(npz[f"{bid}.bias_pos"]),
+                    bias_neg=jnp.asarray(npz[f"{bid}.bias_neg"]),
+                    offset=jnp.asarray(npz[f"{bid}.offset"]),
+                    gamma=jnp.asarray(npz[f"{bid}.gamma"]),
+                    scale=jnp.asarray(npz[f"{bid}.scale"]),
+                    shift=jnp.asarray(npz[f"{bid}.shift"]),
+                    grid=jnp.asarray(npz[f"{bid}.grid"]) if has_grid else None,
+                    curve=jnp.asarray(npz[f"{bid}.curve"]) if has_grid else None,
+                    left=float(entry["left"]), right=float(entry["right"]),
+                    **_grid_fast_path(
+                        npz[f"{bid}.grid"] if has_grid else None)))
+        return cls(meta["n_classes"], linear_banks, kernel_banks,
+                   kernel_map=meta.get("kernel_map"), use_pallas=use_pallas)
+
+
+def _strip_ext(path: str) -> str:
+    for ext in (".npz", ".json"):
+        if path.endswith(ext):
+            return path[: -len(ext)]
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def compile_machine(
+    machine: MulticlassSVM | Sequence,
+    n_classes: Optional[int] = None,
+    kernel_map: Optional[list[str]] = None,
+    use_pallas: Optional[bool] = None,
+) -> CompiledMachine:
+    """Lower a bank of bit-classifiers to a single batched inference path.
+
+    ``machine`` is either a :class:`~repro.core.ovo.MulticlassSVM` or a
+    plain sequence of per-pair classifiers (``DigitalLinearClassifier``,
+    ``DigitalRBFClassifier``, ``AnalogBinaryClassifier``, float ``SVMModel``
+    or any object exposing a ``.model`` SVMModel) in ``class_pairs`` order;
+    in the latter case ``n_classes`` is required.
+
+    The compiled result is numerically equivalent to calling each object's
+    ``predict_bits`` and the encoder in turn, but runs as ONE jit-compiled
+    device program (see module docstring for the bank layout).
+    """
+    if isinstance(machine, MulticlassSVM):
+        classifiers = list(machine.classifiers)
+        n_classes = machine.n_classes
+        kernel_map = list(machine.kernel_map)
+    else:
+        classifiers = list(machine)
+        if n_classes is None:
+            raise ValueError("n_classes is required for a bare classifier list")
+
+    specs = [_lower_classifier(i, c) for i, c in enumerate(classifiers)]
+
+    linear_groups: dict[int, list[_LinearSpec]] = {}
+    kernel_groups: dict[tuple, list[_KernelSpec]] = {}
+    for s in specs:
+        if isinstance(s, _LinearSpec):
+            linear_groups.setdefault(s.input_bits, []).append(s)
+        else:
+            kernel_groups.setdefault(_kernel_group_key(s), []).append(s)
+
+    linear_banks = [_LinearBank.build(g) for g in linear_groups.values()]
+    kernel_banks = [_KernelBank.build(g) for g in kernel_groups.values()]
+    return CompiledMachine(n_classes, linear_banks, kernel_banks,
+                           kernel_map=kernel_map, use_pallas=use_pallas)

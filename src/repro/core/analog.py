@@ -209,9 +209,15 @@ class AnalogRBFModel:
 
     def kernel_1d(self, dv_volts: jnp.ndarray) -> jnp.ndarray:
         """Interpolate the measured transfer curve (paper: 'use the SPICE
-        data together with the fitted gamma0')."""
+        data together with the fitted gamma0').
+
+        The fitted center offset ``mu`` (threshold-mismatch shift, Eq. 7) is
+        compensated here: a fabricated core is calibrated so its bell peaks
+        at zero differential input, which is exactly what fitting mu enables.
+        """
         return jnp.interp(
-            dv_volts, jnp.asarray(self.dv_grid), jnp.asarray(self.kernel_curve),
+            dv_volts + self.mu,
+            jnp.asarray(self.dv_grid), jnp.asarray(self.kernel_curve),
             left=float(self.kernel_curve[0]), right=float(self.kernel_curve[-1]),
         )
 

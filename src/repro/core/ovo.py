@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
+from repro.core import svm as svm_mod
 from repro.core.svm import SVMModel
 from repro.core import kernels as kern
 
@@ -95,6 +96,16 @@ def decide_encoder(bits: np.ndarray, table: np.ndarray) -> np.ndarray:
 
 class BitClassifier(Protocol):
     def predict_bits(self, x: np.ndarray) -> np.ndarray: ...
+
+
+class FloatBitClassifier:
+    """Adapter: float SVMModel -> 1-bit OvO output (c_i wins iff f >= 0)."""
+
+    def __init__(self, model: SVMModel):
+        self.model = model
+
+    def predict_bits(self, x: np.ndarray) -> np.ndarray:
+        return (svm_mod.decision_function(self.model, x) >= 0.0).astype(np.int32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,13 +12,20 @@ The selected float classifiers are then *deployed* to hardware:
   rbf    -> AnalogBinaryClassifier  (behavioral model of Sec. IV-A)
 and wrapped in a ``MulticlassSVM`` with the encoder decision logic.
 
-``explore`` returns both the float mixed model and the deployed (circuit)
-mixed model, plus the all-linear and all-RBF *digital* baselines used in
-Table II.
+Module layout (post API redesign, DESIGN.md §1):
+
+  * ``train_pairs``   — the Algorithm-1 per-pair training loop,
+  * ``build_banks``   — assemble every Table-II design point (float and
+                        deployed) as ``MulticlassSVM`` object banks,
+  * ``explore``       — DEPRECATED thin shim kept for old call sites; new
+                        code uses ``repro.api.MixedKernelSVM`` which wraps
+                        the two functions above and compiles the banks to a
+                        single batched JAX inference path.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -29,9 +36,15 @@ from repro.core.analog import AnalogBinaryClassifier, AnalogRBFModel
 from repro.core.ovo import (
     DigitalLinearClassifier,
     DigitalRBFClassifier,
+    FloatBitClassifier,
     MulticlassSVM,
     class_pairs,
 )
+
+#: Design points produced by ``build_banks``: mixed float/circuit plus the
+#: all-linear and all-RBF baselines of Table II (both float and deployed).
+BANK_TARGETS = ("float", "circuit", "linear", "rbf", "linear_float",
+                "rbf_float")
 
 
 @dataclasses.dataclass
@@ -46,37 +59,6 @@ class PairResult:
     # Hardware-aware co-optimized model (sech2 kernel) for analog deployment;
     # only trained for pairs that Algorithm 1 assigns to RBF.
     model_hw: Optional[svm_mod.SVMModel] = None
-
-
-@dataclasses.dataclass
-class ExplorationResult:
-    """Everything Algorithm 1 emits, float and deployed."""
-
-    n_classes: int
-    pairs: list[PairResult]
-    kernel_map: list[str]
-    # float (software) models
-    mixed_float: MulticlassSVM
-    linear_float: MulticlassSVM
-    rbf_float: MulticlassSVM
-    # deployed (circuit) models
-    mixed_circuit: MulticlassSVM     # digital linear + ANALOG rbf
-    linear_circuit: MulticlassSVM    # all digital linear
-    rbf_circuit: MulticlassSVM       # all DIGITAL rbf (the costly baseline)
-
-    @property
-    def n_rbf(self) -> int:
-        return sum(k == "rbf" for k in self.kernel_map)
-
-
-class _FloatBit:
-    """Adapter: float SVMModel -> 1-bit OvO output (c_i wins iff f >= 0)."""
-
-    def __init__(self, model: svm_mod.SVMModel):
-        self.model = model
-
-    def predict_bits(self, x: np.ndarray) -> np.ndarray:
-        return (svm_mod.decision_function(self.model, x) >= 0.0).astype(np.int32)
 
 
 def _binary_subset(
@@ -103,19 +85,21 @@ def hw_gamma_grid(hw: AnalogRBFModel, n: int = 7) -> np.ndarray:
     return np.logspace(-1.0, np.log10(g_cap), n)
 
 
-def explore(
+def default_hw(seed: int = 0) -> AnalogRBFModel:
+    """The default calibrated analog behavioral model (one fabricated core)."""
+    return AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(seed))
+
+
+def train_pairs(
     x_train: np.ndarray,
     y_train: np.ndarray,
     n_classes: int,
     hw: Optional[AnalogRBFModel] = None,
-    weight_bits: int = 8,
-    input_bits: int = 4,
     n_epochs: int = 200,
     seed: int = 0,
     tie_margin: float = 0.005,
-    alpha_floor_rel: float = 1.0 / 256.0,
-) -> ExplorationResult:
-    """Run Algorithm 1 and deploy every design point of Table II.
+) -> list[PairResult]:
+    """Run the Algorithm-1 training loop: one PairResult per OvO pair.
 
     ``tie_margin`` realizes line 8's "RBF only when strictly better" under
     finite-sample CV accuracy: RBF must win by more than the margin (the
@@ -128,7 +112,7 @@ def explore(
     SVMs") — this is what keeps circuit accuracy within ~1% of software.
     """
     if hw is None:
-        hw = AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(seed))
+        hw = default_hw(seed)
 
     # One shared callable => one jit cache entry across pairs/grids.
     hw_kernel = hw.kernel_response
@@ -156,21 +140,36 @@ def explore(
                 model_linear=m_lin, model_rbf=m_rbf, model_hw=m_hw,
             )
         )
+    return pairs
 
+
+def build_banks(
+    pairs: list[PairResult],
+    n_classes: int,
+    hw: Optional[AnalogRBFModel] = None,
+    weight_bits: int = 8,
+    input_bits: int = 4,
+    seed: int = 0,
+    alpha_floor_rel: float = 1.0 / 256.0,
+) -> dict[str, MulticlassSVM]:
+    """Deploy every design point of Table II as an object bank.
+
+    Returns a dict keyed by ``BANK_TARGETS``:
+
+      float        mixed, software float models (Algorithm-1 selection)
+      circuit      mixed, deployed: digital linear + ANALOG rbf
+      linear       all-linear, deployed digital
+      rbf          all-RBF, deployed DIGITAL (the costly baseline)
+      linear_float / rbf_float   float counterparts of the baselines
+    """
+    if hw is None:
+        hw = default_hw(seed)
     kmap = [p.kernel for p in pairs]
 
     def multi(classifiers, kernel_map):
         return MulticlassSVM(n_classes=n_classes, classifiers=classifiers,
                              kernel_map=kernel_map)
 
-    # Float models -----------------------------------------------------------
-    mixed_float = multi([_FloatBit(p.model) for p in pairs], kmap)
-    linear_float = multi([_FloatBit(p.model_linear) for p in pairs],
-                         ["linear"] * len(pairs))
-    rbf_float = multi([_FloatBit(p.model_rbf) for p in pairs],
-                      ["rbf"] * len(pairs))
-
-    # Deployed models ---------------------------------------------------------
     def deploy_linear(m):
         return DigitalLinearClassifier.deploy(m, weight_bits, input_bits)
 
@@ -180,22 +179,93 @@ def explore(
     def deploy_analog_rbf(m):
         return AnalogBinaryClassifier.deploy(m, hw, alpha_floor_rel=alpha_floor_rel)
 
-    mixed_circuit = multi(
-        [
-            deploy_analog_rbf(p.model) if p.kernel == "rbf"
-            else deploy_linear(p.model)
-            for p in pairs
-        ],
-        kmap,
-    )
-    linear_circuit = multi([deploy_linear(p.model_linear) for p in pairs],
-                           ["linear"] * len(pairs))
-    rbf_circuit = multi([deploy_digital_rbf(p.model_rbf) for p in pairs],
-                        ["rbf"] * len(pairs))
+    return {
+        "float": multi([FloatBitClassifier(p.model) for p in pairs], kmap),
+        "linear_float": multi(
+            [FloatBitClassifier(p.model_linear) for p in pairs],
+            ["linear"] * len(pairs)),
+        "rbf_float": multi(
+            [FloatBitClassifier(p.model_rbf) for p in pairs],
+            ["rbf"] * len(pairs)),
+        "circuit": multi(
+            [
+                deploy_analog_rbf(p.model) if p.kernel == "rbf"
+                else deploy_linear(p.model)
+                for p in pairs
+            ],
+            kmap),
+        "linear": multi([deploy_linear(p.model_linear) for p in pairs],
+                        ["linear"] * len(pairs)),
+        "rbf": multi([deploy_digital_rbf(p.model_rbf) for p in pairs],
+                     ["rbf"] * len(pairs)),
+    }
 
+
+# ---------------------------------------------------------------------------
+# Deprecated shim (pre-redesign API)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    """DEPRECATED grab-bag result of the old ``explore`` API.
+
+    New code should use ``repro.api.MixedKernelSVM`` (estimator) and
+    ``repro.api.compile_machine`` (single batched inference path).  This
+    container is kept so old call sites keep working; it is assembled from
+    ``train_pairs`` + ``build_banks``.
+    """
+
+    n_classes: int
+    pairs: list[PairResult]
+    kernel_map: list[str]
+    # float (software) models
+    mixed_float: MulticlassSVM
+    linear_float: MulticlassSVM
+    rbf_float: MulticlassSVM
+    # deployed (circuit) models
+    mixed_circuit: MulticlassSVM     # digital linear + ANALOG rbf
+    linear_circuit: MulticlassSVM    # all digital linear
+    rbf_circuit: MulticlassSVM       # all DIGITAL rbf (the costly baseline)
+
+    @property
+    def n_rbf(self) -> int:
+        return sum(k == "rbf" for k in self.kernel_map)
+
+
+def explore(
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    n_classes: int,
+    hw: Optional[AnalogRBFModel] = None,
+    weight_bits: int = 8,
+    input_bits: int = 4,
+    n_epochs: int = 200,
+    seed: int = 0,
+    tie_margin: float = 0.005,
+    alpha_floor_rel: float = 1.0 / 256.0,
+) -> ExplorationResult:
+    """DEPRECATED: run Algorithm 1 and deploy every design point of Table II.
+
+    Use ``repro.api.MixedKernelSVM(...).fit(x, y)`` instead; it exposes the
+    same design points through ``bank(target)`` / ``deploy(target)`` and adds
+    the compiled batched inference path and serialization.
+    """
+    warnings.warn(
+        "selection.explore / ExplorationResult are deprecated; use "
+        "repro.api.MixedKernelSVM (see DESIGN.md §1).",
+        DeprecationWarning, stacklevel=2,
+    )
+    if hw is None:
+        hw = default_hw(seed)
+    pairs = train_pairs(x_train, y_train, n_classes, hw=hw,
+                        n_epochs=n_epochs, seed=seed, tie_margin=tie_margin)
+    banks = build_banks(pairs, n_classes, hw=hw, weight_bits=weight_bits,
+                        input_bits=input_bits, seed=seed,
+                        alpha_floor_rel=alpha_floor_rel)
     return ExplorationResult(
-        n_classes=n_classes, pairs=pairs, kernel_map=kmap,
-        mixed_float=mixed_float, linear_float=linear_float, rbf_float=rbf_float,
-        mixed_circuit=mixed_circuit, linear_circuit=linear_circuit,
-        rbf_circuit=rbf_circuit,
+        n_classes=n_classes, pairs=pairs, kernel_map=[p.kernel for p in pairs],
+        mixed_float=banks["float"], linear_float=banks["linear_float"],
+        rbf_float=banks["rbf_float"], mixed_circuit=banks["circuit"],
+        linear_circuit=banks["linear"], rbf_circuit=banks["rbf"],
     )

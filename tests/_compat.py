@@ -1,0 +1,43 @@
+"""Hypothesis compatibility shim for bare environments.
+
+The tier-1 command (`python -m pytest -x -q`) must collect and run on an
+environment without ``hypothesis`` installed.  Property tests use
+:func:`property_test` below: under hypothesis they run as real ``@given``
+property tests; without it they degrade to a parametrized sweep over a
+hand-picked set of representative/edge-case examples.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare environment — fixed-example fallback
+    HAVE_HYPOTHESIS = False
+    given = settings = st = None
+
+
+def property_test(fixed_examples, strategies=None, max_examples=50):
+    """Property-test decorator with a fixed-example fallback.
+
+    ``strategies`` is a callable ``st -> tuple of strategies`` (lazy, so the
+    module imports cleanly when hypothesis is absent).  ``fixed_examples`` is
+    a list of argument tuples exercised instead when hypothesis is missing.
+    """
+
+    def wrap(fn):
+        if HAVE_HYPOTHESIS and strategies is not None:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(*strategies(st))(fn)
+            )
+
+        def runner(case):
+            fn(*case)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return pytest.mark.parametrize("case", list(fixed_examples))(runner)
+
+    return wrap

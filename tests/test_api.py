@@ -1,0 +1,222 @@
+"""Tests for the unified estimator + compiled-machine API (repro.api).
+
+Covers the tentpole guarantees of the redesign:
+
+  * compiled-vs-object-path equivalence on the quickstart dataset for every
+    bank (float, circuit, linear, rbf and the float baselines) — BIT-EXACT
+    on Balance Scale;
+  * on the surrogate datasets, equivalence modulo comparator-metastable
+    samples (|score| below f32 noise: the legacy object path itself flips
+    those with batch size, see DESIGN.md §1.4);
+  * save/load round-trips (estimator and compiled machine) with identical
+    predictions and no retraining;
+  * lowering from a bare classifier list;
+  * the uniform-grid fast interpolation against jnp.interp.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import CompiledMachine, MixedKernelSVM, compile_machine
+from repro.data import datasets
+
+# Scores this close to the comparator threshold are metastable: the legacy
+# per-classifier path itself decides them differently depending on BLAS
+# batch shape (f32 accumulation-order noise).
+TIE_EPS = 1e-5
+
+
+@pytest.fixture(scope="module")
+def balance():
+    ds = datasets.load("balance")
+    est = MixedKernelSVM(n_epochs=60, seed=0).fit(ds.x_train, ds.y_train)
+    return ds, est
+
+
+def test_fit_populates_machine(balance):
+    _, est = balance
+    assert est.n_classes_ == 3
+    assert len(est.pairs_) == 3
+    assert set(est.kernel_map_) <= {"linear", "rbf"}
+    assert est.n_rbf_ >= 1  # Balance's torque boundary needs an RBF pair
+
+
+@pytest.mark.parametrize("target", ["float", "circuit", "linear", "rbf",
+                                    "linear_float", "rbf_float"])
+def test_compiled_bit_exact_on_balance(balance, target):
+    """The compiled machine reproduces the object path bit-for-bit on the
+    quickstart dataset: every pair bit and every label, train and test."""
+    ds, est = balance
+    bank = est.bank(target)
+    machine = est.deploy(target)
+    for x in (ds.x_train, ds.x_test):
+        np.testing.assert_array_equal(machine.predict_bits(x),
+                                      bank.predict_bits(x))
+        np.testing.assert_array_equal(machine.predict(x), bank.predict(x))
+
+
+@pytest.mark.parametrize("name", ["seeds", "vertebral"])
+def test_compiled_equivalent_on_surrogates(name):
+    """On the surrogate datasets equivalence holds except for samples whose
+    decision score is metastable (within TIE_EPS of the comparator
+    threshold), where the legacy path is itself batch-shape-dependent."""
+    ds = datasets.load(name)
+    est = MixedKernelSVM(n_epochs=40, seed=0).fit(ds.x_train, ds.y_train)
+    for target in ("float", "circuit", "linear", "rbf"):
+        bank = est.bank(target)
+        machine = est.deploy(target)
+        for x in (ds.x_train, ds.x_test):
+            b_obj = bank.predict_bits(x)
+            b_cmp = machine.predict_bits(x)
+            scores = machine.decision_scores(x)
+            stable = np.abs(scores) > TIE_EPS
+            np.testing.assert_array_equal(b_cmp[stable], b_obj[stable])
+
+
+def test_score_matches_object_accuracy(balance):
+    ds, est = balance
+    assert est.score(ds.x_test, ds.y_test, target="circuit") == \
+        pytest.approx(est.bank("circuit").accuracy(ds.x_test, ds.y_test))
+
+
+def test_compile_from_classifier_list(balance):
+    ds, est = balance
+    bank = est.bank("circuit")
+    machine = compile_machine(list(bank.classifiers), n_classes=3)
+    np.testing.assert_array_equal(machine.predict(ds.x_test),
+                                  bank.predict(ds.x_test))
+    with pytest.raises(ValueError):
+        compile_machine(list(bank.classifiers))  # n_classes required
+
+
+def test_compile_rejects_unknown_classifier():
+    with pytest.raises(TypeError):
+        compile_machine([object(), object(), object()], n_classes=3)
+
+
+def test_estimator_save_load_roundtrip(balance, tmp_path):
+    ds, est = balance
+    path = os.path.join(tmp_path, "machine")
+    est.save(path)
+    assert os.path.exists(path + ".npz") and os.path.exists(path + ".json")
+    est2 = MixedKernelSVM.load(path)
+    assert est2.kernel_map_ == est.kernel_map_
+    for target in est.targets:
+        np.testing.assert_array_equal(
+            est2.predict(ds.x_test, target=target),
+            est.predict(ds.x_test, target=target))
+        np.testing.assert_array_equal(
+            est2.predict_bits(ds.x_test, target=target),
+            est.predict_bits(ds.x_test, target=target))
+
+
+def test_compiled_machine_save_load_roundtrip(balance, tmp_path):
+    ds, est = balance
+    machine = est.deploy("circuit")
+    path = os.path.join(tmp_path, "compiled")
+    machine.save(path)
+    loaded = CompiledMachine.load(path)
+    assert loaded.n_classes == machine.n_classes
+    assert loaded.kernel_map == machine.kernel_map
+    np.testing.assert_array_equal(loaded.predict(ds.x_test),
+                                  machine.predict(ds.x_test))
+    np.testing.assert_array_equal(loaded.predict_bits(ds.x_test),
+                                  machine.predict_bits(ds.x_test))
+    np.testing.assert_allclose(loaded.decision_scores(ds.x_test),
+                               machine.decision_scores(ds.x_test))
+
+
+def test_fit_rejects_bad_labels():
+    x = np.zeros((6, 2))
+    with pytest.raises(ValueError):          # class 1 absent
+        MixedKernelSVM().fit(x, np.array([0, 0, 2, 2, 2, 0]))
+    with pytest.raises(ValueError):          # single class
+        MixedKernelSVM().fit(x, np.zeros(6, np.int64))
+
+
+def test_unfitted_estimator_raises():
+    est = MixedKernelSVM()
+    with pytest.raises(RuntimeError):
+        est.bank("circuit")
+    with pytest.raises(RuntimeError):
+        est.predict(np.zeros((2, 4)))
+
+
+def test_unknown_target_raises(balance):
+    _, est = balance
+    with pytest.raises(KeyError):
+        est.bank("nonsense")
+
+
+def test_uniform_interp_matches_jnp_interp():
+    """The O(1) bin-location interpolation tracks jnp.interp to ~1e-6 (the
+    fraction's f32 rounding times the max segment slope) on a calibrated
+    DC-sweep grid, including nodes, node neighbourhoods and out-of-range
+    clamps."""
+    import jax.numpy as jnp
+
+    from repro.api.compiled import _grid_fast_path, _uniform_interp
+    from repro.core import analog
+
+    hw = analog.AnalogRBFModel.from_circuit()
+    grid = np.asarray(hw.dv_grid, np.float32)
+    curve = np.asarray(hw.kernel_curve, np.float32)
+    fp = _grid_fast_path(grid)
+    assert fp["uniform_grid"]
+    rng = np.random.RandomState(0)
+    v = np.concatenate([
+        rng.uniform(grid[0] * 1.5, grid[-1] * 1.5, 20000).astype(np.float32),
+        grid, np.nextafter(grid, np.inf), np.nextafter(grid, -np.inf)])
+    ref = jnp.interp(jnp.asarray(v), jnp.asarray(grid), jnp.asarray(curve),
+                     left=float(curve[0]), right=float(curve[-1]))
+    fast = _uniform_interp(jnp.asarray(v), jnp.asarray(curve),
+                           jnp.asarray(grid)[0], jnp.asarray(grid)[-1],
+                           float(curve[0]), float(curve[-1]),
+                           jnp.float32(fp["inv_step"]))
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                               atol=1e-6, rtol=0)
+
+
+def test_pallas_dispatch_agrees_with_jnp_path(balance):
+    """use_pallas=True routes rbf banks through the tiled Pallas kernel
+    (interpreter off-TPU); bits must agree with the jnp dispatch and the
+    object path on a small batch."""
+    ds, est = balance
+    bank = est.bank("rbf")
+    cm_pallas = compile_machine(bank, use_pallas=True)
+    cm_jnp = compile_machine(bank, use_pallas=False)
+    x = ds.x_test[:32]
+    np.testing.assert_array_equal(cm_pallas.predict_bits(x),
+                                  cm_jnp.predict_bits(x))
+    np.testing.assert_array_equal(cm_pallas.predict_bits(x),
+                                  bank.predict_bits(x))
+
+
+def test_compiled_machine_describe(balance):
+    _, est = balance
+    text = est.deploy("circuit").describe()
+    assert "CompiledMachine(K=3, P=3)" in text
+    assert "linear bank" in text and "hw bank" in text
+
+
+def test_votes_fallback_matches_table():
+    """Machines beyond the truth-table regime (P > MAX_TABLE_BITS) decide
+    via the votes matmul — same semantics as the packed encoder."""
+    from repro.core import ovo, svm as svm_mod
+
+    rng = np.random.RandomState(0)
+    k = 6  # 15 pairs > MAX_TABLE_BITS
+    x = rng.rand(200, 3)
+    y = rng.randint(0, k, 200)
+    clfs = []
+    for (ci, cj) in ovo.class_pairs(k):
+        mask = (y == ci) | (y == cj)
+        yy = np.where(y[mask] == ci, 1.0, -1.0)
+        m = svm_mod.train_binary(x[mask], yy, "linear", c=1.0, n_epochs=40)
+        clfs.append(ovo.FloatBitClassifier(m))
+    machine = compile_machine(clfs, n_classes=k)
+    assert machine._table is None  # votes path engaged
+    bits = machine.predict_bits(x)
+    np.testing.assert_array_equal(machine.predict(x),
+                                  ovo.decide_votes(bits, k))

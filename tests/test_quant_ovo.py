@@ -1,7 +1,13 @@
-"""Quantization + OvO/encoder tests (paper Sec. III-C, V-A2)."""
+"""Quantization + OvO/encoder tests (paper Sec. III-C, V-A2).
+
+The property tests use hypothesis when it is installed; on a bare
+environment they fall back to a fixed set of representative examples so
+`python -m pytest -x -q` still collects and runs.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _compat import property_test
 
 from repro.core import ovo, quant
 
@@ -9,9 +15,13 @@ from repro.core import ovo, quant
 # -- quantization -----------------------------------------------------------
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.floats(-2.0, 3.0), min_size=1, max_size=40),
-       st.integers(2, 8))
+@property_test(
+    fixed_examples=[([0.0, 1.0, 0.5], 4), ([-2.0, 3.0, 0.3, 0.7], 2),
+                    ([0.123, 0.456, 0.789], 8), ([1e-9, 1.0 - 1e-9], 6)],
+    strategies=lambda st: (
+        st.lists(st.floats(-2.0, 3.0), min_size=1, max_size=40),
+        st.integers(2, 8)),
+)
 def test_quantize_unit_bounds_and_idempotence(vals, bits):
     x = np.asarray(vals)
     q = np.asarray(quant.quantize_unit(x, bits))
@@ -27,9 +37,13 @@ def test_quantize_unit_bounds_and_idempotence(vals, bits):
         assert np.max(np.abs(q[inr] - x[inr])) <= lsb / 2 + 1e-6
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.floats(-100, 100), min_size=1, max_size=30),
-       st.integers(4, 12))
+@property_test(
+    fixed_examples=[([-100.0, 100.0, 0.0], 4), ([0.001, -0.002, 0.5], 8),
+                    ([99.9, -99.9, 1.0, -1.0], 12), ([3.14159, -2.71828], 6)],
+    strategies=lambda st: (
+        st.lists(st.floats(-100, 100), min_size=1, max_size=30),
+        st.integers(4, 12)),
+)
 def test_fixed_point_bound(vals, bits):
     x = np.asarray(vals, np.float64)
     xq, fp = quant.quantize_tensor(x, bits)

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _compat import property_test
 
 from repro.core import kernels as kern
 from repro.core import svm as svm_mod
@@ -62,9 +63,12 @@ def test_masked_samples_stay_zero():
     assert np.all(alpha[::2] == 0.0)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 30), st.integers(1, 5),
-       st.floats(0.1, 50.0))
+@property_test(
+    fixed_examples=[(1, 1, 0.1), (30, 5, 50.0), (7, 3, 5.0), (16, 2, 1.0)],
+    strategies=lambda st: (st.integers(1, 30), st.integers(1, 5),
+                           st.floats(0.1, 50.0)),
+    max_examples=25,
+)
 def test_rbf_kernel_properties(n, d, gamma):
     """K symmetric, K(x,x)=1, 0 < K <= 1 (hypothesis property test)."""
     rng = np.random.RandomState(n * 7 + d)
@@ -78,8 +82,11 @@ def test_rbf_kernel_properties(n, d, gamma):
     assert np.all(k >= 0) and np.all(k <= 1 + tol)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 20), st.integers(1, 5))
+@property_test(
+    fixed_examples=[(2, 1), (20, 5), (9, 3), (12, 2)],
+    strategies=lambda st: (st.integers(2, 20), st.integers(1, 5)),
+    max_examples=25,
+)
 def test_rbf_kernel_psd(n, d):
     rng = np.random.RandomState(n * 13 + d)
     x = jnp.asarray(rng.rand(n, d), jnp.float32)

@@ -1,65 +1,78 @@
 """End-to-end behaviour tests for the paper's system (Table II flow)."""
-import jax
 import numpy as np
 import pytest
 
+from repro.api import MixedKernelSVM
 from repro.core import hwcost, mixed_precision, selection
 from repro.data import datasets
 
 
 @pytest.fixture(scope="module")
-def balance_result():
+def balance_est():
     ds = datasets.load("balance")
-    res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
-                            n_epochs=100, seed=0)
-    return ds, res
+    est = MixedKernelSVM(n_epochs=100, seed=0).fit(ds.x_train, ds.y_train)
+    return ds, est
 
 
-def test_algorithm1_selects_mixed_kernels(balance_result):
-    _, res = balance_result
+def test_algorithm1_selects_mixed_kernels(balance_est):
+    _, est = balance_est
     # Balance has one genuinely non-linear pair (the L/R torque boundary
     # is multiplicative) — Algorithm 1 must keep at least one RBF and at
     # least one linear classifier (Table II: 1/2).
-    assert 1 <= res.n_rbf <= 2
-    assert res.n_rbf + sum(k == "linear" for k in res.kernel_map) == 3
+    assert 1 <= est.n_rbf_ <= 2
+    assert est.n_rbf_ + sum(k == "linear" for k in est.kernel_map_) == 3
 
 
-def test_mixed_beats_or_equals_linear(balance_result):
-    ds, res = balance_result
-    acc_mixed = res.mixed_circuit.accuracy(ds.x_test, ds.y_test)
-    acc_lin = res.linear_circuit.accuracy(ds.x_test, ds.y_test)
+def test_mixed_beats_or_equals_linear(balance_est):
+    ds, est = balance_est
+    acc_mixed = est.score(ds.x_test, ds.y_test, target="circuit")
+    acc_lin = est.score(ds.x_test, ds.y_test, target="linear")
     assert acc_mixed >= acc_lin - 0.01
 
 
-def test_circuit_tracks_float_within_1pct(balance_result):
+def test_circuit_tracks_float_within_1pct(balance_est):
     """Paper: circuit accuracy within ~1% of software."""
-    ds, res = balance_result
-    f = res.mixed_float.accuracy(ds.x_test, ds.y_test)
-    c = res.mixed_circuit.accuracy(ds.x_test, ds.y_test)
+    ds, est = balance_est
+    f = est.score(ds.x_test, ds.y_test, target="float")
+    c = est.score(ds.x_test, ds.y_test, target="circuit")
     assert abs(f - c) <= 0.015
 
 
-def test_cost_ordering_matches_paper(balance_result):
+def test_cost_ordering_matches_paper(balance_est):
     """linear << mixed << digital-RBF in area; RBF digital is the power
     hog (Table II orderings)."""
-    _, res = balance_result
+    _, est = balance_est
     cm = hwcost.CostModel()
-    lin = hwcost.system_cost(res.linear_circuit, cm)
-    mix = hwcost.system_cost(res.mixed_circuit, cm)
-    rbf = hwcost.system_cost(res.rbf_circuit, cm)
+    lin = hwcost.system_cost(est.bank("linear"), cm)
+    mix = hwcost.system_cost(est.bank("circuit"), cm)
+    rbf = hwcost.system_cost(est.bank("rbf"), cm)
     assert lin.area_mm2 < mix.area_mm2 < rbf.area_mm2
     assert lin.power_mw < mix.power_mw < rbf.power_mw
     assert rbf.area_mm2 / mix.area_mm2 > 20     # paper: ~108x average
     assert rbf.power_mw / mix.power_mw > 5      # paper: ~17x average
 
 
-def test_analog_power_dominates_mixed(balance_result):
+def test_analog_power_dominates_mixed(balance_est):
     """Fig. 5: analog RBF dominates mixed power (~89%)."""
-    _, res = balance_result
+    _, est = balance_est
     cm = hwcost.CostModel()
-    mix = hwcost.system_cost(res.mixed_circuit, cm)
-    if res.n_rbf:
+    mix = hwcost.system_cost(est.bank("circuit"), cm)
+    if est.n_rbf_:
         assert mix.analog_power_frac > 0.5
+
+
+def test_deprecated_explore_shim_still_works():
+    """The old grab-bag API keeps working (with a DeprecationWarning) and
+    agrees with the estimator path."""
+    ds = datasets.load("balance")
+    with pytest.warns(DeprecationWarning):
+        res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
+                                n_epochs=40, seed=0)
+    est = MixedKernelSVM(n_epochs=40, seed=0).fit(ds.x_train, ds.y_train)
+    assert res.kernel_map == est.kernel_map_
+    np.testing.assert_array_equal(
+        res.mixed_circuit.predict(ds.x_test),
+        est.bank("circuit").predict(ds.x_test))
 
 
 def test_calibration_improves_fit():
@@ -67,9 +80,8 @@ def test_calibration_improves_fit():
     sys_by_ds = {}
     for name in ("balance", "seeds", "vertebral"):
         ds = datasets.load(name)
-        res = selection.explore(ds.x_train, ds.y_train, ds.n_classes,
-                                n_epochs=60, seed=0)
-        sys_by_ds[name] = res.linear_circuit
+        est = MixedKernelSVM(n_epochs=60, seed=0).fit(ds.x_train, ds.y_train)
+        sys_by_ds[name] = est.bank("linear")
     cm = hwcost.calibrate_digital(sys_by_ds)
     err = 0.0
     for name, sys in sys_by_ds.items():
