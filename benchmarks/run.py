@@ -1,13 +1,27 @@
 """Benchmark orchestrator: one entry per paper table/figure + kernels +
-roofline.  Prints ``name,us_per_call,derived`` style CSV blocks."""
+roofline.  Prints ``name,us_per_call,derived`` style CSV blocks.
+
+``--json PATH`` additionally aggregates every machine-readable sub-result
+(currently svm_infer and svm_train; more as benchmarks grow JSON output)
+into one file suitable for BENCH_*.json trajectory tracking.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write aggregated machine-readable results here")
+    args = ap.parse_args()
+
     t0 = time.time()
+    results: dict[str, dict] = {}
+
     print("== Fig. 4: analog behavioral-model fidelity ==")
     from benchmarks import fig4
     fig4.run()
@@ -22,7 +36,11 @@ def main() -> None:
 
     print("\n== SVM inference: object path vs compiled machine ==")
     from benchmarks import svm_infer
-    svm_infer.run()
+    results["svm_infer"] = svm_infer.run()
+
+    print("\n== SVM training: sequential loop vs batched engine ==")
+    from benchmarks import svm_train
+    results["svm_train"] = svm_train.run()
 
     print("\n== Kernel micro-bench (Pallas interpret vs jnp oracle) ==")
     from benchmarks import kernelbench
@@ -35,7 +53,15 @@ def main() -> None:
     else:
         print("\n(roofline skipped: run `python -m repro.launch.dryrun "
               "--all --mesh both` first)")
-    print(f"\ntotal_bench_seconds,{time.time() - t0:.1f}")
+    total = time.time() - t0
+    print(f"\ntotal_bench_seconds,{total:.1f}")
+
+    if args.json:
+        payload = {"total_bench_seconds": round(total, 1), **results}
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"aggregated JSON -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,172 @@
+"""SVM training benchmark: sequential Algorithm-1 loop vs batched engine.
+
+Times end-to-end training (Algorithm 1 with hardware-in-the-loop
+co-optimization) on Balance Scale, cold-start each path (``jax.clear_caches``
+first, so every run pays its own jit compiles), and counts XLA compilations
+per path via the ``jax_log_compiles`` log stream.  The batched engine must
+compile O(1) programs per kernel family — ``--max-family-compiles`` turns
+that into a hard assertion so per-pair recompilation regressions fail CI
+loudly.  Emits a JSON record for the perf trajectory:
+
+  PYTHONPATH=src python benchmarks/svm_train.py [--out runs/svm_train.json]
+
+The sequential path is ``selection.train_pairs_sequential`` (2-3 `fit_best`
+per OvO pair; every pair's unique subset size forces fresh compiles); the
+batched path is ``repro.core.trainer.train_pairs`` (all pairs x folds x
+grid in one program per family).  Kernel maps and hyper-parameter
+selections are asserted equal before timings are reported.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import logging
+import re
+import time
+
+import numpy as np
+
+#: Names of the batched engine's jitted entry points; each should compile
+#: once per kernel family (3 families), never once per pair.
+ENGINE_PROGRAMS = ("_family_program", "_cv_grid_all_pairs",
+                   "_refit_all_pairs")
+
+_COMPILE_RE = re.compile(r"Finished XLA compilation of jit\(([^)]*)\)")
+
+
+class _CompileCounter(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.WARNING)
+        self.names: list[str] = []
+
+    def emit(self, record: logging.LogRecord) -> None:
+        m = _COMPILE_RE.search(record.getMessage())
+        if m:
+            self.names.append(m.group(1))
+
+    def count(self, prefix: str | None = None) -> int:
+        if prefix is None:
+            return len(self.names)
+        return sum(1 for n in self.names if n.startswith(prefix))
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Count XLA compilations via the jax_log_compiles WARNING stream."""
+    import jax
+
+    handler = _CompileCounter()
+    null = logging.NullHandler()
+    logger = logging.getLogger("jax._src.dispatch")
+    # pxla also logs one "Compiling <name>" WARNING per compile; keep both
+    # quiet while counting.  propagate=False alone is not enough — a logger
+    # with no handlers routes records to logging.lastResort (stderr), so
+    # each gets a NullHandler too.
+    loggers = [logger, logging.getLogger("jax._src.interpreters.pxla")]
+    prev = jax.config.jax_log_compiles
+    prev_propagate = [lg.propagate for lg in loggers]
+    jax.config.update("jax_log_compiles", True)
+    logger.addHandler(handler)
+    for lg in loggers:
+        lg.addHandler(null)
+        lg.propagate = False
+    try:
+        yield handler
+    finally:
+        logger.removeHandler(handler)
+        for lg, p in zip(loggers, prev_propagate):
+            lg.removeHandler(null)
+            lg.propagate = p
+        jax.config.update("jax_log_compiles", False if not prev else prev)
+
+
+def run(n_epochs: int = 200, seed: int = 0, verbose: bool = True,
+        max_family_compiles: int | None = None) -> dict:
+    import jax
+
+    from repro.core import selection, trainer
+    from repro.data import datasets
+
+    ds = datasets.load("balance")
+    k = ds.n_classes
+
+    # One throwaway op so backend/BLAS init is not billed to either path.
+    np.asarray(jax.numpy.ones((8, 8)) @ jax.numpy.ones((8, 8)))
+
+    jax.clear_caches()
+    with count_compiles() as cc_seq:
+        t0 = time.perf_counter()
+        pairs_seq = selection.train_pairs_sequential(
+            ds.x_train, ds.y_train, k, n_epochs=n_epochs, seed=seed)
+        t_seq = time.perf_counter() - t0
+
+    jax.clear_caches()
+    with count_compiles() as cc_bat:
+        t0 = time.perf_counter()
+        pairs_bat = trainer.train_pairs(
+            ds.x_train, ds.y_train, k, n_epochs=n_epochs, seed=seed)
+        t_bat = time.perf_counter() - t0
+
+    map_seq = [p.kernel for p in pairs_seq]
+    map_bat = [p.kernel for p in pairs_bat]
+    if map_seq != map_bat:
+        raise AssertionError(
+            f"kernel maps diverge: sequential {map_seq} vs batched {map_bat}")
+    for ps, pb in zip(pairs_seq, pairs_bat):
+        if (ps.model.gamma, ps.model.c) != (pb.model.gamma, pb.model.c):
+            raise AssertionError(
+                f"pair {ps.pair}: selected ({ps.model.gamma}, {ps.model.c}) "
+                f"vs ({pb.model.gamma}, {pb.model.c})")
+
+    family_compiles = {name: cc_bat.count(name) for name in ENGINE_PROGRAMS}
+    result = {
+        "benchmark": "svm_train",
+        "dataset": "balance",
+        "n_epochs": n_epochs,
+        "kernel_map": map_bat,
+        "sequential_s": round(t_seq, 3),
+        "batched_s": round(t_bat, 3),
+        "speedup": round(t_seq / t_bat, 2),
+        "compiles_sequential": cc_seq.count(),
+        "compiles_batched": cc_bat.count(),
+        "engine_family_compiles": family_compiles,
+    }
+    if verbose:
+        print("path,seconds,xla_compiles")
+        print(f"sequential,{result['sequential_s']},"
+              f"{result['compiles_sequential']}")
+        print(f"batched,{result['batched_s']},{result['compiles_batched']}")
+        print(f"speedup,{result['speedup']}x")
+        print(json.dumps(result))
+
+    if max_family_compiles is not None:
+        n_fam = sum(family_compiles.values())
+        print(f"compile-count assertion: {n_fam} engine-program compiles "
+              f"(limit {max_family_compiles}) -> "
+              f"{'OK' if n_fam <= max_family_compiles else 'FAIL'}")
+        if n_fam > max_family_compiles:
+            raise AssertionError(
+                f"batched engine compiled {n_fam} family programs "
+                f"(> {max_family_compiles}): per-pair recompilation "
+                f"regression — check that padding keeps shapes static")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write JSON here as well")
+    ap.add_argument("--n-epochs", type=int, default=200)
+    ap.add_argument("--max-family-compiles", type=int, default=None,
+                    help="fail if the engine compiles more than this many "
+                         "family programs (3 kernel families -> 3 expected)")
+    args = ap.parse_args()
+    result = run(n_epochs=args.n_epochs,
+                 max_family_compiles=args.max_family_compiles)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,18 @@ Two first-class objects replace the old ``selection.explore`` grab-bag:
   the tiled Pallas kernel (TPU) or its identical-math jnp path (CPU), the
   analog pairs through the calibrated measured-curve kernel, and the packed
   decision encoder — a single device round-trip per batch.
+
+The training side is the batched Algorithm-1 engine (DESIGN.md §4),
+re-exported here from ``repro.core.trainer``: :func:`train_pairs` runs all
+OvO pairs x CV folds x (C, gamma) grid cells in one compiled program per
+kernel family; :func:`pad_pairs` / :class:`PaddedPairs` expose the padded
+pair stack it operates on.
 """
 from repro.api.compiled import CompiledMachine, compile_machine
 from repro.api.estimator import MixedKernelSVM
+from repro.core.trainer import PaddedPairs, PairResult, pad_pairs, train_pairs
 
-__all__ = ["CompiledMachine", "compile_machine", "MixedKernelSVM"]
+__all__ = [
+    "CompiledMachine", "compile_machine", "MixedKernelSVM",
+    "PaddedPairs", "PairResult", "pad_pairs", "train_pairs",
+]

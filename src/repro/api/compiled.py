@@ -254,45 +254,14 @@ class _KernelBank:
         )
 
 
-def _grid_is_uniform(grid: np.ndarray, rel_tol: float = 1e-3) -> bool:
-    """True when ``grid`` is a cast linspace (the DC-sweep abscissa)."""
-    steps = np.diff(np.asarray(grid, np.float64))
-    if steps.size == 0 or np.any(steps <= 0):
-        return False
-    mean = steps.mean()
-    return bool(np.max(np.abs(steps - mean)) <= rel_tol * abs(mean))
-
-
-def _uniform_interp(v, curve, lo, hi, left, right, inv_step):
-    """``jnp.interp`` on a uniform ascending grid: O(1) bin location.
-
-    The DC-sweep abscissa is a linspace, so the segment index and the
-    interpolation fraction come from one multiply (``u = (v-lo)*inv_step``)
-    instead of a per-query binary search, and only the two bracketing curve
-    values are gathered.  The result tracks ``jnp.interp`` to ~1e-6 (the
-    fraction's f32 rounding times the max segment slope; same order as the
-    eager-vs-jit fusion noise the compiled path already carries);
-    out-of-range queries clamp to ``left``/``right`` exactly like the
-    behavioral model's ``kernel_1d``.
-    """
-    n_seg = curve.shape[0] - 1
-    u = (v - lo) * inv_step
-    i = jnp.clip(jnp.floor(u).astype(jnp.int32), 0, n_seg - 1)
-    t = u - i.astype(jnp.float32)
-    f0 = jnp.take(curve, i)
-    f1 = jnp.take(curve, i + 1)
-    f = f0 + t * (f1 - f0)
-    f = jnp.where(v < lo, left, f)
-    f = jnp.where(v > hi, right, f)
-    return f
-
-
-def _grid_fast_path(grid) -> dict:
-    if grid is None or not _grid_is_uniform(grid):
-        return {"uniform_grid": False, "inv_step": 0.0}
-    g = np.asarray(grid, np.float64)
-    return {"uniform_grid": True,
-            "inv_step": float((g.shape[0] - 1) / (g[-1] - g[0]))}
+# Uniform-grid fast-path helpers now live in repro.core.kernels (the batched
+# trainer uses them for hardware-in-the-loop training too); re-exported here
+# for existing call sites and tests.
+from repro.core.kernels import (  # noqa: E402  (re-export)
+    _grid_fast_path,
+    _grid_is_uniform,
+    _uniform_interp,
+)
 
 
 def _kernel_group_key(s: _KernelSpec):

@@ -58,8 +58,10 @@ class MixedKernelSVM:
         seed: int = 0,
         tie_margin: float = 0.005,
         alpha_floor_rel: float = 1.0 / 256.0,
+        cv_epochs: Optional[int] = None,
         hw: Optional[AnalogRBFModel] = None,
         use_pallas: Optional[bool] = None,
+        mesh=None,
     ):
         self.weight_bits = weight_bits
         self.input_bits = input_bits
@@ -67,7 +69,13 @@ class MixedKernelSVM:
         self.seed = seed
         self.tie_margin = tie_margin
         self.alpha_floor_rel = alpha_floor_rel
+        # Epochs used when training CV folds during the hyper-parameter
+        # search; None keeps the historical max(60, n_epochs // 2) policy.
+        self.cv_epochs = cv_epochs
         self.use_pallas = use_pallas
+        # Optional device mesh for the batched trainer's shard_map variant
+        # (runtime-only, like `hw`/`use_pallas`: not serialized).
+        self.mesh = mesh
         self._custom_hw = hw is not None
         self.hw_ = hw
         self.pairs_: Optional[list[selection.PairResult]] = None
@@ -97,7 +105,8 @@ class MixedKernelSVM:
         self.pairs_ = selection.train_pairs(
             np.asarray(x), y, self.n_classes_, hw=self.hw_,
             n_epochs=self.n_epochs, seed=self.seed,
-            tie_margin=self.tie_margin)
+            tie_margin=self.tie_margin, cv_epochs=self.cv_epochs,
+            mesh=self.mesh)
         self._build()
         return self
 
@@ -201,6 +210,7 @@ class MixedKernelSVM:
                 "seed": self.seed,
                 "tie_margin": self.tie_margin,
                 "alpha_floor_rel": self.alpha_floor_rel,
+                "cv_epochs": self.cv_epochs,
             },
             "pairs": meta_pairs,
         }

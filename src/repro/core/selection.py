@@ -12,15 +12,25 @@ The selected float classifiers are then *deployed* to hardware:
   rbf    -> AnalogBinaryClassifier  (behavioral model of Sec. IV-A)
 and wrapped in a ``MulticlassSVM`` with the encoder decision logic.
 
-Module layout (post API redesign, DESIGN.md §1):
+Module layout (post batched-trainer refactor, DESIGN.md §1 and §4):
 
-  * ``train_pairs``   — the Algorithm-1 per-pair training loop,
+  * ``train_pairs``   — the Algorithm-1 training entry point: a thin
+                        wrapper over ``repro.core.trainer.train_pairs``,
+                        the batched engine that runs all pairs x CV folds
+                        x (C, gamma) grid cells in one compiled program
+                        per kernel family,
+  * ``train_pairs_sequential`` — the original per-pair host loop, kept as
+                        the reference path (equivalence tests, benchmark
+                        baseline); O(pairs) jit compiles,
   * ``build_banks``   — assemble every Table-II design point (float and
                         deployed) as ``MulticlassSVM`` object banks,
   * ``explore``       — DEPRECATED thin shim kept for old call sites; new
                         code uses ``repro.api.MixedKernelSVM`` which wraps
                         the two functions above and compiles the banks to a
                         single batched JAX inference path.
+
+``PairResult``, ``binary_subset``, ``default_hw`` and ``hw_gamma_grid``
+now live in ``repro.core.trainer`` and are re-exported here unchanged.
 """
 from __future__ import annotations
 
@@ -28,10 +38,10 @@ import dataclasses
 import warnings
 from typing import Optional
 
-import jax
 import numpy as np
 
 from repro.core import svm as svm_mod
+from repro.core import trainer as trainer_mod
 from repro.core.analog import AnalogBinaryClassifier, AnalogRBFModel
 from repro.core.ovo import (
     DigitalLinearClassifier,
@@ -40,6 +50,12 @@ from repro.core.ovo import (
     MulticlassSVM,
     class_pairs,
 )
+from repro.core.trainer import (  # noqa: F401  (re-exported, see docstring)
+    PairResult,
+    binary_subset,
+    default_hw,
+    hw_gamma_grid,
+)
 
 #: Design points produced by ``build_banks``: mixed float/circuit plus the
 #: all-linear and all-RBF baselines of Table II (both float and deployed).
@@ -47,47 +63,8 @@ BANK_TARGETS = ("float", "circuit", "linear", "rbf", "linear_float",
                 "rbf_float")
 
 
-@dataclasses.dataclass
-class PairResult:
-    pair: tuple[int, int]
-    kernel: str                      # selected kernel kind
-    model: svm_mod.SVMModel          # selected float model
-    acc_linear: float                # CV accuracy of the linear candidate
-    acc_rbf: float                   # CV accuracy of the RBF candidate
-    model_linear: svm_mod.SVMModel   # both candidates kept for baselines
-    model_rbf: svm_mod.SVMModel
-    # Hardware-aware co-optimized model (sech2 kernel) for analog deployment;
-    # only trained for pairs that Algorithm 1 assigns to RBF.
-    model_hw: Optional[svm_mod.SVMModel] = None
-
-
-def _binary_subset(
-    x: np.ndarray, y: np.ndarray, ci: int, cj: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Line 5: D_ij = {(x, y) in D | y in {c_i, c_j}}, labels -> {+1, -1}.
-
-    +1 encodes c_i (the pair's first class) so bit==1 <=> c_i wins.
-    """
-    mask = (y == ci) | (y == cj)
-    yy = np.where(y[mask] == ci, 1.0, -1.0)
-    return x[mask], yy
-
-
-def hw_gamma_grid(hw: AnalogRBFModel, n: int = 7) -> np.ndarray:
-    """Hardware-realizable gamma* grid for the sech2 co-optimized training.
-
-    The input scaling of Eq. (8) must keep the scaled differential voltage
-    within the cell's usable range: s * v_scale * max|dx| <= v_range with
-    max|dx| = 1 for [0,1]-normalized features.  Everything below that cap is
-    realizable; we search log-uniformly under it.
-    """
-    g_cap = hw.gamma0_feature() * (hw.params.v_range / hw.v_scale) ** 2
-    return np.logspace(-1.0, np.log10(g_cap), n)
-
-
-def default_hw(seed: int = 0) -> AnalogRBFModel:
-    """The default calibrated analog behavioral model (one fabricated core)."""
-    return AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(seed))
+#: Kept under the old private name for any straggler call sites.
+_binary_subset = binary_subset
 
 
 def train_pairs(
@@ -98,8 +75,17 @@ def train_pairs(
     n_epochs: int = 200,
     seed: int = 0,
     tie_margin: float = 0.005,
+    cv_epochs: Optional[int] = None,
+    n_folds: int = 5,
+    mesh=None,
 ) -> list[PairResult]:
-    """Run the Algorithm-1 training loop: one PairResult per OvO pair.
+    """Run Algorithm 1: one PairResult per OvO pair (batched engine).
+
+    Thin wrapper over :func:`repro.core.trainer.train_pairs`, which runs
+    all pairs x CV folds x (C, gamma) cells in ONE compiled program per
+    kernel family (O(1) jit compiles per family instead of O(pairs); see
+    DESIGN.md §4).  ``train_pairs_sequential`` keeps the original per-pair
+    loop as the reference path.
 
     ``tie_margin`` realizes line 8's "RBF only when strictly better" under
     finite-sample CV accuracy: RBF must win by more than the margin (the
@@ -111,6 +97,30 @@ def train_pairs(
     with (the paper's "co-optimization approach that trains our mixed-kernel
     SVMs") — this is what keeps circuit accuracy within ~1% of software.
     """
+    return trainer_mod.train_pairs(
+        x_train, y_train, n_classes, hw=hw, n_epochs=n_epochs, seed=seed,
+        tie_margin=tie_margin, cv_epochs=cv_epochs, n_folds=n_folds,
+        mesh=mesh)
+
+
+def train_pairs_sequential(
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    n_classes: int,
+    hw: Optional[AnalogRBFModel] = None,
+    n_epochs: int = 200,
+    seed: int = 0,
+    tie_margin: float = 0.005,
+    cv_epochs: Optional[int] = None,
+) -> list[PairResult]:
+    """The original Algorithm-1 host loop: 2-3 ``fit_best`` per pair.
+
+    Kept as the reference implementation: every pair's unique subset size
+    forces fresh jit compilations (O(pairs) compiles), which is what
+    ``benchmarks/svm_train.py`` measures the batched engine against.
+    Selections and accuracies agree with ``train_pairs`` up to the
+    comparator-tie epsilon (DESIGN.md §1.4/§4.5).
+    """
     if hw is None:
         hw = default_hw(seed)
 
@@ -119,9 +129,11 @@ def train_pairs(
 
     pairs: list[PairResult] = []
     for (ci, cj) in class_pairs(n_classes):
-        xb, yb = _binary_subset(x_train, y_train, ci, cj)
-        m_lin, a_lin = svm_mod.fit_best(xb, yb, "linear", n_epochs=n_epochs, seed=seed)
-        m_rbf, a_rbf = svm_mod.fit_best(xb, yb, "rbf", n_epochs=n_epochs, seed=seed)
+        xb, yb = binary_subset(x_train, y_train, ci, cj)
+        m_lin, a_lin = svm_mod.fit_best(xb, yb, "linear", n_epochs=n_epochs,
+                                        seed=seed, cv_epochs=cv_epochs)
+        m_rbf, a_rbf = svm_mod.fit_best(xb, yb, "rbf", n_epochs=n_epochs,
+                                        seed=seed, cv_epochs=cv_epochs)
         # Line 8: RBF only when STRICTLY better (beyond the CV-noise margin).
         kind = "rbf" if a_rbf > a_lin + tie_margin else "linear"
         m_hw = None
@@ -130,7 +142,7 @@ def train_pairs(
             # behavioral model as the kernel, on a realizable gamma grid.
             m_hw, _ = svm_mod.fit_best(
                 xb, yb, hw_kernel, gammas=hw_gamma_grid(hw),
-                n_epochs=n_epochs, seed=seed,
+                n_epochs=n_epochs, seed=seed, cv_epochs=cv_epochs,
             )
         pairs.append(
             PairResult(

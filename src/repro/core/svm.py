@@ -219,15 +219,24 @@ def fit_best(
     n_folds: int = 5,
     n_epochs: int = 200,
     seed: int = 0,
+    cv_epochs: int | None = None,
 ) -> tuple[SVMModel, float]:
-    """Grid-search (gamma, C) by CV, refit on the full set. Returns (model, cv_acc)."""
+    """Grid-search (gamma, C) by CV, refit on the full set. Returns (model, cv_acc).
+
+    ``cv_epochs`` sets the solver epochs used while training CV folds;
+    the default keeps the historical policy ``max(60, n_epochs // 2)``
+    (fold models only need to rank hyper-parameters, not converge fully).
+    The final full-set refit always runs the full ``n_epochs``.
+    """
     if cs is None:
         cs = np.logspace(-1, 3, 7)
     if kind == "linear":
         gammas = np.array([1.0])
     elif gammas is None:
         gammas = np.logspace(-1, 2, 7)
-    acc = cv_grid_accuracy(x, y, kind, gammas, cs, n_folds, max(60, n_epochs // 2), seed)
+    if cv_epochs is None:
+        cv_epochs = max(60, n_epochs // 2)
+    acc = cv_grid_accuracy(x, y, kind, gammas, cs, n_folds, int(cv_epochs), seed)
     gi, ci = np.unravel_index(np.argmax(acc), acc.shape)
     model = train_binary(x, y, kind, float(gammas[gi]), float(cs[ci]), n_epochs)
     return model, float(acc[gi, ci])

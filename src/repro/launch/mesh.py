@@ -33,5 +33,16 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
+def make_trainer_mesh(n_devices: int | None = None):
+    """1-D mesh for the batched SVM trainer's shard_map variant.
+
+    The single axis is named ``"pairgrid"`` (`trainer.PAIRGRID_AXIS`): the
+    flattened OvO-pair x gamma axis of the CV-grid program shards across
+    it with no collectives (DESIGN.md §4.4).
+    """
+    n = int(n_devices) if n_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("pairgrid",), **_axis_kwargs(1))
+
+
 def dp_axes(multi_pod: bool) -> tuple:
     return ("pod", "data") if multi_pod else ("data",)
