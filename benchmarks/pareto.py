@@ -1,0 +1,135 @@
+"""Pareto co-optimization benchmark: the kernel-assignment design space.
+
+For each dataset, sweeps ALL 2^P kernel assignments (pair -> linear-digital
+vs RBF-analog) through the batched DSE subsystem (``repro.core.dse``):
+candidate bits once, accuracy by bit-recombination, cost by one vectorized
+pass — and reports the accuracy/area/power Pareto front, the sweep
+throughput (assignments/s) and where the Algorithm-1 greedy point lands.
+
+The Algorithm-1 gate (``--assert-alg1``): the greedy point must not be
+Pareto-dominated by more than ``--alg1-epsilon`` accuracy.  The strict
+selection tie-epsilon (0.005) does NOT hold on this reproduction — the
+greedy rule compares *float CV* accuracies per pair, so it is blind to
+deployment gaps (e.g. Balance pair (0,1): float tie, but the deployed
+analog candidate scores 1.00 on the subset vs 0.926 for the 4-bit
+quantized linear), and the DSE legitimately finds strictly better
+operating points.  That gap is the subsystem's value; the gate freezes its
+magnitude (~3 accuracy points at the reference settings) as a regression
+bound, and the JSON records the strict-tie verdict per dataset
+(DESIGN.md §5.5).
+
+  PYTHONPATH=src python benchmarks/pareto.py [--out pareto.json]
+                                             [--assert-alg1]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+try:
+    from benchmarks import _fit_cache
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import _fit_cache
+
+from repro.core import dse
+
+#: Regression bound on how far the greedy Algorithm-1 point may sit below
+#: the Pareto front (see module docstring; measured ~0.03 on Balance).
+ALG1_EPSILON = 0.04
+
+
+def run(n_epochs: int = 120, seed: int = 0, verbose: bool = True,
+        alg1_epsilon: float = ALG1_EPSILON) -> dict:
+    from repro.data import datasets
+
+    cm = _fit_cache.calibrated_cost_model(n_epochs=n_epochs, seed=seed)
+    results = {}
+    for name in datasets.DATASETS:
+        ds, est = _fit_cache.fitted(name, n_epochs=n_epochs, seed=seed)
+        sweep = est.pareto(ds.x_test, ds.y_test, cm=cm)
+        alg1 = dse.assignment_from_kernel_map(est.kernel_map_)
+        i = sweep.find(alg1)
+        margin = sweep.domination_margin(alg1)
+        results[name] = {
+            "n_pairs": sweep.n_pairs,
+            "n_assignments": int(sweep.assignments.shape[0]),
+            "exhaustive": sweep.exhaustive,
+            "sweep_s": round(sweep.elapsed_s, 4),
+            "assignments_per_s": round(sweep.assignments_per_s, 1),
+            "front_size": int(len(sweep.front)),
+            "front": sweep.front_points(),
+            "alg1": {
+                "kernel_map": est.kernel_map_,
+                "accuracy": float(sweep.accuracy[i]),
+                "area_mm2": float(sweep.area[i]),
+                "power_mw": float(sweep.power[i]),
+                "on_front": bool(i in set(sweep.front.tolist())),
+                "domination_margin": round(margin, 6),
+                "within_tie_epsilon": bool(margin <= est.tie_margin),
+                "within_alg1_epsilon": bool(margin <= alg1_epsilon),
+            },
+            # accuracy-per-area frontier: best accuracy at or under each
+            # front point's area (the curve Fig.-5-style plots would show)
+            "accuracy_per_area": [
+                {"area_mm2": float(sweep.area[j]),
+                 "accuracy": float(np.max(
+                     sweep.accuracy[sweep.area <= sweep.area[j]]))}
+                for j in sweep.front
+            ],
+        }
+
+    if verbose:
+        print("dataset,n_assignments,sweep_s,assignments_per_s,front_size,"
+              "alg1_on_front,alg1_margin")
+        for name, r in results.items():
+            a = r["alg1"]
+            print(f"{name},{r['n_assignments']},{r['sweep_s']},"
+                  f"{r['assignments_per_s']},{r['front_size']},"
+                  f"{a['on_front']},{a['domination_margin']}")
+        for name, r in results.items():
+            print(f"-- {name} front (acc, area mm^2, power mW, n_rbf):")
+            for p in r["front"]:
+                print(f"   {p['accuracy']:.4f}, {p['area_mm2']:.4f}, "
+                      f"{p['power_mw']:.4f}, {p['n_rbf']}")
+    return {"benchmark": "pareto", "n_epochs": n_epochs,
+            "alg1_epsilon": alg1_epsilon, "datasets": results}
+
+
+def assert_alg1(result: dict) -> None:
+    """Hard CI gate: Algorithm 1 stays within epsilon of the front."""
+    bad = {
+        name: r["alg1"]["domination_margin"]
+        for name, r in result["datasets"].items()
+        if not r["alg1"]["within_alg1_epsilon"]
+    }
+    eps = result["alg1_epsilon"]
+    print(f"alg1-domination assertion (epsilon {eps}): "
+          f"{'FAIL ' + str(bad) if bad else 'OK'}")
+    if bad:
+        raise AssertionError(
+            f"Algorithm-1 design point dominated by more than {eps} "
+            f"accuracy on {bad} — greedy selection, deployment or the "
+            "cost model regressed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write JSON here as well")
+    ap.add_argument("--n-epochs", type=int, default=120)
+    ap.add_argument("--alg1-epsilon", type=float, default=ALG1_EPSILON)
+    ap.add_argument("--assert-alg1", action="store_true",
+                    help="fail if Algorithm 1 is dominated by more than "
+                         "the epsilon on any dataset")
+    args = ap.parse_args()
+    result = run(n_epochs=args.n_epochs, alg1_epsilon=args.alg1_epsilon)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    if args.assert_alg1:
+        assert_alg1(result)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,11 @@
 roofline.  Prints ``name,us_per_call,derived`` style CSV blocks.
 
 ``--json PATH`` additionally aggregates every machine-readable sub-result
-(currently svm_infer and svm_train; more as benchmarks grow JSON output)
-into one file suitable for BENCH_*.json trajectory tracking.
+(currently svm_infer, svm_train and pareto; more as benchmarks grow JSON
+output) into one file suitable for BENCH_*.json trajectory tracking.
+
+Table2 / fig5 / pareto share per-dataset Algorithm-1 fits through
+``benchmarks._fit_cache`` — each dataset is fitted once per process.
 """
 from __future__ import annotations
 
@@ -33,6 +36,10 @@ def main() -> None:
     print("\n== Fig. 5: analog/digital breakdown ==")
     from benchmarks import fig5
     fig5.run()
+
+    print("\n== Pareto: kernel-assignment design-space exploration ==")
+    from benchmarks import pareto
+    results["pareto"] = pareto.run()
 
     print("\n== SVM inference: object path vs compiled machine ==")
     from benchmarks import svm_infer

@@ -17,7 +17,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api import MixedKernelSVM
+try:
+    from benchmarks import _fit_cache
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import _fit_cache
+
 from repro.core import hwcost
 from repro.core.analog import AnalogBinaryClassifier
 from repro.core.ovo import DigitalRBFClassifier
@@ -25,16 +29,11 @@ from repro.data import datasets
 
 
 def run(n_epochs: int = 120, seed: int = 0, verbose: bool = True):
-    results = {}
-    linear_systems = {}
-    for name in datasets.DATASETS:
-        ds = datasets.load(name)
-        est = MixedKernelSVM(n_epochs=n_epochs, seed=seed).fit(
-            ds.x_train, ds.y_train)
-        results[name] = (ds, est)
-        linear_systems[name] = est.bank("linear")
-
-    cm = hwcost.calibrate_digital(linear_systems)
+    # Shared cached fits: table2 / fig5 / pareto each need the same
+    # Algorithm-1 machines; run.py pays one fit per dataset across them.
+    results = {name: _fit_cache.fitted(name, n_epochs=n_epochs, seed=seed)
+               for name in datasets.DATASETS}
+    cm = _fit_cache.calibrated_cost_model(n_epochs=n_epochs, seed=seed)
 
     # Table II design -> (accuracy target, cost-model bank target)
     designs = {"linear": "linear", "rbf": "rbf", "mixed": "circuit"}

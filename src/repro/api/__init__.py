@@ -19,12 +19,25 @@ re-exported here from ``repro.core.trainer``: :func:`train_pairs` runs all
 OvO pairs x CV folds x (C, gamma) grid cells in one compiled program per
 kernel family; :func:`pad_pairs` / :class:`PaddedPairs` expose the padded
 pair stack it operates on.
+
+The kernel-assignment design space (DESIGN.md §5) is exposed through
+:meth:`MixedKernelSVM.pareto` / budgeted ``deploy``, with the building
+blocks re-exported: :func:`compile_candidates` / :class:`CandidateMachine`
+(the assignment-independent ``(n, P, 2)`` pair-bit tensor) and
+:class:`DesignSpace` / :class:`SweepResult` from ``repro.core.dse``.
 """
-from repro.api.compiled import CompiledMachine, compile_machine
+from repro.api.compiled import (
+    CandidateMachine,
+    CompiledMachine,
+    compile_candidates,
+    compile_machine,
+)
 from repro.api.estimator import MixedKernelSVM
+from repro.core.dse import DesignSpace, SweepResult
 from repro.core.trainer import PaddedPairs, PairResult, pad_pairs, train_pairs
 
 __all__ = [
-    "CompiledMachine", "compile_machine", "MixedKernelSVM",
-    "PaddedPairs", "PairResult", "pad_pairs", "train_pairs",
+    "CandidateMachine", "CompiledMachine", "DesignSpace", "MixedKernelSVM",
+    "PaddedPairs", "PairResult", "SweepResult", "compile_candidates",
+    "compile_machine", "pad_pairs", "train_pairs",
 ]

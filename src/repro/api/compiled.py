@@ -36,6 +36,12 @@ exactly as the behavioral model does.
 The decision encoder is the packed truth table of ``build_encoder_table``
 for P <= 12 pair bits (the paper's K <= 5 regime); larger machines fall back
 to the equivalent votes-matmul + argmax (lowest-index tiebreak).
+
+``compile_candidates`` / ``CandidateMachine`` reuse the same lowering and
+bank evaluation to expose the assignment-independent per-pair candidate
+bit tensor ``pair_bits(x) -> (n, P, 2)`` that the kernel-assignment
+design-space explorer (``repro.core.dse``, DESIGN.md §5) recombines into
+every candidate machine's output without re-evaluating any classifier.
 """
 from __future__ import annotations
 
@@ -273,6 +279,116 @@ def _kernel_group_key(s: _KernelSpec):
 
 
 # ---------------------------------------------------------------------------
+# Bank evaluation: shared by CompiledMachine and CandidateMachine
+# ---------------------------------------------------------------------------
+
+
+def _pair_kernel(bank: _KernelBank, xv: jnp.ndarray, sv: jnp.ndarray,
+                 gamma, scale, shift, use_pallas: bool) -> jnp.ndarray:
+    """(n, M) kernel matrix of ONE pair (vmapped over the bank)."""
+    if bank.kind == "hw":
+        d = int(bank.sv.shape[-1])
+
+        def cell(dv):
+            if bank.uniform_grid:
+                return _uniform_interp(dv, bank.curve,
+                                       bank.grid[0], bank.grid[-1],
+                                       bank.left, bank.right,
+                                       jnp.float32(bank.inv_step))
+            return jnp.interp(dv, bank.grid, bank.curve,
+                              left=bank.left, right=bank.right)
+
+        # Per-dimension accumulation: (n, M) temporaries instead of one
+        # (n, M, d) tensor — same sequential multiply order as jnp.prod,
+        # far less memory traffic.  d <= 5 in hardware.
+        acc = None
+        for k in range(d):
+            dv = scale * (xv[:, k:k + 1] - sv[None, :, k]) + shift
+            k1 = cell(dv)
+            acc = k1 if acc is None else acc * k1
+        return acc
+    if use_pallas:
+        from repro.kernels import ops
+
+        return ops.rbf_matrix(xv, sv, gamma, kind=bank.kind, v_scale=1.0)
+    return kern.kernel_matrix(bank.kind, xv, sv, gamma)
+
+
+def _bank_scores(bank: _KernelBank, xv: jnp.ndarray,
+                 use_pallas: bool) -> jnp.ndarray:
+    """(n, P) decision scores for one kernel bank, kernel + contraction
+    fused per pair: the (n, M) kernel tile feeds one (M, 2) GEMM for the
+    +/- rails while it is still hot."""
+
+    def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off):
+        k = _pair_kernel(bank, xv, sv, gamma, scale, shift, use_pallas)
+        rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
+        return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
+
+    return jax.vmap(one, out_axes=1)(
+        bank.sv, bank.gamma, bank.scale, bank.shift,
+        bank.coef_pos, bank.coef_neg,
+        bank.bias_pos, bank.bias_neg, bank.offset)
+
+
+def _all_scores(x: jnp.ndarray, linear_banks, kernel_banks,
+                inv_perm: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """x (n, d) f32 -> scores (n, P) in lowering (pair-index) order.
+
+    Input quantization is computed once per distinct ADC width and shared
+    across banks; the bank columns are concatenated and un-permuted back to
+    pair order through ``inv_perm``.
+    """
+    xq_cache: dict[int, jnp.ndarray] = {}
+
+    def xq(bits: int) -> jnp.ndarray:
+        if bits not in xq_cache:
+            xq_cache[bits] = x if bits == 0 else quant.quantize_unit(x, bits)
+        return xq_cache[bits]
+
+    cols = []
+    for bank in linear_banks:
+        cols.append(xq(bank.input_bits) @ bank.w.T + bank.b[None, :])
+    for bank in kernel_banks:
+        cols.append(_bank_scores(bank, xq(bank.input_bits), use_pallas))
+    return jnp.concatenate(cols, axis=1)[:, inv_perm]
+
+
+def _build_banks(specs: list) -> tuple[list[_LinearBank], list[_KernelBank]]:
+    """Group lowered specs by datapath into padded stacked banks."""
+    linear_groups: dict[int, list[_LinearSpec]] = {}
+    kernel_groups: dict[tuple, list[_KernelSpec]] = {}
+    for s in specs:
+        if isinstance(s, _LinearSpec):
+            linear_groups.setdefault(s.input_bits, []).append(s)
+        else:
+            kernel_groups.setdefault(_kernel_group_key(s), []).append(s)
+    return ([_LinearBank.build(g) for g in linear_groups.values()],
+            [_KernelBank.build(g) for g in kernel_groups.values()])
+
+
+def _inverse_perm(linear_banks, kernel_banks, n_total: int) -> jnp.ndarray:
+    """Column order after bank concatenation -> lowering order inversion."""
+    order = np.concatenate(
+        [b.pair_idx for b in linear_banks]
+        + [b.pair_idx for b in kernel_banks]).astype(np.int64)
+    if order.shape[0] != n_total:
+        raise ValueError(
+            f"{order.shape[0]} lowered columns != {n_total} expected")
+    inv = np.empty_like(order)
+    inv[order] = np.arange(n_total)
+    return jnp.asarray(inv)
+
+
+def _bank_feature_dim(linear_banks, kernel_banks) -> int:
+    dims = {int(b.w.shape[1]) for b in linear_banks} | \
+        {int(b.sv.shape[2]) for b in kernel_banks}
+    if len(dims) > 1:
+        raise ValueError(f"inconsistent feature counts across banks: {dims}")
+    return dims.pop() if dims else 0
+
+
+# ---------------------------------------------------------------------------
 # The compiled machine
 # ---------------------------------------------------------------------------
 
@@ -303,22 +419,14 @@ class CompiledMachine:
                 f"{self.n_pairs} lowered pairs for {self.n_classes} classes "
                 f"(expected {expect})")
         self.kernel_map = list(kernel_map) if kernel_map is not None else None
-        dims = {int(b.w.shape[1]) for b in linear_banks} | \
-            {int(b.sv.shape[2]) for b in kernel_banks}
-        if len(dims) > 1:
-            raise ValueError(f"inconsistent feature counts across banks: {dims}")
-        self.n_features = dims.pop() if dims else 0
+        self.n_features = _bank_feature_dim(linear_banks, kernel_banks)
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
 
         # Column order after bank concatenation -> pair order inversion.
-        order = np.concatenate(
-            [b.pair_idx for b in linear_banks]
-            + [b.pair_idx for b in kernel_banks]).astype(np.int64)
-        inv = np.empty_like(order)
-        inv[order] = np.arange(self.n_pairs)
-        self._inv_perm = jnp.asarray(inv)
+        self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
+                                       self.n_pairs)
 
         # Decision encoder: packed truth table in the FE regime, votes
         # matmul beyond it (identical semantics, see ovo.decide_votes).
@@ -363,66 +471,10 @@ class CompiledMachine:
 
     # -- the single batched forward pass ------------------------------------
 
-    def _pair_kernel(self, bank: _KernelBank, xv: jnp.ndarray,
-                     sv: jnp.ndarray, gamma, scale, shift) -> jnp.ndarray:
-        """(n, M) kernel matrix of ONE pair (vmapped over the bank)."""
-        if bank.kind == "hw":
-            d = int(bank.sv.shape[-1])
-
-            def cell(dv):
-                if bank.uniform_grid:
-                    return _uniform_interp(dv, bank.curve,
-                                           bank.grid[0], bank.grid[-1],
-                                           bank.left, bank.right,
-                                           jnp.float32(bank.inv_step))
-                return jnp.interp(dv, bank.grid, bank.curve,
-                                  left=bank.left, right=bank.right)
-
-            # Per-dimension accumulation: (n, M) temporaries instead of one
-            # (n, M, d) tensor — same sequential multiply order as jnp.prod,
-            # far less memory traffic.  d <= 5 in hardware.
-            acc = None
-            for k in range(d):
-                dv = scale * (xv[:, k:k + 1] - sv[None, :, k]) + shift
-                k1 = cell(dv)
-                acc = k1 if acc is None else acc * k1
-            return acc
-        if self.use_pallas:
-            from repro.kernels import ops
-
-            return ops.rbf_matrix(xv, sv, gamma, kind=bank.kind, v_scale=1.0)
-        return kern.kernel_matrix(bank.kind, xv, sv, gamma)
-
-    def _bank_scores(self, bank: _KernelBank, xv: jnp.ndarray) -> jnp.ndarray:
-        """(n, P) decision scores for one kernel bank, kernel + contraction
-        fused per pair: the (n, M) kernel tile feeds one (M, 2) GEMM for the
-        +/- rails while it is still hot."""
-
-        def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off):
-            k = self._pair_kernel(bank, xv, sv, gamma, scale, shift)
-            rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
-            return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
-
-        return jax.vmap(one, out_axes=1)(
-            bank.sv, bank.gamma, bank.scale, bank.shift,
-            bank.coef_pos, bank.coef_neg,
-            bank.bias_pos, bank.bias_neg, bank.offset)
-
     def _forward(self, x: jnp.ndarray):
         """x (n, d) f32 -> (scores (n, P), bits (n, P), labels (n,))."""
-        xq_cache: dict[int, jnp.ndarray] = {}
-
-        def xq(bits: int) -> jnp.ndarray:
-            if bits not in xq_cache:
-                xq_cache[bits] = x if bits == 0 else quant.quantize_unit(x, bits)
-            return xq_cache[bits]
-
-        cols = []
-        for bank in self._linear_banks:
-            cols.append(xq(bank.input_bits) @ bank.w.T + bank.b[None, :])
-        for bank in self._kernel_banks:
-            cols.append(self._bank_scores(bank, xq(bank.input_bits)))
-        scores = jnp.concatenate(cols, axis=1)[:, self._inv_perm]
+        scores = _all_scores(x, self._linear_banks, self._kernel_banks,
+                             self._inv_perm, self.use_pallas)
         bits = (scores >= 0.0).astype(jnp.int32)
         if self._table is not None:
             labels = jnp.take(self._table, bits @ self._bit_weights)
@@ -574,16 +626,99 @@ def compile_machine(
             raise ValueError("n_classes is required for a bare classifier list")
 
     specs = [_lower_classifier(i, c) for i, c in enumerate(classifiers)]
-
-    linear_groups: dict[int, list[_LinearSpec]] = {}
-    kernel_groups: dict[tuple, list[_KernelSpec]] = {}
-    for s in specs:
-        if isinstance(s, _LinearSpec):
-            linear_groups.setdefault(s.input_bits, []).append(s)
-        else:
-            kernel_groups.setdefault(_kernel_group_key(s), []).append(s)
-
-    linear_banks = [_LinearBank.build(g) for g in linear_groups.values()]
-    kernel_banks = [_KernelBank.build(g) for g in kernel_groups.values()]
+    linear_banks, kernel_banks = _build_banks(specs)
     return CompiledMachine(n_classes, linear_banks, kernel_banks,
                            kernel_map=kernel_map, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Candidate machine: assignment-independent per-pair bit tensor (DSE layer 2)
+# ---------------------------------------------------------------------------
+
+
+class CandidateMachine:
+    """BOTH per-pair candidates lowered into one jit-compiled pass.
+
+    The kernel-assignment design space (``repro.core.dse``) exploits that
+    the comparator bit of each candidate classifier is *assignment-
+    independent*: pair ``p``'s linear-digital bit and RBF bit do not change
+    when some other pair's assignment flips.  This machine therefore lowers
+    the two candidate classifiers of every pair — ``2P`` classifiers in
+    total — into the same padded stacked banks as :class:`CompiledMachine`
+    and evaluates all of them in ONE jitted forward:
+
+        ``pair_bits(x) -> (n, P, 2)`` int32
+        (``[..., 0]`` = linear-digital candidate bit, ``[..., 1]`` = RBF
+        candidate bit, pair order of ``class_pairs``)
+
+    Any candidate assignment's machine output is then a pure
+    *bit-recombination*: select one bit per pair, feed the decision
+    encoder — no classifier is ever re-evaluated per assignment
+    (DESIGN.md §5.3).
+    """
+
+    def __init__(self, n_classes: int, linear_banks, kernel_banks,
+                 use_pallas: Optional[bool] = None):
+        self.n_classes = int(n_classes)
+        self.n_pairs = len(class_pairs(self.n_classes))
+        self._linear_banks = linear_banks
+        self._kernel_banks = kernel_banks
+        self.n_features = _bank_feature_dim(linear_banks, kernel_banks)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        # Lowering indices: candidate 0 of pair p is column p, candidate 1
+        # is column P + p; the inverse permutation restores that order.
+        self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
+                                       2 * self.n_pairs)
+        self._forward_jit = jax.jit(self._forward)
+
+    def _forward(self, x: jnp.ndarray):
+        """x (n, d) f32 -> (scores (n, P, 2), bits (n, P, 2))."""
+        flat = _all_scores(x, self._linear_banks, self._kernel_banks,
+                           self._inv_perm, self.use_pallas)     # (n, 2P)
+        scores = jnp.stack(
+            [flat[:, : self.n_pairs], flat[:, self.n_pairs:]], axis=-1)
+        return scores, (scores >= 0.0).astype(jnp.int32)
+
+    def _run(self, x: np.ndarray):
+        x = jnp.asarray(np.asarray(x), jnp.float32)
+        if x.ndim != 2 or (self.n_features and x.shape[1] != self.n_features):
+            raise ValueError(
+                f"expected (n, {self.n_features}) inputs, got shape {x.shape}")
+        return self._forward_jit(x)
+
+    def pair_scores(self, x: np.ndarray) -> np.ndarray:
+        """Raw candidate decision scores ``(n, P, 2)`` — pre-comparator."""
+        return np.asarray(self._run(x)[0])
+
+    def pair_bits(self, x: np.ndarray) -> np.ndarray:
+        """Candidate comparator bits ``(n, P, 2)`` in one device pass."""
+        return np.asarray(self._run(x)[1])
+
+
+def compile_candidates(
+    candidates: Sequence,
+    n_classes: int,
+    use_pallas: Optional[bool] = None,
+) -> CandidateMachine:
+    """Lower per-pair candidate classifiers to one :class:`CandidateMachine`.
+
+    ``candidates`` is a sequence of ``(linear_clf, rbf_clf)`` per OvO pair
+    in ``class_pairs`` order — the same classifier objects the legacy banks
+    would hold, so the bit tensor agrees column-for-column with the
+    corresponding :class:`CompiledMachine` outputs.
+    """
+    pairs = class_pairs(n_classes)
+    if len(candidates) != len(pairs):
+        raise ValueError(
+            f"{len(candidates)} candidate pairs for {n_classes} classes "
+            f"(expected {len(pairs)})")
+    p = len(pairs)
+    specs = []
+    for i, (lin_clf, rbf_clf) in enumerate(candidates):
+        specs.append(_lower_classifier(i, lin_clf))
+        specs.append(_lower_classifier(p + i, rbf_clf))
+    linear_banks, kernel_banks = _build_banks(specs)
+    return CandidateMachine(n_classes, linear_banks, kernel_banks,
+                            use_pallas=use_pallas)

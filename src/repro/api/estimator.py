@@ -21,6 +21,19 @@ analog-bound classifiers, then assembles every Table-II design point
 Targets: ``'float'`` (mixed software), ``'circuit'`` (mixed deployed:
 digital linear + analog RBF), ``'linear'`` (all-digital-linear baseline),
 ``'rbf'`` (all-digital-RBF baseline), plus ``'linear_float'``/``'rbf_float'``.
+
+Beyond Algorithm 1's single design point, the estimator fronts the batched
+kernel-assignment design space (``repro.core.dse``, DESIGN.md §5):
+
+    front = est.pareto(x_val, y_val)             # accuracy/area/power front
+    machine = est.deploy("circuit",
+                         area_budget=0.1,        # mm^2
+                         power_budget=0.05)      # mW -> cheapest point in budget
+    est.assignment_                              # chosen per-pair kernel map
+    est.save("models/balance")                   # assignment round-trips
+
+``deploy("circuit")`` with no budget remains exactly the Algorithm-1
+machine.
 """
 from __future__ import annotations
 
@@ -29,13 +42,21 @@ from typing import Optional
 
 import numpy as np
 
-from repro.api.compiled import CompiledMachine, _strip_ext, compile_machine
-from repro.core import selection
-from repro.core.analog import AnalogRBFModel
-from repro.core.ovo import MulticlassSVM
+from repro.api.compiled import (
+    CompiledMachine,
+    _strip_ext,
+    compile_candidates,
+    compile_machine,
+)
+from repro.core import dse as dse_mod
+from repro.core import hwcost, selection
+from repro.core.analog import AnalogBinaryClassifier, AnalogRBFModel
+from repro.core.ovo import DigitalLinearClassifier, MulticlassSVM
 from repro.core.svm import SVMModel
 
-_FORMAT_VERSION = 1
+# v2: config gained "hw_all", meta gained "assignment" (the chosen kernel
+# map of a budgeted deploy).  v1 saves load fine (missing keys default).
+_FORMAT_VERSION = 2
 
 _MODEL_SLOTS = ("model_linear", "model_rbf", "model_hw")
 _MODEL_ARRAYS = ("support_x", "support_y", "alpha", "w")
@@ -62,6 +83,7 @@ class MixedKernelSVM:
         hw: Optional[AnalogRBFModel] = None,
         use_pallas: Optional[bool] = None,
         mesh=None,
+        hw_all: bool = True,
     ):
         self.weight_bits = weight_bits
         self.input_bits = input_bits
@@ -76,12 +98,24 @@ class MixedKernelSVM:
         # Optional device mesh for the batched trainer's shard_map variant
         # (runtime-only, like `hw`/`use_pallas`: not serialized).
         self.mesh = mesh
+        # Keep the hardware co-optimized candidate for EVERY pair (free in
+        # the batched engine) so the kernel-assignment design space has an
+        # RBF-analog candidate per pair; False restores the lean saves.
+        self.hw_all = hw_all
         self._custom_hw = hw is not None
         self.hw_ = hw
         self.pairs_: Optional[list[selection.PairResult]] = None
         self.n_classes_: Optional[int] = None
         self._banks: Optional[dict[str, MulticlassSVM]] = None
         self._compiled: dict[str, CompiledMachine] = {}
+        # DSE state: the chosen per-pair kernel map of a budgeted deploy
+        # (serialized), the cached sweep result and design space (not).
+        self.assignment_: Optional[list[str]] = None
+        self.pareto_: Optional[dse_mod.SweepResult] = None
+        self._dse: Optional[dse_mod.DesignSpace] = None
+        self._dse_cm: Optional[hwcost.CostModel] = None
+        self._candidate_cache = None
+        self._candidate_machine = None
 
     # -- fitting --------------------------------------------------------------
 
@@ -106,7 +140,9 @@ class MixedKernelSVM:
             np.asarray(x), y, self.n_classes_, hw=self.hw_,
             n_epochs=self.n_epochs, seed=self.seed,
             tie_margin=self.tie_margin, cv_epochs=self.cv_epochs,
-            mesh=self.mesh)
+            mesh=self.mesh, hw_all=self.hw_all)
+        self.assignment_ = None
+        self.pareto_ = None
         self._build()
         return self
 
@@ -117,6 +153,10 @@ class MixedKernelSVM:
             weight_bits=self.weight_bits, input_bits=self.input_bits,
             seed=self.seed, alpha_floor_rel=self.alpha_floor_rel)
         self._compiled = {}
+        self._dse = None
+        self._dse_cm = None
+        self._candidate_cache = None
+        self._candidate_machine = None
 
     def _check_fitted(self) -> None:
         if self._banks is None:
@@ -148,12 +188,139 @@ class MixedKernelSVM:
                 f"unknown target {target!r}; one of {selection.BANK_TARGETS}")
         return self._banks[target]
 
-    def deploy(self, target: str = "float") -> CompiledMachine:
-        """Lower ``target``'s bank to one batched jit inference path."""
-        if target not in self._compiled:
-            self._compiled[target] = compile_machine(
-                self.bank(target), use_pallas=self.use_pallas)
-        return self._compiled[target]
+    def deploy(
+        self,
+        target: str = "float",
+        area_budget: Optional[float] = None,
+        power_budget: Optional[float] = None,
+    ) -> CompiledMachine:
+        """Lower ``target``'s bank to one batched jit inference path.
+
+        With an ``area_budget`` (mm^2) and/or ``power_budget`` (mW) —
+        ``'circuit'`` target only — the deployment instead picks the
+        cheapest Pareto point of the kernel-assignment design space that
+        meets the budget (requires a prior :meth:`pareto` sweep), records
+        its per-pair kernel map in ``assignment_`` (serialized by
+        ``save``), and compiles that machine.  With no budget the
+        Algorithm-1 machine is returned unchanged.
+        """
+        if area_budget is None and power_budget is None:
+            if target not in self._compiled:
+                self._compiled[target] = compile_machine(
+                    self.bank(target), use_pallas=self.use_pallas)
+            return self._compiled[target]
+        if target != "circuit":
+            raise ValueError(
+                "budget-constrained deployment explores the circuit design "
+                f"space; got target {target!r}")
+        if self.pareto_ is None:
+            raise RuntimeError(
+                "no Pareto front available: call est.pareto(x_val, y_val) "
+                "before deploying against a budget")
+        i = self.pareto_.select(area_budget=area_budget,
+                                power_budget=power_budget)
+        self.assignment_ = self.pareto_.kernel_map(i)
+        return self.deploy_assignment(self.assignment_)
+
+    # -- kernel-assignment design space (DESIGN.md §5) -------------------------
+
+    def _candidates(self) -> list[tuple]:
+        """Per-pair (linear-digital, RBF-analog) deployed candidates — the
+        same constructions ``build_banks`` uses, so the Algorithm-1
+        assignment reproduces the ``'circuit'`` bank classifier-for-
+        classifier.  Cached per fit (deployment re-quantizes weights)."""
+        self._check_fitted()
+        if self._candidate_cache is None:
+            missing = [p.pair for p in self.pairs_ if p.model_hw is None]
+            if missing:
+                raise RuntimeError(
+                    f"pairs {missing} have no hardware co-optimized "
+                    "candidate; fit with hw_all=True (the default) to "
+                    "explore the assignment space")
+            self._candidate_cache = [
+                (DigitalLinearClassifier.deploy(
+                    p.model_linear, self.weight_bits, self.input_bits),
+                 AnalogBinaryClassifier.deploy(
+                    p.model_hw, self.hw_,
+                    alpha_floor_rel=self.alpha_floor_rel))
+                for p in self.pairs_
+            ]
+        return self._candidate_cache
+
+    def design_space(
+        self, cm: Optional[hwcost.CostModel] = None
+    ) -> dse_mod.DesignSpace:
+        """The batched design space over per-pair kernel assignments.
+
+        The jitted candidate machine is cost-model-independent and cached
+        per fit; only the (numpy) cost table is rebuilt when ``cm``
+        changes, so re-sweeping under a recalibrated cost model is cheap.
+        """
+        cm = cm or hwcost.CostModel()
+        if self._dse is None or self._dse_cm != cm:
+            if self._candidate_machine is None:
+                self._candidate_machine = compile_candidates(
+                    self._candidates(), self.n_classes_,
+                    use_pallas=self.use_pallas)
+            table = hwcost.pair_cost_table(self._candidates(), cm,
+                                           n_classes=self.n_classes_)
+            self._dse = dse_mod.DesignSpace(
+                self._candidate_machine, table, self.n_classes_)
+            self._dse_cm = cm
+        return self._dse
+
+    def pareto(
+        self,
+        x_val: np.ndarray,
+        y_val: np.ndarray,
+        cm: Optional[hwcost.CostModel] = None,
+        **sweep_kwargs,
+    ) -> dse_mod.SweepResult:
+        """Sweep the kernel-assignment space on validation data and return
+        the accuracy/area/power Pareto front (cached in ``pareto_``).
+
+        Exhaustive ``2^P`` for ``P <= 12`` (two jit compiles: the candidate
+        bit tensor + the bit-recombination program); seeded greedy/flip
+        search beyond, seeded with the Algorithm-1 assignment.
+        """
+        space = self.design_space(cm)
+        seeds = sweep_kwargs.pop("seeds", dse_mod.assignment_from_kernel_map(
+            self.kernel_map_)[None, :])
+        self.pareto_ = space.sweep(np.asarray(x_val), np.asarray(y_val),
+                                   seeds=seeds, **sweep_kwargs)
+        return self.pareto_
+
+    def deploy_assignment(
+        self, assignment: Optional[list] = None
+    ) -> CompiledMachine:
+        """Compile the machine for an explicit per-pair kernel assignment
+        (default: the stored ``assignment_`` of a budgeted deploy)."""
+        self._check_fitted()
+        if assignment is None:
+            assignment = self.assignment_
+        if assignment is None:
+            raise RuntimeError(
+                "no assignment chosen yet: pass one explicitly or deploy "
+                "with a budget after est.pareto(...)")
+        kmap = [k if isinstance(k, str) else ("rbf" if k else "linear")
+                for k in list(assignment)]
+        key = "assignment:" + "".join("r" if k == "rbf" else "l"
+                                      for k in kmap)
+        if key not in self._compiled:
+            self._compiled[key] = compile_machine(
+                self._assignment_bank(kmap), use_pallas=self.use_pallas)
+        return self._compiled[key]
+
+    def _assignment_bank(self, kmap: list[str]) -> MulticlassSVM:
+        if len(kmap) != len(self.pairs_):
+            raise ValueError(
+                f"assignment has {len(kmap)} pairs, machine has "
+                f"{len(self.pairs_)}")
+        cands = self._candidates()
+        classifiers = [c[1] if k == "rbf" else c[0]
+                       for c, k in zip(cands, kmap)]
+        return MulticlassSVM(n_classes=self.n_classes_,
+                             classifiers=classifiers, kernel_map=kmap)
 
     # -- prediction ------------------------------------------------------------
 
@@ -211,7 +378,9 @@ class MixedKernelSVM:
                 "tie_margin": self.tie_margin,
                 "alpha_floor_rel": self.alpha_floor_rel,
                 "cv_epochs": self.cv_epochs,
+                "hw_all": self.hw_all,
             },
+            "assignment": self.assignment_,
             "pairs": meta_pairs,
         }
         np.savez(path + ".npz", **arrays)
@@ -226,6 +395,11 @@ class MixedKernelSVM:
             meta = json.load(f)
         if meta.get("format") != "repro.api.MixedKernelSVM":
             raise ValueError(f"{path}.json is not a MixedKernelSVM save")
+        if int(meta.get("version", 0)) > _FORMAT_VERSION:
+            raise ValueError(
+                f"{path}.json is format version {meta['version']}; this "
+                f"build reads up to version {_FORMAT_VERSION} — upgrade "
+                "the library to load it")
         npz = np.load(path + ".npz")
         est = cls(use_pallas=use_pallas, **meta["config"])
         est.n_classes_ = int(meta["n_classes"])
@@ -264,6 +438,8 @@ class MixedKernelSVM:
                 model_rbf=models["model_rbf"], model_hw=m_hw,
             ))
         est.pairs_ = pairs
+        assignment = meta.get("assignment")
+        est.assignment_ = list(assignment) if assignment else None
         est._build()
         return est
 

@@ -1,0 +1,424 @@
+"""Batched kernel-assignment design-space exploration (DESIGN.md §5).
+
+The paper's co-optimization maps each OvO pair to a kernel/domain —
+linear-digital or RBF-analog — to maximize accuracy while minimizing the
+costly RBF classifiers.  Algorithm 1 realizes ONE point of that space (the
+greedy ``tie_margin`` rule); this module explores the whole space as three
+vectorized passes over an ``(S, P)`` boolean assignment matrix:
+
+1. **Bits** — per-pair comparator bits are assignment-independent, so the
+   ``CandidateMachine`` (``repro.api.compiled``) evaluates both candidates
+   of every pair once: ``pair_bits(x) -> (n, P, 2)``.  One jit compile.
+
+2. **Accuracy** — every candidate assignment is a *bit-recombination*:
+   with the packed encoder table, an assignment's label codes are
+
+       ``codes[s] = lin_bits @ w  +  ((rbf_bits - lin_bits) * w) @ A[s]``
+
+   (``w = 2^p`` the encoder bit weights), i.e. one integer GEMM scores ALL
+   ``S`` assignments against the validation set.  One more jit compile —
+   exhaustive ``2^P`` for the FE regime ``P <= 12``, seeded greedy/flip
+   search beyond.
+
+3. **Cost** — ``hwcost.assignment_costs`` prices the same matrix in one
+   numpy pass from the per-pair candidate cost table.
+
+``pareto_front`` reduces the swept points to the accuracy/area/power
+non-dominated set; ``SweepResult.select`` picks the cheapest front point
+meeting an area/power budget (the deployment rule behind
+``MixedKernelSVM.deploy(..., area_budget=..., power_budget=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwcost
+from repro.core.ovo import build_encoder_table, class_pairs
+
+#: Exhaustive enumeration bound: 2^12 = 4096 assignments, matching the
+#: packed-encoder-table regime of the compiled machine (MAX_TABLE_BITS).
+MAX_EXHAUSTIVE_PAIRS = 12
+
+#: Assignment chunk of the votes-matmul fallback (P > MAX_EXHAUSTIVE_PAIRS):
+#: bounds the (n, CHUNK, P) selected-bits tensor.
+VOTES_CHUNK = 256
+
+
+def assignment_from_kernel_map(kernel_map: Sequence[str]) -> np.ndarray:
+    """``['linear'|'rbf', ...] -> (P,) bool`` (True = RBF candidate)."""
+    return np.asarray([k == "rbf" for k in kernel_map], bool)
+
+
+def kernel_map_from_assignment(assignment: np.ndarray) -> list[str]:
+    return ["rbf" if a else "linear" for a in np.asarray(assignment, bool)]
+
+
+def enumerate_assignments(n_pairs: int) -> np.ndarray:
+    """All ``2^P`` assignments, row ``s`` has pair ``p`` RBF iff bit ``p``
+    of ``s`` is set (little-endian, matching the encoder bit packing)."""
+    if n_pairs > MAX_EXHAUSTIVE_PAIRS:
+        raise ValueError(
+            f"refusing to enumerate 2^{n_pairs} assignments "
+            f"(> 2^{MAX_EXHAUSTIVE_PAIRS}); use the seeded search")
+    s = np.arange(1 << n_pairs, dtype=np.int64)
+    return ((s[:, None] >> np.arange(n_pairs)) & 1).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# The jitted sweep programs
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _sweep_encoder(bits2, assignments, y, table, weights):
+    """Accuracy of ALL assignments through the packed encoder table.
+
+    ``bits2 (n, P, 2)`` int32, ``assignments (S, P)`` int32, ``y (n,)``
+    int32, ``table (2^P,)`` int32, ``weights (P,)`` int32 -> ``(S,)`` f32.
+    Pure bit-recombination: the linear-candidate code is the base, each
+    RBF-assigned pair contributes the (rbf - lin) bit delta at its encoder
+    weight — one (n, P) x (P, S) integer GEMM recodes the whole space.
+    """
+    lin = bits2[:, :, 0]
+    diff = (bits2[:, :, 1] - lin) * weights[None, :]       # (n, P)
+    codes = (lin @ weights)[:, None] + diff @ assignments.T  # (n, S)
+    labels = jnp.take(table, codes)
+    return jnp.mean((labels == y[:, None]).astype(jnp.float32), axis=0)
+
+
+@jax.jit
+def _sweep_votes(bits2, assignments, y, vote_a, vote_b):
+    """Votes-matmul fallback for machines beyond the encoder-table regime.
+
+    Materializes the selected bits ``(n, S, P)`` — callers chunk the
+    assignment axis (``VOTES_CHUNK``) to bound the tensor.
+    """
+    sel = jnp.where(assignments[None, :, :] == 1,
+                    bits2[:, None, :, 1], bits2[:, None, :, 0])
+    votes = sel @ vote_a + (1 - sel) @ vote_b               # (n, S, K)
+    labels = jnp.argmax(votes, axis=-1)                     # lowest-index tie
+    return jnp.mean((labels == y[:, None]).astype(jnp.float32), axis=0)
+
+
+def _vote_matrices(n_classes: int) -> tuple[np.ndarray, np.ndarray]:
+    pairs = class_pairs(n_classes)
+    a = np.zeros((len(pairs), n_classes), np.int32)
+    b = np.zeros((len(pairs), n_classes), np.int32)
+    for p, (i, j) in enumerate(pairs):
+        a[p, i] = 1
+        b[p, j] = 1
+    return a, b
+
+
+def assignment_accuracies(
+    bits2: np.ndarray,
+    assignments: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    max_table_bits: int = MAX_EXHAUSTIVE_PAIRS,
+) -> np.ndarray:
+    """Validation accuracy of every assignment: ``(S,)`` float64.
+
+    ``bits2`` is the ``(n, P, 2)`` candidate-bit tensor of
+    ``CandidateMachine.pair_bits``.  For ``P <= max_table_bits`` the packed
+    encoder table scores all assignments in one program; beyond that the
+    votes matmul runs over ``VOTES_CHUNK``-sized assignment chunks.
+    """
+    bits2 = np.asarray(bits2, np.int32)
+    a = np.atleast_2d(np.asarray(assignments)).astype(np.int32)
+    y = np.asarray(y, np.int32)
+    n_pairs = bits2.shape[1]
+    if a.shape[1] != n_pairs:
+        raise ValueError(
+            f"assignments have {a.shape[1]} pairs, bits tensor has {n_pairs}")
+    if n_pairs <= max_table_bits:
+        table = build_encoder_table(n_classes)
+        weights = (1 << np.arange(n_pairs)).astype(np.int32)
+        acc = _sweep_encoder(bits2, a, y, jnp.asarray(table),
+                             jnp.asarray(weights))
+        return np.asarray(acc, np.float64)
+    va, vb = _vote_matrices(n_classes)
+    va, vb = jnp.asarray(va), jnp.asarray(vb)
+    out = np.empty(a.shape[0], np.float64)
+    # Fixed-size chunks (tail padded with row 0) keep one compiled shape.
+    for lo in range(0, a.shape[0], VOTES_CHUNK):
+        chunk = a[lo: lo + VOTES_CHUNK]
+        pad = VOTES_CHUNK - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate([chunk, np.repeat(a[:1], pad, axis=0)])
+        acc = np.asarray(_sweep_votes(bits2, chunk, y, va, vb))
+        out[lo: lo + VOTES_CHUNK] = acc[: VOTES_CHUNK - pad or None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pareto reduction and budget selection
+# ---------------------------------------------------------------------------
+
+
+def pareto_front(
+    accuracy: np.ndarray, area: np.ndarray, power: np.ndarray
+) -> np.ndarray:
+    """Indices of the non-dominated points (max accuracy, min area/power),
+    sorted by ascending area.  A point is dominated if another is at least
+    as good on all three objectives and strictly better on one."""
+    acc = np.asarray(accuracy, np.float64)
+    ar = np.asarray(area, np.float64)
+    pw = np.asarray(power, np.float64)
+    n = acc.shape[0]
+    keep = np.ones(n, bool)
+    # Chunked O(S^2) bool reduction: at S = 4096 this is a handful of
+    # 16M-entry byte matrices — milliseconds, no compile.
+    chunk = 1024
+    for lo in range(0, n, chunk):
+        sl = slice(lo, min(lo + chunk, n))
+        ge_acc = acc[None, :] >= acc[sl, None]
+        le_ar = ar[None, :] <= ar[sl, None]
+        le_pw = pw[None, :] <= pw[sl, None]
+        strict = (acc[None, :] > acc[sl, None]) | \
+            (ar[None, :] < ar[sl, None]) | (pw[None, :] < pw[sl, None])
+        keep[sl] &= ~(ge_acc & le_ar & le_pw & strict).any(axis=1)
+    idx = np.flatnonzero(keep)
+    return idx[np.argsort(ar[idx], kind="stable")]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Evaluated design points of one DSE sweep + their Pareto front."""
+
+    assignments: np.ndarray   # (S, P) bool — True: pair on the RBF candidate
+    accuracy: np.ndarray      # (S,) validation accuracy
+    area: np.ndarray          # (S,) mm^2
+    power: np.ndarray         # (S,) mW
+    front: np.ndarray         # indices of the non-dominated set, area-sorted
+    n_classes: int
+    exhaustive: bool          # full 2^P enumeration vs seeded search
+    elapsed_s: float
+    assignments_per_s: float
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.assignments.shape[1])
+
+    def kernel_map(self, i: int) -> list[str]:
+        return kernel_map_from_assignment(self.assignments[i])
+
+    def find(self, assignment: np.ndarray) -> Optional[int]:
+        """Row index of ``assignment`` among the swept points (None if the
+        search never visited it)."""
+        a = np.asarray(assignment, bool)
+        hit = np.flatnonzero((self.assignments == a[None, :]).all(axis=1))
+        return int(hit[0]) if hit.size else None
+
+    def domination_margin(self, assignment: np.ndarray) -> float:
+        """How much accuracy a no-costlier design gains over ``assignment``.
+
+        max over swept points with area <= and power <= the given point of
+        (their accuracy - its accuracy); <= 0 means the point is
+        undominated.  The CI gate asserts the Algorithm-1 machine's margin
+        stays within the selection tie-epsilon.
+        """
+        i = self.find(assignment)
+        if i is None:
+            raise ValueError("assignment was not visited by this sweep")
+        cheaper = (self.area <= self.area[i]) & (self.power <= self.power[i])
+        return float(np.max(self.accuracy[cheaper]) - self.accuracy[i])
+
+    def select(
+        self,
+        area_budget: Optional[float] = None,
+        power_budget: Optional[float] = None,
+    ) -> int:
+        """Deployment rule: the most accurate Pareto point within budget,
+        ties broken toward lower area then lower power."""
+        idx = self.front
+        ok = np.ones(idx.shape[0], bool)
+        if area_budget is not None:
+            ok &= self.area[idx] <= area_budget
+        if power_budget is not None:
+            ok &= self.power[idx] <= power_budget
+        if not ok.any():
+            cheapest = idx[np.argmin(self.area[idx])]
+            raise ValueError(
+                "no Pareto point meets the budget (cheapest front point: "
+                f"area {self.area[cheapest]:.4f} mm^2, power "
+                f"{self.power[cheapest]:.4f} mW)")
+        cand = idx[ok]
+        order = np.lexsort((self.power[cand], self.area[cand],
+                            -self.accuracy[cand]))
+        return int(cand[order[0]])
+
+    def front_points(self) -> list[dict]:
+        """JSON-friendly view of the front (benchmarks/pareto.py)."""
+        return [
+            {
+                "kernel_map": self.kernel_map(i),
+                "n_rbf": int(self.assignments[i].sum()),
+                "accuracy": float(self.accuracy[i]),
+                "area_mm2": float(self.area[i]),
+                "power_mw": float(self.power[i]),
+            }
+            for i in self.front
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Seeded greedy/flip search (beyond the exhaustive regime)
+# ---------------------------------------------------------------------------
+
+
+def _search_assignments(
+    bits2: np.ndarray,
+    y: np.ndarray,
+    cost_table: hwcost.PairCostTable,
+    n_classes: int,
+    seeds: Optional[np.ndarray],
+    n_random: int,
+    rng_seed: int,
+    max_rounds: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Hill-climb over single-pair flips from seeded starts.
+
+    Scalarizes accuracy against normalized cost over a small lambda ladder
+    (lambda = 0 is pure accuracy), archives EVERY evaluated point, and
+    returns ``(assignments, accuracies)`` for the archive — the caller
+    prices and Pareto-reduces it.  Deterministic given ``rng_seed``.
+    """
+    p = bits2.shape[1]
+    rng = np.random.RandomState(rng_seed)
+    starts = [np.zeros(p, bool), np.ones(p, bool)]
+    if seeds is not None:
+        starts += [np.asarray(s, bool) for s in np.atleast_2d(seeds)]
+    starts += [rng.rand(p) < 0.5 for _ in range(n_random)]
+
+    archive: dict[bytes, float] = {}
+
+    def evaluate(batch: np.ndarray) -> np.ndarray:
+        fresh = [a for a in batch if a.tobytes() not in archive]
+        if fresh:
+            accs = assignment_accuracies(bits2, np.stack(fresh), y, n_classes)
+            for a, acc in zip(fresh, accs):
+                archive[a.tobytes()] = float(acc)
+        return np.asarray([archive[a.tobytes()] for a in batch])
+
+    # Cost normalization: the all-linear corner anchors the scale.
+    a_all, p_all = hwcost.assignment_costs(
+        cost_table, np.stack([np.zeros(p, bool), np.ones(p, bool)]))
+    a_ref = max(a_all.max(), 1e-12)
+    p_ref = max(p_all.max(), 1e-12)
+
+    def scores(batch: np.ndarray, lam: float) -> np.ndarray:
+        acc = evaluate(batch)
+        ar, pw = hwcost.assignment_costs(cost_table, batch)
+        return acc - lam * 0.5 * (ar / a_ref + pw / p_ref)
+
+    for lam in (0.0, 0.05, 0.25, 1.0):
+        for start in starts:
+            cur = np.asarray(start, bool).copy()
+            cur_score = float(scores(cur[None, :], lam)[0])
+            for _ in range(max_rounds):
+                flips = np.repeat(cur[None, :], p, axis=0)
+                flips[np.arange(p), np.arange(p)] ^= True
+                s = scores(flips, lam)
+                best = int(np.argmax(s))
+                if s[best] <= cur_score + 1e-12:
+                    break
+                cur, cur_score = flips[best], float(s[best])
+    out = np.stack([np.frombuffer(k, bool) for k in archive])
+    return out, np.asarray([archive[a.tobytes()] for a in out])
+
+
+# ---------------------------------------------------------------------------
+# The design space
+# ---------------------------------------------------------------------------
+
+
+class DesignSpace:
+    """P candidate pairs as one batched, compiled design space.
+
+    Couples the assignment-independent bit machine (layer 2) with the
+    vectorized cost table (layer 1); :meth:`sweep` runs both over a whole
+    assignment matrix.  Build from live per-pair candidates with
+    :meth:`from_candidates`, or directly from a prebuilt machine + table
+    (anything with a ``pair_bits(x) -> (n, P, 2)`` method works).
+    """
+
+    def __init__(self, machine, cost_table: hwcost.PairCostTable,
+                 n_classes: int):
+        if cost_table.n_pairs != len(class_pairs(n_classes)):
+            raise ValueError(
+                f"cost table has {cost_table.n_pairs} pairs; "
+                f"{n_classes} classes need {len(class_pairs(n_classes))}")
+        self.machine = machine
+        self.cost_table = cost_table
+        self.n_classes = int(n_classes)
+        self.n_pairs = cost_table.n_pairs
+
+    @classmethod
+    def from_candidates(
+        cls,
+        candidates: Sequence,
+        n_classes: int,
+        cm: Optional[hwcost.CostModel] = None,
+        use_pallas: Optional[bool] = None,
+    ) -> "DesignSpace":
+        """``candidates``: per-pair ``(linear_clf, rbf_clf)`` deployed
+        classifier objects in ``class_pairs`` order."""
+        from repro.api.compiled import compile_candidates  # deferred: api layers above core
+
+        cm = cm or hwcost.CostModel()
+        machine = compile_candidates(candidates, n_classes,
+                                     use_pallas=use_pallas)
+        table = hwcost.pair_cost_table(candidates, cm, n_classes=n_classes)
+        return cls(machine, table, n_classes)
+
+    def sweep(
+        self,
+        x_val: np.ndarray,
+        y_val: np.ndarray,
+        assignments: Optional[np.ndarray] = None,
+        max_exhaustive: int = MAX_EXHAUSTIVE_PAIRS,
+        seeds: Optional[np.ndarray] = None,
+        n_random: int = 16,
+        rng_seed: int = 0,
+        max_rounds: int = 64,
+    ) -> SweepResult:
+        """Evaluate accuracy + cost over the assignment space.
+
+        With ``assignments=None``: exhaustive ``2^P`` when ``P <=
+        max_exhaustive`` (two jit compiles total: candidate bits + the
+        recombination program), else the seeded greedy/flip search
+        (``seeds`` typically carries the Algorithm-1 assignment).
+        """
+        t0 = time.perf_counter()
+        bits2 = self.machine.pair_bits(x_val)
+        if assignments is not None:
+            assignments = np.atleast_2d(np.asarray(assignments, bool))
+            acc = assignment_accuracies(bits2, assignments, y_val,
+                                        self.n_classes)
+            exhaustive = False
+        elif self.n_pairs <= max_exhaustive:
+            assignments = enumerate_assignments(self.n_pairs)
+            acc = assignment_accuracies(bits2, assignments, y_val,
+                                        self.n_classes)
+            exhaustive = True
+        else:
+            assignments, acc = _search_assignments(
+                bits2, y_val, self.cost_table, self.n_classes,
+                seeds, n_random, rng_seed, max_rounds)
+            exhaustive = False
+        area, power = hwcost.assignment_costs(self.cost_table, assignments)
+        front = pareto_front(acc, area, power)
+        elapsed = time.perf_counter() - t0
+        return SweepResult(
+            assignments=assignments, accuracy=acc, area=area, power=power,
+            front=front, n_classes=self.n_classes, exhaustive=exhaustive,
+            elapsed_s=elapsed,
+            assignments_per_s=assignments.shape[0] / max(elapsed, 1e-9),
+        )

@@ -22,6 +22,22 @@ column of Table II; the two analog constants (`layout_factor`,
 `comparator_*`) against the paper's stated analog-vs-digital-linear ratios
 (2.5x area / 12.4x power).  Every OTHER number — digital-RBF totals, the
 108x/17x mixed-vs-RBF gains, Fig. 5 breakdowns — is emergent.
+
+Layering (DESIGN.md §5.1): the module is split into *pure per-classifier
+primitives* (``classifier_cost`` and the GE counters it dispatches to) and
+two consumers of them:
+
+  * ``system_cost``        — the legacy object-bank walk, now a thin shim
+                             that sums ``classifier_cost`` over a deployed
+                             ``MulticlassSVM`` (plus encoder + ADC);
+  * ``pair_cost_table`` /
+    ``assignment_costs``   — the vectorized design-space path: price the
+                             per-pair candidate classifiers ONCE, then cost
+                             any ``(S, P)`` boolean assignment matrix
+                             (pair -> linear-digital vs RBF-analog) in one
+                             numpy pass.  Proven equal to ``system_cost``
+                             on the corresponding object banks to f64
+                             round-off (tests/test_dse.py).
 """
 from __future__ import annotations
 
@@ -212,29 +228,49 @@ class SystemCost:
         return self.power_analog_mw / self.power_mw if self.power_mw else 0.0
 
 
+def classifier_cost(clf, cm: CostModel) -> tuple[float, float, str]:
+    """Pure per-classifier cost primitive: ``(area mm^2, power mW, domain)``.
+
+    ``domain`` is ``'digital'`` (the classifier consumes digitized inputs —
+    it forces the per-feature ADC bank to exist) or ``'analog'`` (reads the
+    sensor rails directly).  Every cost consumer — the object-bank shim
+    ``system_cost`` and the vectorized ``assignment_costs`` path — prices
+    classifiers through this single dispatch, so the two paths cannot drift.
+    """
+    if isinstance(clf, DigitalLinearClassifier):
+        a, p = cm.digital(linear_classifier_ge(clf))
+        return a, p, "digital"
+    if isinstance(clf, DigitalRBFClassifier):
+        a, p = cm.digital(digital_rbf_classifier_ge(clf))
+        return a, p, "digital"
+    if isinstance(clf, AnalogBinaryClassifier):
+        a, p = cm.analog_rbf(clf)
+        return a, p, "analog"
+    # float adapters — no hardware
+    raise TypeError(f"cannot cost a non-deployed classifier: {type(clf)}")
+
+
 def system_cost(svm: MulticlassSVM, cm: CostModel) -> SystemCost:
     """Total cost of a deployed multiclass SVM incl. encoder and ADCs.
 
-    ADCs are instantiated once per feature and only if at least one digital
-    classifier consumes digitized inputs (analog RBF reads the sensor rails
-    directly — that is the point of the mixed-signal architecture).
+    Thin shim over :func:`classifier_cost` (DESIGN.md §5.1): walks the
+    object bank once, summing the per-classifier primitives, then adds the
+    encoder and — only if at least one digital classifier consumes
+    digitized inputs — the per-feature ADC bank (analog RBF reads the
+    sensor rails directly; that is the point of the mixed-signal
+    architecture).  The vectorized ``assignment_costs`` path prices the
+    same quantities from a precomputed per-pair table and is proven equal
+    to this walk to f64 round-off.
     """
     a_d = p_d = a_a = p_a = 0.0
     needs_adc_features = 0
     for clf in svm.classifiers:
-        if isinstance(clf, DigitalLinearClassifier):
-            a, p = cm.digital(linear_classifier_ge(clf))
+        a, p, domain = classifier_cost(clf, cm)
+        if domain == "digital":
             a_d += a; p_d += p
             needs_adc_features = max(needs_adc_features, clf.n_features)
-        elif isinstance(clf, DigitalRBFClassifier):
-            a, p = cm.digital(digital_rbf_classifier_ge(clf))
-            a_d += a; p_d += p
-            needs_adc_features = max(needs_adc_features, clf.n_features)
-        elif isinstance(clf, AnalogBinaryClassifier):
-            a, p = cm.analog_rbf(clf)
+        else:
             a_a += a; p_a += p
-        else:  # float adapters — no hardware
-            raise TypeError(f"cannot cost a non-deployed classifier: {type(clf)}")
     a, p = cm.digital(encoder_ge(svm.n_classes))
     a_d += a; p_d += p
     if needs_adc_features:
@@ -245,6 +281,114 @@ def system_cost(svm: MulticlassSVM, cm: CostModel) -> SystemCost:
         area_analog_mm2=a_a, power_analog_mw=p_a,
         area_digital_mm2=a_d, power_digital_mw=p_d,
     )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized assignment costing (the DSE cost path, DESIGN.md §5.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PairCostTable:
+    """Per-pair candidate costs, priced once for a whole design space.
+
+    Column 0 is the pair's linear-digital candidate, column 1 its
+    RBF-analog candidate (any deployed classifier type is accepted — each
+    candidate is priced by its actual domain).  All arrays are ``(P, 2)``
+    float64; ``assignment_costs`` contracts them against an ``(S, P)``
+    boolean assignment matrix in one numpy pass.  ``n_features`` is the
+    candidate's ADC feature demand — its feature count for digital
+    candidates, 0 for analog ones (which read the sensor rails directly).
+    """
+
+    area: np.ndarray          # (P, 2) per-candidate area mm^2
+    power: np.ndarray         # (P, 2) per-candidate power mW
+    n_features: np.ndarray    # (P, 2) ADC feature demand (0 for analog)
+    encoder_area: float
+    encoder_power: float
+    adc_area_per_feature: float
+    adc_power_per_feature: float
+
+    @property
+    def n_pairs(self) -> int:
+        return int(self.area.shape[0])
+
+
+def _n_classes_from_pairs(n_pairs: int) -> int:
+    """Invert P = K(K-1)/2 (raises if P is not a valid pair count)."""
+    k = int(round((1.0 + math.sqrt(1.0 + 8.0 * n_pairs)) / 2.0))
+    if k * (k - 1) // 2 != n_pairs:
+        raise ValueError(f"{n_pairs} is not K(K-1)/2 for any integer K")
+    return k
+
+
+def pair_cost_table(
+    candidates, cm: CostModel, n_classes: int | None = None
+) -> PairCostTable:
+    """Price every per-pair candidate once: the DSE cost-table builder.
+
+    ``candidates`` is a sequence of ``(linear_clf, rbf_clf)`` deployed
+    classifier pairs in ``class_pairs`` order.  The shared system terms
+    (decision encoder; ADC bank per digitized feature) are priced here too
+    so ``assignment_costs`` is pure array arithmetic.
+    """
+    if n_classes is None:
+        n_classes = _n_classes_from_pairs(len(candidates))
+    p = len(candidates)
+    area = np.zeros((p, 2))
+    power = np.zeros((p, 2))
+    n_features = np.zeros((p, 2))
+    for i, pair_cands in enumerate(candidates):
+        for j, clf in enumerate(pair_cands):
+            a, pw, domain = classifier_cost(clf, cm)
+            area[i, j], power[i, j] = a, pw
+            if domain == "digital":
+                n_features[i, j] = clf.n_features
+    enc_a, enc_p = cm.digital(encoder_ge(n_classes))
+    adc_a, adc_p = cm.adc(1)
+    return PairCostTable(
+        area=area, power=power, n_features=n_features,
+        encoder_area=enc_a, encoder_power=enc_p,
+        adc_area_per_feature=adc_a, adc_power_per_feature=adc_p,
+    )
+
+
+def assignment_costs(
+    pairs, assignments: np.ndarray, cm: CostModel | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized system cost of ``S`` candidate assignments: one numpy pass.
+
+    ``pairs`` is either a prebuilt :class:`PairCostTable` or a sequence of
+    per-pair ``(linear_clf, rbf_clf)`` candidates (then ``cm`` is
+    required).  ``assignments`` is an ``(S, P)`` boolean matrix — entry
+    ``[s, p]`` True assigns pair ``p`` to its RBF(-analog) candidate,
+    False to its linear-digital candidate.  Returns ``(area (S,),
+    power (S,))`` in mm^2 / mW, each exactly equal (to f64 round-off) to
+    ``system_cost`` on the object bank assembled from the same candidates.
+    """
+    if not isinstance(pairs, PairCostTable):
+        if cm is None:
+            raise ValueError(
+                "assignment_costs needs a CostModel when given raw "
+                "candidate pairs (pass cm=...)")
+        pairs = pair_cost_table(pairs, cm)
+    t = pairs
+    a = np.atleast_2d(np.asarray(assignments, bool))
+    if a.shape[1] != t.n_pairs:
+        raise ValueError(
+            f"assignment matrix has {a.shape[1]} pairs, table has "
+            f"{t.n_pairs}")
+    sel = a.astype(np.float64)                       # (S, P): 1 -> rbf col
+    area = sel @ t.area[:, 1] + (1.0 - sel) @ t.area[:, 0]
+    power = sel @ t.power[:, 1] + (1.0 - sel) @ t.power[:, 0]
+    # ADC bank: sized by the widest digitized classifier actually selected
+    # (matches system_cost's max over digital classifiers; 0 features ->
+    # no ADC at all, e.g. the all-analog corner).
+    nf_sel = np.where(a, t.n_features[:, 1], t.n_features[:, 0])  # (S, P)
+    nf = nf_sel.max(axis=1) if t.n_pairs else np.zeros(a.shape[0])
+    area = area + t.encoder_area + nf * t.adc_area_per_feature
+    power = power + t.encoder_power + nf * t.adc_power_per_feature
+    return area, power
 
 
 # ---------------------------------------------------------------------------

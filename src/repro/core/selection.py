@@ -78,6 +78,7 @@ def train_pairs(
     cv_epochs: Optional[int] = None,
     n_folds: int = 5,
     mesh=None,
+    hw_all: bool = False,
 ) -> list[PairResult]:
     """Run Algorithm 1: one PairResult per OvO pair (batched engine).
 
@@ -100,7 +101,7 @@ def train_pairs(
     return trainer_mod.train_pairs(
         x_train, y_train, n_classes, hw=hw, n_epochs=n_epochs, seed=seed,
         tie_margin=tie_margin, cv_epochs=cv_epochs, n_folds=n_folds,
-        mesh=mesh)
+        mesh=mesh, hw_all=hw_all)
 
 
 def train_pairs_sequential(

@@ -613,6 +613,7 @@ def train_pairs(
     cv_epochs: Optional[int] = None,
     n_folds: int = 5,
     mesh=None,
+    hw_all: bool = False,
 ) -> list[PairResult]:
     """Algorithm 1, batched: one compiled program per kernel family.
 
@@ -621,6 +622,13 @@ def train_pairs(
     ``cv_epochs`` controlling the fold-training epochs (default: the
     historical ``max(60, n_epochs // 2)``).  ``mesh`` optionally runs the
     CV grids under shard_map (see :data:`PAIRGRID_AXIS`).
+
+    ``hw_all=True`` keeps the hardware co-optimized ``model_hw`` for EVERY
+    pair instead of only the RBF-selected ones.  The engine trains the hw
+    family for all pairs anyway (see the jobs comment below), so this is
+    free — it is what gives the kernel-assignment design space
+    (``repro.core.dse``) an RBF-analog candidate per pair.  The default
+    ``False`` preserves the sequential path's deployment contract.
     """
     if hw is None:
         hw = default_hw(seed)
@@ -669,8 +677,9 @@ def train_pairs(
     for i, pair in enumerate(padded.pairs):
         kind = kinds[i]
         # model_hw is only *kept* for RBF-assigned pairs (the deployment
-        # contract of the sequential path).
-        m_hw = hw_models[i] if kind == "rbf" else None
+        # contract of the sequential path) unless hw_all opts into keeping
+        # every pair's analog candidate for the DSE.
+        m_hw = hw_models[i] if (hw_all or kind == "rbf") else None
         results.append(PairResult(
             pair=pair, kernel=kind,
             model=m_hw if kind == "rbf" else lin_models[i],

@@ -1,0 +1,343 @@
+"""Tests for the kernel-assignment design-space explorer (DESIGN.md §5).
+
+Covers the tentpole guarantees:
+
+  * vectorized ``assignment_costs`` == object-bank ``system_cost`` to f64
+    round-off on the all-linear, all-RBF(-analog) and Algorithm-1
+    assignments (the cost-layer refactor contract);
+  * the candidate bit tensor agrees with the per-candidate object banks;
+  * the exhaustive sweep's accuracies agree with compiled machines built
+    per assignment; the front is non-dominated;
+  * the full 2^P = 1024 exhaustive sweep of the paper's largest FE regime
+    (K = 5 -> P = 10; the UCI datasets themselves have K = 3 -> P = 3)
+    runs in <= 2 jit compiles and well under the 5 s budget;
+  * budgeted ``deploy`` picks from the front, records ``assignment_``,
+    round-trips through save/load, and the no-budget ``deploy('circuit')``
+    stays exactly the Algorithm-1 machine;
+  * the seeded greedy/flip search (forced via ``max_exhaustive``) finds
+    the same front as enumeration on a small space.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import MixedKernelSVM, compile_candidates
+from repro.core import dse, hwcost, trainer
+from repro.core.analog import AnalogBinaryClassifier
+from repro.core.ovo import DigitalLinearClassifier, MulticlassSVM
+from repro.core.svm import SVMModel
+from repro.data import datasets
+
+
+@pytest.fixture(scope="module")
+def balance():
+    ds = datasets.load("balance")
+    est = MixedKernelSVM(n_epochs=60, seed=0).fit(ds.x_train, ds.y_train)
+    return ds, est
+
+
+@pytest.fixture(scope="module")
+def balance_sweep(balance):
+    ds, est = balance
+    return est.pareto(ds.x_test, ds.y_test)
+
+
+def _assignment_banks(est):
+    """Object banks for the three reference assignments."""
+    cands = est._candidates()
+    kmap = est.kernel_map_
+    p = len(kmap)
+
+    def bank(kernels):
+        clfs = [c[1] if k == "rbf" else c[0]
+                for c, k in zip(cands, kernels)]
+        return MulticlassSVM(n_classes=est.n_classes_, classifiers=clfs,
+                             kernel_map=list(kernels))
+
+    return {
+        "all_linear": (np.zeros(p, bool), bank(["linear"] * p)),
+        "all_rbf": (np.ones(p, bool), bank(["rbf"] * p)),
+        "alg1": (dse.assignment_from_kernel_map(kmap), bank(kmap)),
+    }
+
+
+# -- layer 1: vectorized cost == object-bank shim ----------------------------
+
+
+def test_assignment_costs_match_system_cost(balance):
+    """The equivalence regression of the cost refactor: the one-pass
+    vectorized path prices the all-linear, all-RBF and Algorithm-1
+    assignments exactly like ``system_cost`` walks the object banks."""
+    _, est = balance
+    cm = hwcost.CostModel()
+    table = est.design_space(cm).cost_table
+    for name, (assignment, bank) in _assignment_banks(est).items():
+        ref = hwcost.system_cost(bank, cm)
+        area, power = hwcost.assignment_costs(table, assignment[None, :])
+        np.testing.assert_allclose(area[0], ref.area_mm2, rtol=1e-12,
+                                   err_msg=name)
+        np.testing.assert_allclose(power[0], ref.power_mw, rtol=1e-12,
+                                   err_msg=name)
+
+
+def test_assignment_costs_from_raw_candidates(balance):
+    """The convenience signature (raw candidate pairs + cm) matches the
+    prebuilt-table path, and demands a cost model."""
+    _, est = balance
+    cm = hwcost.CostModel()
+    cands = est._candidates()
+    a = dse.enumerate_assignments(len(cands))
+    ar1, pw1 = hwcost.assignment_costs(cands, a, cm)
+    table = hwcost.pair_cost_table(cands, cm)
+    ar2, pw2 = hwcost.assignment_costs(table, a)
+    np.testing.assert_array_equal(ar1, ar2)
+    np.testing.assert_array_equal(pw1, pw2)
+    with pytest.raises(ValueError, match="CostModel"):
+        hwcost.assignment_costs(cands, a)
+
+
+def test_all_rbf_assignment_has_no_adc(balance):
+    """The all-analog corner drops the ADC bank entirely (the point of the
+    mixed-signal architecture), the all-linear corner includes it."""
+    _, est = balance
+    cm = hwcost.CostModel()
+    table = est.design_space(cm).cost_table
+    p = table.n_pairs
+    (a_lin, a_rbf), _ = hwcost.assignment_costs(
+        table, np.stack([np.zeros(p, bool), np.ones(p, bool)]))
+    per_clf = table.area[:, 0].sum() + table.encoder_area
+    d = est.pairs_[0].model_linear.w.shape[0]
+    assert a_lin == pytest.approx(
+        per_clf + d * table.adc_area_per_feature, rel=1e-12)
+    assert a_rbf == pytest.approx(
+        table.area[:, 1].sum() + table.encoder_area, rel=1e-12)
+
+
+# -- layer 2: the candidate bit tensor ---------------------------------------
+
+
+def test_pair_bits_match_object_banks(balance):
+    """bits[..., 0] reproduces the deployed-linear bank, bits[..., 1] the
+    all-analog bank, bit-for-bit on Balance."""
+    ds, est = balance
+    machine = est.design_space().machine
+    banks = _assignment_banks(est)
+    for x in (ds.x_train, ds.x_test):
+        bits2 = machine.pair_bits(x)
+        assert bits2.shape == (len(x), len(est.kernel_map_), 2)
+        np.testing.assert_array_equal(
+            bits2[:, :, 0], banks["all_linear"][1].predict_bits(x))
+        np.testing.assert_array_equal(
+            bits2[:, :, 1], banks["all_rbf"][1].predict_bits(x))
+
+
+# -- exhaustive sweep --------------------------------------------------------
+
+
+def test_exhaustive_sweep_accuracies(balance, balance_sweep):
+    """Every swept assignment's recombined accuracy equals the accuracy of
+    the machine compiled for that assignment."""
+    ds, est = balance
+    sw = balance_sweep
+    assert sw.exhaustive and sw.assignments.shape == (8, 3)
+    for s in range(sw.assignments.shape[0]):
+        machine = est.deploy_assignment(sw.kernel_map(s))
+        assert sw.accuracy[s] == pytest.approx(
+            machine.accuracy(ds.x_test, ds.y_test), abs=1e-6), s
+
+
+def test_front_is_nondominated(balance_sweep):
+    sw = balance_sweep
+    front = set(sw.front.tolist())
+    for i in front:
+        dominated = (
+            (sw.accuracy >= sw.accuracy[i]) & (sw.area <= sw.area[i])
+            & (sw.power <= sw.power[i])
+            & ((sw.accuracy > sw.accuracy[i]) | (sw.area < sw.area[i])
+               | (sw.power < sw.power[i])))
+        assert not dominated.any(), i
+    # and every non-front point IS dominated by someone
+    for i in set(range(sw.assignments.shape[0])) - front:
+        dominated = (
+            (sw.accuracy >= sw.accuracy[i]) & (sw.area <= sw.area[i])
+            & (sw.power <= sw.power[i])
+            & ((sw.accuracy > sw.accuracy[i]) | (sw.area < sw.area[i])
+               | (sw.power < sw.power[i])))
+        assert dominated.any(), i
+
+
+def test_alg1_vertex_matches_circuit_machine(balance, balance_sweep):
+    """The Algorithm-1 assignment is one vertex of the sweep, and its
+    recombined accuracy equals the deployed circuit machine's."""
+    ds, est = balance
+    sw = balance_sweep
+    i = sw.find(dse.assignment_from_kernel_map(est.kernel_map_))
+    assert i is not None
+    assert sw.accuracy[i] == pytest.approx(
+        est.score(ds.x_test, ds.y_test, target="circuit"), abs=1e-6)
+
+
+# -- deployment --------------------------------------------------------------
+
+
+def test_deploy_no_budget_is_exact_alg1(balance, balance_sweep):
+    """Acceptance: after a Pareto sweep, est.deploy('circuit') with no
+    budget still reproduces the Algorithm-1 machine bit-for-bit."""
+    ds, est = balance
+    machine = est.deploy("circuit")
+    bank = est.bank("circuit")
+    assert machine.kernel_map == est.kernel_map_
+    for x in (ds.x_train, ds.x_test):
+        np.testing.assert_array_equal(machine.predict(x), bank.predict(x))
+
+
+def test_budgeted_deploy_and_save_roundtrip(balance, balance_sweep, tmp_path):
+    ds, est = balance
+    sw = balance_sweep
+    # Budget exactly at a mid-front point: selection must meet it.
+    j = sw.front[len(sw.front) // 2]
+    machine = est.deploy("circuit", area_budget=float(sw.area[j]),
+                         power_budget=float(sw.power[j]))
+    assert est.assignment_ is not None
+    i = sw.find(dse.assignment_from_kernel_map(est.assignment_))
+    assert sw.area[i] <= sw.area[j] and sw.power[i] <= sw.power[j]
+    assert machine.accuracy(ds.x_test, ds.y_test) == pytest.approx(
+        sw.accuracy[i], abs=1e-6)
+    # the chosen assignment survives save/load without retraining
+    path = os.path.join(tmp_path, "m")
+    est.save(path)
+    est2 = MixedKernelSVM.load(path)
+    assert est2.assignment_ == est.assignment_
+    np.testing.assert_array_equal(
+        est2.deploy_assignment().predict(ds.x_test),
+        machine.predict(ds.x_test))
+    # ... and the loaded estimator can sweep again (hw_all candidates
+    # round-tripped through the save)
+    assert all(p.model_hw is not None for p in est2.pairs_)
+    est.assignment_ = None  # restore fixture state
+
+
+def test_budgeted_deploy_requires_pareto(balance, tmp_path):
+    ds, est = balance
+    path = os.path.join(tmp_path, "m")
+    est.save(path)
+    fresh = MixedKernelSVM.load(path)  # no cached sweep
+    with pytest.raises(RuntimeError, match="pareto"):
+        fresh.deploy("circuit", area_budget=1.0)
+    with pytest.raises(ValueError, match="circuit"):
+        fresh.deploy("linear", area_budget=1.0)
+
+
+def test_infeasible_budget_raises(balance, balance_sweep):
+    _, est = balance
+    with pytest.raises(ValueError, match="budget"):
+        est.deploy("circuit", area_budget=1e-9)
+
+
+# -- the P = 10 exhaustive regime (K = 5) ------------------------------------
+
+
+def _synthetic_candidates(n_classes, d, m, seed=0):
+    """Handcrafted per-pair candidates: deployed linear + analog RBF."""
+    from repro.core.ovo import class_pairs
+
+    rng = np.random.RandomState(seed)
+    hw = trainer.default_hw(0)
+    gamma = float(trainer.hw_gamma_grid(hw)[3])
+    cands = []
+    for _ in class_pairs(n_classes):
+        w = rng.randn(d)
+        lin = SVMModel(kind="linear", support_x=np.zeros((1, d)),
+                       support_y=np.ones(1), alpha=np.zeros(1),
+                       bias=float(-w.sum() / 2), gamma=1.0, c=1.0, w=w)
+        sv = rng.rand(m, d)
+        yv = np.where(rng.rand(m) > 0.5, 1.0, -1.0)
+        rbf = SVMModel(kind="hw", support_x=sv, support_y=yv,
+                       alpha=rng.rand(m) + 0.1, bias=float(rng.randn() * 0.1),
+                       gamma=gamma, c=1.0, kernel_fn=hw.kernel_response)
+        cands.append((DigitalLinearClassifier.deploy(lin),
+                      AnalogBinaryClassifier.deploy(rbf, hw)))
+    return cands
+
+
+def test_exhaustive_p10_two_compiles_under_budget():
+    """Acceptance: the full 2^10 = 1024-assignment space — accuracy AND
+    cost — in <= 2 jit compiles and < 5 s (K = 5, the paper's largest FE
+    machine; pair count matches Balance's encoder-table regime bound)."""
+    import jax
+
+    from benchmarks.svm_train import count_compiles
+
+    cands = _synthetic_candidates(n_classes=5, d=4, m=6)
+    space = dse.DesignSpace.from_candidates(cands, 5, hwcost.CostModel())
+    rng = np.random.RandomState(1)
+    x = rng.rand(400, 4).astype(np.float32)
+    y = rng.randint(0, 5, 400)
+    jax.clear_caches()
+    with count_compiles() as cc:
+        sw = space.sweep(x, y)
+    assert sw.exhaustive
+    assert sw.assignments.shape == (1024, 10)
+    assert cc.count() <= 2, cc.names
+    assert sw.elapsed_s < 5.0
+    assert sw.assignments_per_s > 1024 / 5.0
+    # corners recombine exactly: all-linear / all-rbf rows equal the
+    # single-candidate machines
+    bits2 = space.machine.pair_bits(x)
+    from repro.core.ovo import build_encoder_table, decide_encoder
+
+    table = build_encoder_table(5)
+    for row, col in ((0, 0), (1023, 1)):
+        labels = decide_encoder(bits2[:, :, col], table)
+        assert sw.accuracy[row] == pytest.approx(
+            float(np.mean(labels == y)), abs=1e-6)
+
+
+# -- seeded search beyond the exhaustive regime ------------------------------
+
+
+def test_seeded_search_matches_enumeration_on_small_space(balance):
+    """Forcing the greedy/flip search on Balance's 3-pair space recovers
+    the exhaustive front (it visits all corners via seeds + flips)."""
+    ds, est = balance
+    space = est.design_space()
+    ex = space.sweep(ds.x_test, ds.y_test)
+    alg1 = dse.assignment_from_kernel_map(est.kernel_map_)
+    se = space.sweep(ds.x_test, ds.y_test, max_exhaustive=2,
+                     seeds=alg1[None, :], n_random=4)
+    assert not se.exhaustive
+    assert se.find(alg1) is not None  # the seed itself was evaluated
+    # corner seeds are always evaluated
+    p = se.n_pairs
+    visited = {a.tobytes() for a in se.assignments}
+    assert np.zeros(p, bool).tobytes() in visited
+    assert np.ones(p, bool).tobytes() in visited
+
+    def front_set(sw):
+        return {sw.assignments[i].tobytes() for i in sw.front}
+
+    # any globally-non-dominated point the search visited must be on its
+    # front (the search front can only differ on points it never saw)
+    assert {b for b in front_set(ex) if b in visited} <= front_set(se)
+    assert len(se.front) >= 1
+
+
+def test_enumerate_assignments_guard():
+    with pytest.raises(ValueError, match="refusing"):
+        dse.enumerate_assignments(13)
+    a = dse.enumerate_assignments(3)
+    assert a.shape == (8, 3)
+    assert a.sum() == 8 * 3 / 2  # balanced bit counts
+
+
+def test_votes_fallback_matches_encoder_path(balance):
+    """The votes-matmul sweep (P > 12 regime) agrees with the packed
+    encoder table on the same bits."""
+    ds, est = balance
+    bits2 = est.design_space().machine.pair_bits(ds.x_test)
+    a = dse.enumerate_assignments(3)
+    acc_enc = dse.assignment_accuracies(bits2, a, ds.y_test, 3)
+    acc_votes = dse.assignment_accuracies(bits2, a, ds.y_test, 3,
+                                          max_table_bits=0)
+    np.testing.assert_allclose(acc_votes, acc_enc, atol=1e-7)

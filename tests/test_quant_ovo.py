@@ -67,6 +67,47 @@ def test_csd_and_hardware_class():
     assert quant.csd_nonzero_digits(1) == 1
 
 
+def _minimal_signed_digits(c: int, _memo={0: 0, 1: 1}) -> int:
+    """Brute-force minimal number of non-zero signed digits representing
+    ``c`` as sum of +/- powers of two (the quantity CSD is minimal for).
+
+    Recursion: even c needs exactly what c/2 needs (shift); odd c must
+    spend one digit at bit 0, either +1 (leaving c-1) or -1 (leaving c+1);
+    both residues halve to strictly smaller values for c >= 3.
+    """
+    c = abs(int(c))
+    if c not in _memo:
+        if c % 2 == 0:
+            _memo[c] = _minimal_signed_digits(c // 2)
+        else:
+            _memo[c] = 1 + min(_minimal_signed_digits((c - 1) // 2),
+                               _minimal_signed_digits((c + 1) // 2))
+    return _memo[c]
+
+
+def test_csd_digits_minimal_for_all_8bit_codes():
+    """``csd_nonzero_digits`` equals the brute-force minimal signed-digit
+    count for every 8-bit weight code (the cost model's adder count per
+    bespoke constant multiplier rests on this)."""
+    for c in range(-255, 256):
+        assert quant.csd_nonzero_digits(c) == _minimal_signed_digits(c), c
+
+
+def test_weight_hardware_class_all_8bit_codes():
+    """zero/pow2 codes are exactly the multiplier-free classes: zero is
+    code 0, pow2 is a single signed digit at a non-trivial magnitude."""
+    for c in range(-255, 256):
+        cls = quant.weight_hardware_class(c)
+        if c == 0:
+            assert cls == "zero"
+        elif _minimal_signed_digits(c) == 1:
+            # one signed digit <=> |c| is a power of two
+            assert cls == "pow2", c
+            assert abs(c) & (abs(c) - 1) == 0
+        else:
+            assert cls == "general", c
+
+
 # -- OvO encoder ------------------------------------------------------------
 
 
