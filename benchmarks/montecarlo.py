@@ -1,0 +1,240 @@
+"""Monte-Carlo variation benchmark: the variant axis end-to-end (§6).
+
+For each paper dataset, runs the variation-aware kernel-assignment sweep
+(``MixedKernelSVM.pareto(n_variants=...)``) — every assignment scored with
+mean/std/worst-case accuracy and yield over V sampled fabricated instances
+— and reports:
+
+* **variants/s** — throughput of the one-jitted-forward
+  ``MonteCarloMachine`` at the reference V,
+* **compile budget** — the variant axis must cost at most 2 additional jit
+  compiles over the nominal DSE path (the MC forward + the batched
+  recombination); ``--assert-compiles`` turns the measurement into a gate,
+* **nominal bit-identity** — variant 0 (zero offsets) must reproduce the
+  nominal ``CandidateMachine`` bits AND scores bit-exactly
+  (``--assert-nominal`` gates it; DESIGN.md §6.3),
+* **yield-vs-sigma** — the Algorithm-1 circuit's accuracy distribution and
+  yield as the process sigmas scale jointly (0.5x .. 4x),
+* **nominal vs robust vertex** — where the Algorithm-1 design sits in
+  mean/worst/yield terms, and what the robust rule
+  (``select(yield_floor=...)``) deploys instead.
+
+All mismatch is drawn from explicit jax PRNG keys derived from
+``--mc-seed``; the seed is recorded in the JSON for reproducibility.
+
+  PYTHONPATH=src python benchmarks/montecarlo.py [--out montecarlo.json]
+                                                 [--assert-nominal]
+                                                 [--assert-compiles]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+try:
+    from benchmarks import _fit_cache
+    from benchmarks.svm_train import count_compiles
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    import _fit_cache
+    from svm_train import count_compiles
+
+#: Reference variant count (the acceptance setting) and sigma ladder.
+N_VARIANTS = 64
+SIGMA_SCALES = (0.5, 1.0, 2.0, 4.0)
+
+#: The variant axis may cost at most this many extra jit compiles.
+MAX_MC_COMPILES = 2
+
+#: Yield floors the robust deployment rule is probed at.
+YIELD_FLOORS = (0.5, 0.9)
+
+
+def run(n_epochs: int = 120, seed: int = 0, mc_seed: int = 0,
+        n_variants: int = N_VARIANTS,
+        sigma_scales: tuple = SIGMA_SCALES,
+        verbose: bool = True) -> dict:
+    import jax
+
+    from repro.core import dse
+    from repro.data import datasets
+
+    cm = _fit_cache.calibrated_cost_model(n_epochs=n_epochs, seed=seed)
+    results = {}
+    for name in datasets.DATASETS:
+        ds, est = _fit_cache.fitted(name, n_epochs=n_epochs, seed=seed)
+        key = jax.random.PRNGKey(mc_seed)
+        nominal_acc = est.score(ds.x_test, ds.y_test, target="circuit")
+        floor = round(nominal_acc - 0.02, 6)
+
+        # Warm the nominal DSE path, then lower the MC machine OUTSIDE the
+        # counted block (lowering runs eager sampling/interp ops); the
+        # counted sweep may then add at most the MC forward + the batched
+        # recombination program.
+        est.pareto(ds.x_test, ds.y_test, cm=cm)
+        machine = est.monte_carlo_machine(n_variants, key)
+        with count_compiles() as cc:
+            sweep = est.pareto(ds.x_test, ds.y_test, cm=cm,
+                               n_variants=n_variants, key=key,
+                               accuracy_floor=floor)
+        mc_compiles = cc.count()
+
+        # Nominal bit-identity: variant 0 vs the nominal candidate machine.
+        nominal_machine = est.design_space(cm).machine
+        bits_exact = bool(np.array_equal(
+            machine.pair_bits(ds.x_test)[0],
+            nominal_machine.pair_bits(ds.x_test)))
+        scores_exact = bool(np.array_equal(
+            machine.pair_scores(ds.x_test)[0],
+            nominal_machine.pair_scores(ds.x_test)))
+
+        # Throughput of the jitted MC forward (already warm).
+        reps, t0 = 10, time.perf_counter()
+        for _ in range(reps):
+            machine.pair_bits(ds.x_test)
+        per_call = (time.perf_counter() - t0) / reps
+        variants_per_s = n_variants / per_call
+
+        # Algorithm-1 vertex: nominal vs robust statistics.
+        alg1 = dse.assignment_from_kernel_map(est.kernel_map_)
+        i = sweep.find(alg1)
+        vertex = {
+            "kernel_map": est.kernel_map_,
+            "accuracy_nominal": float(sweep.accuracy[i]),
+            "acc_mean": float(sweep.acc_mean[i]),
+            "acc_std": float(sweep.acc_std[i]),
+            "acc_worst": float(sweep.acc_worst[i]),
+            "yield_frac": float(sweep.yield_[i]),
+            "on_robust_front": bool(i in set(sweep.robust_front.tolist())),
+        }
+
+        # Robust deployment at reference yield floors.
+        robust_deploys = {}
+        for yf in YIELD_FLOORS:
+            try:
+                j = sweep.select(yield_floor=yf)
+                robust_deploys[str(yf)] = {
+                    "kernel_map": sweep.kernel_map(j),
+                    "acc_mean": float(sweep.acc_mean[j]),
+                    "yield_frac": float(sweep.yield_[j]),
+                    "area_mm2": float(sweep.area[j]),
+                    "power_mw": float(sweep.power[j]),
+                }
+            except ValueError:
+                robust_deploys[str(yf)] = None
+
+        # Yield-vs-sigma: the Algorithm-1 circuit under scaled mismatch.
+        sigma_curve = []
+        for s in sigma_scales:
+            mc = est.monte_carlo(ds.x_test, ds.y_test,
+                                 n_variants=n_variants, key=key,
+                                 sigma_scale=float(s))
+            sigma_curve.append({
+                "sigma_scale": float(s),
+                "acc_mean": round(mc.mean, 6),
+                "acc_std": round(mc.std, 6),
+                "acc_worst": round(mc.worst, 6),
+                "yield_frac": round(mc.yield_at(floor), 6),
+            })
+
+        results[name] = {
+            "n_pairs": sweep.n_pairs,
+            "n_assignments": int(sweep.assignments.shape[0]),
+            "n_variants": int(n_variants),
+            "accuracy_floor": floor,
+            "mc_compiles": int(mc_compiles),
+            "mc_compile_names": cc.names,
+            "nominal_bits_exact": bits_exact,
+            "nominal_scores_exact": scores_exact,
+            "mc_forward_s": round(per_call, 6),
+            "variants_per_s": round(variants_per_s, 1),
+            "sweep_s": round(sweep.elapsed_s, 4),
+            "alg1": vertex,
+            "robust_deploys": robust_deploys,
+            "robust_front": sweep.front_points(robust=True),
+            "yield_vs_sigma": sigma_curve,
+        }
+        # The yield deploy mutates assignment_; keep the cached fit clean
+        # for any benchmark sharing it through _fit_cache.
+        est.assignment_ = None
+
+    if verbose:
+        print("dataset,mc_compiles,nominal_bits_exact,nominal_scores_exact,"
+              "variants_per_s,alg1_yield,alg1_worst")
+        for name, r in results.items():
+            a = r["alg1"]
+            print(f"{name},{r['mc_compiles']},{r['nominal_bits_exact']},"
+                  f"{r['nominal_scores_exact']},{r['variants_per_s']},"
+                  f"{a['yield_frac']:.3f},{a['acc_worst']:.3f}")
+        for name, r in results.items():
+            print(f"-- {name} yield vs sigma (floor {r['accuracy_floor']}):")
+            for p in r["yield_vs_sigma"]:
+                print(f"   x{p['sigma_scale']}: mean {p['acc_mean']:.3f}, "
+                      f"worst {p['acc_worst']:.3f}, "
+                      f"yield {p['yield_frac']:.3f}")
+    return {"benchmark": "montecarlo", "n_epochs": n_epochs, "seed": seed,
+            "mc_seed": mc_seed, "n_variants": n_variants,
+            "datasets": results}
+
+
+def assert_nominal(result: dict) -> None:
+    """Hard CI gate: the zero-offset variant IS the nominal compiled path."""
+    bad = {
+        name: {"bits": r["nominal_bits_exact"],
+               "scores": r["nominal_scores_exact"]}
+        for name, r in result["datasets"].items()
+        if not (r["nominal_bits_exact"] and r["nominal_scores_exact"])
+    }
+    print(f"nominal-variant bit-identity assertion: "
+          f"{'FAIL ' + str(bad) if bad else 'OK'}")
+    if bad:
+        raise AssertionError(
+            f"zero-offset Monte-Carlo variant drifted from the nominal "
+            f"compiled path on {bad} — the §6.3 bit-identity contract "
+            "(structural nominal-subgraph reuse) regressed")
+
+
+def assert_compiles(result: dict,
+                    budget: int = MAX_MC_COMPILES) -> None:
+    """Hard CI gate: the variant axis costs <= `budget` extra compiles."""
+    bad = {
+        name: r["mc_compile_names"]
+        for name, r in result["datasets"].items()
+        if r["mc_compiles"] > budget
+    }
+    print(f"mc-compile budget assertion (<= {budget}): "
+          f"{'FAIL ' + str(bad) if bad else 'OK'}")
+    if bad:
+        raise AssertionError(
+            f"Monte-Carlo sweep compiled more than {budget} extra "
+            f"programs: {bad} — the variant axis is leaking shapes")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write JSON here as well")
+    ap.add_argument("--n-epochs", type=int, default=120)
+    ap.add_argument("--n-variants", type=int, default=N_VARIANTS)
+    ap.add_argument("--mc-seed", type=int, default=0)
+    ap.add_argument("--assert-nominal", action="store_true",
+                    help="fail unless the zero-offset variant is "
+                         "bit-identical to the nominal compiled path")
+    ap.add_argument("--assert-compiles", action="store_true",
+                    help="fail if the variant axis costs more than "
+                         f"{MAX_MC_COMPILES} extra jit compiles")
+    args = ap.parse_args()
+    result = run(n_epochs=args.n_epochs, mc_seed=args.mc_seed,
+                 n_variants=args.n_variants)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+    if args.assert_nominal:
+        assert_nominal(result)
+    if args.assert_compiles:
+        assert_compiles(result)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,8 +2,9 @@
 roofline.  Prints ``name,us_per_call,derived`` style CSV blocks.
 
 ``--json PATH`` additionally aggregates every machine-readable sub-result
-(currently svm_infer, svm_train and pareto; more as benchmarks grow JSON
-output) into one file suitable for BENCH_*.json trajectory tracking.
+(currently fig4, svm_infer, svm_train, pareto and montecarlo; more as
+benchmarks grow JSON output) into one file suitable for BENCH_*.json
+trajectory tracking.
 
 Table2 / fig5 / pareto share per-dataset Algorithm-1 fits through
 ``benchmarks._fit_cache`` — each dataset is fitted once per process.
@@ -13,7 +14,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+# Script-mode robustness: `python benchmarks/run.py` puts benchmarks/ (not
+# the repo root) on sys.path, breaking the `from benchmarks import ...`
+# imports that `python -m benchmarks.run` resolves fine.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
@@ -27,7 +34,7 @@ def main() -> None:
 
     print("== Fig. 4: analog behavioral-model fidelity ==")
     from benchmarks import fig4
-    fig4.run()
+    results["fig4"] = fig4.run(n_variation=32 if args.json else 0)
 
     print("\n== Table II: accuracy / area / power ==")
     from benchmarks import table2
@@ -40,6 +47,10 @@ def main() -> None:
     print("\n== Pareto: kernel-assignment design-space exploration ==")
     from benchmarks import pareto
     results["pareto"] = pareto.run()
+
+    print("\n== Monte-Carlo: variation-aware yield sweep ==")
+    from benchmarks import montecarlo
+    results["montecarlo"] = montecarlo.run()
 
     print("\n== SVM inference: object path vs compiled machine ==")
     from benchmarks import svm_infer

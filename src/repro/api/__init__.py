@@ -25,19 +25,31 @@ The kernel-assignment design space (DESIGN.md §5) is exposed through
 blocks re-exported: :func:`compile_candidates` / :class:`CandidateMachine`
 (the assignment-independent ``(n, P, 2)`` pair-bit tensor) and
 :class:`DesignSpace` / :class:`SweepResult` from ``repro.core.dse``.
+
+Process variation (DESIGN.md §6) rides the same lowering:
+:func:`compile_variants` / :class:`MonteCarloMachine` evaluate every
+candidate under ``V`` sampled fabricated instances in one jitted forward
+(``pair_bits(x) -> (V, n, P, 2)``, variant 0 nominal and bit-identical to
+the un-varied path); :meth:`MixedKernelSVM.monte_carlo` returns per-variant
+accuracy stats, ``pareto(n_variants=...)`` runs the yield-aware sweep, and
+``deploy(yield_floor=...)`` picks the cheapest in-spec design.
 """
 from repro.api.compiled import (
     CandidateMachine,
     CompiledMachine,
+    MonteCarloMachine,
     compile_candidates,
     compile_machine,
+    compile_variants,
 )
-from repro.api.estimator import MixedKernelSVM
+from repro.api.estimator import MixedKernelSVM, MonteCarloResult
+from repro.core.analog import CircuitParams, VariantSet
 from repro.core.dse import DesignSpace, SweepResult
 from repro.core.trainer import PaddedPairs, PairResult, pad_pairs, train_pairs
 
 __all__ = [
-    "CandidateMachine", "CompiledMachine", "DesignSpace", "MixedKernelSVM",
-    "PaddedPairs", "PairResult", "SweepResult", "compile_candidates",
-    "compile_machine", "pad_pairs", "train_pairs",
+    "CandidateMachine", "CircuitParams", "CompiledMachine", "DesignSpace",
+    "MixedKernelSVM", "MonteCarloMachine", "MonteCarloResult", "PaddedPairs",
+    "PairResult", "SweepResult", "VariantSet", "compile_candidates",
+    "compile_machine", "compile_variants", "pad_pairs", "train_pairs",
 ]

@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.core import kernels as kern
 from repro.core import quant
-from repro.core.analog import AnalogBinaryClassifier
+from repro.core.analog import AnalogBinaryClassifier, variant_transfer_params
 from repro.core.ovo import (
     DigitalLinearClassifier,
     DigitalRBFClassifier,
@@ -283,28 +283,37 @@ def _kernel_group_key(s: _KernelSpec):
 # ---------------------------------------------------------------------------
 
 
+def _bank_cell(bank: _KernelBank, dv: jnp.ndarray) -> jnp.ndarray:
+    """The bank's measured 1-D transfer (shared nominal/variant code path)."""
+    return kern.measured_cell(dv, bank.grid, bank.curve, bank.left,
+                              bank.right, bank.uniform_grid,
+                              jnp.float32(bank.inv_step))
+
+
 def _pair_kernel(bank: _KernelBank, xv: jnp.ndarray, sv: jnp.ndarray,
-                 gamma, scale, shift, use_pallas: bool) -> jnp.ndarray:
-    """(n, M) kernel matrix of ONE pair (vmapped over the bank)."""
+                 gamma, scale, shift, use_pallas: bool,
+                 vshift=None, vgain=None) -> jnp.ndarray:
+    """(n, M) kernel matrix of ONE pair (vmapped over the bank).
+
+    ``vshift``/``vgain`` (M, d), when given, evaluate ONE Monte-Carlo
+    variant's per-cell perturbed transfers (DESIGN.md §6.2):
+    ``gain * curve(dv + mu - vshift)``.  The zero-offset variant subtracts
+    an exact 0 and multiplies by an exact 1 around the very same
+    ``_bank_cell`` interpolation the nominal path runs — bit-identical.
+    """
     if bank.kind == "hw":
         d = int(bank.sv.shape[-1])
-
-        def cell(dv):
-            if bank.uniform_grid:
-                return _uniform_interp(dv, bank.curve,
-                                       bank.grid[0], bank.grid[-1],
-                                       bank.left, bank.right,
-                                       jnp.float32(bank.inv_step))
-            return jnp.interp(dv, bank.grid, bank.curve,
-                              left=bank.left, right=bank.right)
-
         # Per-dimension accumulation: (n, M) temporaries instead of one
         # (n, M, d) tensor — same sequential multiply order as jnp.prod,
         # far less memory traffic.  d <= 5 in hardware.
         acc = None
         for k in range(d):
             dv = scale * (xv[:, k:k + 1] - sv[None, :, k]) + shift
-            k1 = cell(dv)
+            if vshift is not None:
+                dv = dv - vshift[None, :, k]
+            k1 = _bank_cell(bank, dv)
+            if vgain is not None:
+                k1 = k1 * vgain[None, :, k]
             acc = k1 if acc is None else acc * k1
         return acc
     if use_pallas:
@@ -354,8 +363,10 @@ def _all_scores(x: jnp.ndarray, linear_banks, kernel_banks,
     return jnp.concatenate(cols, axis=1)[:, inv_perm]
 
 
-def _build_banks(specs: list) -> tuple[list[_LinearBank], list[_KernelBank]]:
-    """Group lowered specs by datapath into padded stacked banks."""
+def _group_specs(
+    specs: list,
+) -> tuple[list[list[_LinearSpec]], list[list[_KernelSpec]]]:
+    """Group lowered specs by datapath (the bank partition)."""
     linear_groups: dict[int, list[_LinearSpec]] = {}
     kernel_groups: dict[tuple, list[_KernelSpec]] = {}
     for s in specs:
@@ -363,8 +374,14 @@ def _build_banks(specs: list) -> tuple[list[_LinearBank], list[_KernelBank]]:
             linear_groups.setdefault(s.input_bits, []).append(s)
         else:
             kernel_groups.setdefault(_kernel_group_key(s), []).append(s)
-    return ([_LinearBank.build(g) for g in linear_groups.values()],
-            [_KernelBank.build(g) for g in kernel_groups.values()])
+    return list(linear_groups.values()), list(kernel_groups.values())
+
+
+def _build_banks(specs: list) -> tuple[list[_LinearBank], list[_KernelBank]]:
+    """Group lowered specs by datapath into padded stacked banks."""
+    linear_groups, kernel_groups = _group_specs(specs)
+    return ([_LinearBank.build(g) for g in linear_groups],
+            [_KernelBank.build(g) for g in kernel_groups])
 
 
 def _inverse_perm(linear_banks, kernel_banks, n_total: int) -> jnp.ndarray:
@@ -722,3 +739,302 @@ def compile_candidates(
     linear_banks, kernel_banks = _build_banks(specs)
     return CandidateMachine(n_classes, linear_banks, kernel_banks,
                             use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo machine: the candidate bit tensor under process variation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _VariantSpec:
+    """Variant tensors of ONE analog candidate (pre-padding, DESIGN.md §6).
+
+    ``shift``/``gain (V, m, d)`` perturb the per-cell Gaussian transfers,
+    ``coef_pos``/``coef_neg (V, m)`` are the per-variant *realised* alpha
+    coefficients (the alpha-multiplier mismatch is folded at lowering time,
+    exactly as the nominal lowering freezes the nominal alpha path), and
+    ``offset (V,)`` the per-variant comparator offset.  Row 0 carries the
+    zero-offset instance and reproduces the nominal spec bit for bit.
+    """
+
+    pair: int
+    shift: np.ndarray
+    gain: np.ndarray
+    coef_pos: np.ndarray
+    coef_neg: np.ndarray
+    offset: np.ndarray
+
+
+def _lower_analog_variants(
+    idx: int,
+    clf: AnalogBinaryClassifier,
+    key: jax.Array,
+    n_variants: int,
+    include_nominal: bool,
+    sigma_scale: float,
+) -> _VariantSpec:
+    """Sample + reduce mismatch for one deployed analog classifier."""
+    variants = clf.sample_variants(
+        key, n_variants, include_nominal=include_nominal,
+        sigma_scale=sigma_scale)
+    t = variant_transfer_params(variants, clf.hw.params)
+    # Per-variant alpha path, frozen with the same f32 ops as the nominal
+    # lowering: desired alpha -> control voltage -> mismatched realised
+    # alpha ((dva - shift) / slope queries the measured sweep).
+    dva = clf.hw.alpha_control_voltage(jnp.asarray(clf.alpha_hw, jnp.float32))
+    a = _f32(clf.hw.alpha_realized(
+        (dva[None, :] - t.alpha_shift) / t.alpha_slope))        # (V, m)
+    pos = (clf.support_y > 0)
+    return _VariantSpec(
+        pair=idx, shift=_f32(t.shift), gain=_f32(t.gain),
+        coef_pos=a * pos[None, :], coef_neg=a * (~pos)[None, :],
+        offset=_f32(t.comp_offset))
+
+
+@dataclasses.dataclass
+class _BankVariants:
+    """Per-bank stacked variant tensors (padded to the bank max M).
+
+    Padded SV slots carry gain 0 AND coefficient 0, so they contribute an
+    exact 0 to the rail GEMM for every variant — the same inertness
+    argument as the nominal bank padding.
+    """
+
+    shift: jnp.ndarray     # (V, P, M, d)
+    gain: jnp.ndarray      # (V, P, M, d)
+    coef_pos: jnp.ndarray  # (V, P, M)
+    coef_neg: jnp.ndarray  # (V, P, M)
+    offset: jnp.ndarray    # (V, P)
+
+    @classmethod
+    def build(cls, vspecs: list[_VariantSpec], m_max: int) -> "_BankVariants":
+        def pad(a: np.ndarray) -> np.ndarray:
+            out = np.zeros(a.shape[:1] + (m_max,) + a.shape[2:], np.float32)
+            out[:, : a.shape[1]] = a
+            return out
+
+        return cls(
+            shift=jnp.asarray(np.stack([pad(s.shift) for s in vspecs], 1)),
+            gain=jnp.asarray(np.stack([pad(s.gain) for s in vspecs], 1)),
+            coef_pos=jnp.asarray(
+                np.stack([pad(s.coef_pos) for s in vspecs], 1)),
+            coef_neg=jnp.asarray(
+                np.stack([pad(s.coef_neg) for s in vspecs], 1)),
+            offset=jnp.asarray(np.stack([s.offset for s in vspecs], 1)),
+        )
+
+    @property
+    def n_variants(self) -> int:
+        return int(self.shift.shape[0])
+
+
+def _key_data(key: jax.Array) -> np.ndarray:
+    """Raw uint32 data of a jax PRNG key — typed or legacy."""
+    try:
+        return np.asarray(jax.random.key_data(key))
+    except TypeError:  # legacy raw uint32 keys
+        return np.asarray(key)
+
+
+def _bank_scores_mc(bank: _KernelBank, bv: _BankVariants, xv: jnp.ndarray,
+                    use_pallas: bool, include_nominal: bool) -> jnp.ndarray:
+    """(V, n, P) decision scores of one analog bank under variation.
+
+    Only the variant-dependent tensors carry the leading V axis; the bank
+    constants and the input batch broadcast (closed over / in_axes=None),
+    so XLA sees one fused program over the whole (V, P) lane grid.
+
+    With ``include_nominal``, variant 0 does NOT go through the perturbed
+    lanes at all: it IS the nominal ``_bank_scores`` subgraph, concatenated
+    in front of the ``V - 1`` sampled lanes.  Subtracting a runtime 0 and
+    multiplying by a runtime 1 are exact IEEE ops, but their mere presence
+    changes XLA's fusion/codegen of the surrounding interpolation chain
+    (observed ~4e-6 drift on CPU), so structural reuse of the nominal
+    expression is the only way the bit-identity contract survives jit.
+    """
+    if bank.kind != "hw":
+        raise TypeError(
+            f"variant lanes require the 'hw' measured-curve kind, got "
+            f"{bank.kind!r}")
+
+    def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off,
+            vshift, vgain):
+        k = _pair_kernel(bank, xv, sv, gamma, scale, shift, use_pallas,
+                         vshift=vshift, vgain=vgain)
+        rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
+        return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
+
+    def one_variant(vshift, vgain, vcpos, vcneg, voff):
+        return jax.vmap(one, out_axes=1)(
+            bank.sv, bank.gamma, bank.scale, bank.shift,
+            vcpos, vcneg, bank.bias_pos, bank.bias_neg, voff,
+            vshift, vgain)
+
+    lo = 1 if include_nominal else 0
+    var = jax.vmap(one_variant)(
+        bv.shift[lo:], bv.gain[lo:], bv.coef_pos[lo:],
+        bv.coef_neg[lo:], bv.offset[lo:])
+    if not include_nominal:
+        return var
+    nom = _bank_scores(bank, xv, use_pallas)
+    return jnp.concatenate([nom[None], var], axis=0)
+
+
+def _all_scores_mc(x: jnp.ndarray, linear_banks, kernel_banks,
+                   bank_variants, inv_perm: jnp.ndarray, n_variants: int,
+                   include_nominal: bool, use_pallas: bool) -> jnp.ndarray:
+    """x (n, d) f32 -> scores (V, n, C) in lowering (pair-index) order.
+
+    Variation-free lanes (linear-digital, digital-RBF) are evaluated ONCE
+    and broadcast over the variant axis; only banks with attached
+    ``_BankVariants`` vmap over it.
+    """
+    xq_cache: dict[int, jnp.ndarray] = {}
+
+    def xq(bits: int) -> jnp.ndarray:
+        if bits not in xq_cache:
+            xq_cache[bits] = x if bits == 0 else quant.quantize_unit(x, bits)
+        return xq_cache[bits]
+
+    cols = []
+    for bank in linear_banks:
+        c = xq(bank.input_bits) @ bank.w.T + bank.b[None, :]
+        cols.append(jnp.broadcast_to(c[None], (n_variants,) + c.shape))
+    for bank, bv in zip(kernel_banks, bank_variants):
+        if bv is None:
+            c = _bank_scores(bank, xq(bank.input_bits), use_pallas)
+            cols.append(jnp.broadcast_to(c[None], (n_variants,) + c.shape))
+        else:
+            cols.append(_bank_scores_mc(bank, bv, xq(bank.input_bits),
+                                        use_pallas, include_nominal))
+    return jnp.concatenate(cols, axis=2)[:, :, inv_perm]
+
+
+class MonteCarloMachine:
+    """BOTH candidates of every pair under ``V`` mismatch instances.
+
+    The Monte-Carlo sibling of :class:`CandidateMachine`: the same padded
+    stacked banks, but every analog lane is evaluated for ``V`` sampled
+    fabricated instances (per-SV-cell Gaussian/alpha/comparator mismatch,
+    ``repro.core.analog.VariantSet``) with the variant axis vmapped INSIDE
+    the one jitted forward —
+
+        ``pair_bits(x) -> (V, n, P, 2)`` int32
+
+    (candidate axis as in :class:`CandidateMachine`; variant axis leading).
+    Digital lanes are variation-free and broadcast.  With the default
+    ``include_nominal`` sampling, variant 0 is the zero-offset instance
+    and its lanes reuse the literal nominal subgraph (see
+    ``_bank_scores_mc``), so its slice is bit-identical to the nominal
+    ``CandidateMachine`` scores — the contract
+    ``benchmarks/montecarlo.py --assert-nominal`` freezes.
+    """
+
+    def __init__(self, n_classes: int, linear_banks, kernel_banks,
+                 bank_variants, n_variants: int, include_nominal: bool,
+                 sigma_scale: float, key_data: Optional[np.ndarray] = None,
+                 use_pallas: Optional[bool] = None):
+        self.n_classes = int(n_classes)
+        self.n_pairs = len(class_pairs(self.n_classes))
+        self.n_variants = int(n_variants)
+        self.include_nominal = bool(include_nominal)
+        self.sigma_scale = float(sigma_scale)
+        self.key_data = None if key_data is None else np.asarray(key_data)
+        self._linear_banks = linear_banks
+        self._kernel_banks = kernel_banks
+        self._bank_variants = bank_variants
+        self.n_features = _bank_feature_dim(linear_banks, kernel_banks)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
+                                       2 * self.n_pairs)
+        self._forward_jit = jax.jit(self._forward)
+
+    def _forward(self, x: jnp.ndarray):
+        """x (n, d) f32 -> (scores (V, n, P, 2), bits (V, n, P, 2))."""
+        flat = _all_scores_mc(x, self._linear_banks, self._kernel_banks,
+                              self._bank_variants, self._inv_perm,
+                              self.n_variants, self.include_nominal,
+                              self.use_pallas)
+        scores = jnp.stack(
+            [flat[..., : self.n_pairs], flat[..., self.n_pairs:]], axis=-1)
+        return scores, (scores >= 0.0).astype(jnp.int32)
+
+    def _run(self, x: np.ndarray):
+        x = jnp.asarray(np.asarray(x), jnp.float32)
+        if x.ndim != 2 or (self.n_features and x.shape[1] != self.n_features):
+            raise ValueError(
+                f"expected (n, {self.n_features}) inputs, got shape {x.shape}")
+        return self._forward_jit(x)
+
+    def pair_scores(self, x: np.ndarray) -> np.ndarray:
+        """Per-variant candidate decision scores ``(V, n, P, 2)``."""
+        return np.asarray(self._run(x)[0])
+
+    def pair_bits(self, x: np.ndarray) -> np.ndarray:
+        """Per-variant candidate comparator bits ``(V, n, P, 2)`` — every
+        variant of every candidate of every pair in ONE device pass."""
+        return np.asarray(self._run(x)[1])
+
+
+def compile_variants(
+    candidates: Sequence,
+    n_classes: int,
+    key: jax.Array,
+    n_variants: int = 64,
+    include_nominal: bool = True,
+    sigma_scale: float = 1.0,
+    use_pallas: Optional[bool] = None,
+) -> MonteCarloMachine:
+    """Lower per-pair candidates + sampled process variation to ONE machine.
+
+    ``candidates`` is the same per-pair ``(linear_clf, rbf_clf)`` sequence
+    :func:`compile_candidates` takes.  ``key`` is an explicit ``jax.random``
+    key (no hidden RNG state): it is split once per pair, so every analog
+    candidate's circuit draws independent per-SV-cell mismatch
+    (``AnalogBinaryClassifier.sample_variants``).  Non-analog RBF
+    candidates (e.g. digital RBF) are accepted and treated as
+    variation-free broadcast lanes.
+
+    With ``include_nominal`` (default) variant 0 is the zero-offset
+    instance — bit-identical to :func:`compile_candidates` on the same
+    candidates — and ``n_variants - 1`` random instances are drawn.
+    """
+    pairs = class_pairs(n_classes)
+    if len(candidates) != len(pairs):
+        raise ValueError(
+            f"{len(candidates)} candidate pairs for {n_classes} classes "
+            f"(expected {len(pairs)})")
+    p = len(pairs)
+    keys = jax.random.split(key, p)
+    specs = []
+    vspecs: dict[int, _VariantSpec] = {}
+    for i, (lin_clf, rbf_clf) in enumerate(candidates):
+        specs.append(_lower_classifier(i, lin_clf))
+        specs.append(_lower_classifier(p + i, rbf_clf))
+        if isinstance(rbf_clf, AnalogBinaryClassifier):
+            vspecs[p + i] = _lower_analog_variants(
+                p + i, rbf_clf, keys[i], n_variants, include_nominal,
+                sigma_scale)
+    linear_groups, kernel_groups = _group_specs(specs)
+    linear_banks = [_LinearBank.build(g) for g in linear_groups]
+    kernel_banks, bank_variants = [], []
+    for g in kernel_groups:
+        bank = _KernelBank.build(g)
+        kernel_banks.append(bank)
+        in_group = [s.pair in vspecs for s in g]
+        if not any(in_group):
+            bank_variants.append(None)
+            continue
+        if not all(in_group):  # cannot happen: 'hw' curves group apart
+            raise ValueError(
+                "bank mixes variant and variant-free lanes; grouping bug")
+        bank_variants.append(_BankVariants.build(
+            [vspecs[s.pair] for s in g], int(bank.sv.shape[1])))
+    return MonteCarloMachine(
+        n_classes, linear_banks, kernel_banks, bank_variants,
+        n_variants=n_variants, include_nominal=include_nominal,
+        sigma_scale=sigma_scale, key_data=_key_data(key),
+        use_pallas=use_pallas)

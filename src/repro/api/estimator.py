@@ -34,32 +34,93 @@ kernel-assignment design space (``repro.core.dse``, DESIGN.md §5):
 
 ``deploy("circuit")`` with no budget remains exactly the Algorithm-1
 machine.
+
+Process variation (DESIGN.md §6) is a first-class axis:
+
+    mc = est.monte_carlo(x_val, y_val, n_variants=64,
+                         key=jax.random.PRNGKey(7))   # per-variant stats
+    mc.mean, mc.worst, mc.yield_at(0.9)
+    front = est.pareto(x_val, y_val, n_variants=64)   # robust sweep
+    machine = est.deploy("circuit", yield_floor=0.95) # cheapest in-spec
+    est.save("models/balance")                        # assignment + MC key
+
+and ``MixedKernelSVM(circuit=CircuitParams(sigma_vth=...))`` overrides the
+analog process corner without touching internals (serialized, since the hw
+model stays deterministic in ``(seed, circuit)``).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.api.compiled import (
     CompiledMachine,
+    MonteCarloMachine,
+    _key_data,
     _strip_ext,
     compile_candidates,
     compile_machine,
+    compile_variants,
 )
 from repro.core import dse as dse_mod
 from repro.core import hwcost, selection
-from repro.core.analog import AnalogBinaryClassifier, AnalogRBFModel
+from repro.core.analog import (
+    AnalogBinaryClassifier,
+    AnalogRBFModel,
+    CircuitParams,
+)
 from repro.core.ovo import DigitalLinearClassifier, MulticlassSVM
 from repro.core.svm import SVMModel
 
 # v2: config gained "hw_all", meta gained "assignment" (the chosen kernel
-# map of a budgeted deploy).  v1 saves load fine (missing keys default).
-_FORMAT_VERSION = 2
+# map of a budgeted deploy).  v3: config gained "circuit" (CircuitParams
+# overrides) and meta gained "monte_carlo" (the MC key/config of a
+# variation-aware sweep).  Older saves load fine (missing keys default).
+_FORMAT_VERSION = 3
 
 _MODEL_SLOTS = ("model_linear", "model_rbf", "model_hw")
 _MODEL_ARRAYS = ("support_x", "support_y", "alpha", "w")
+
+
+@dataclasses.dataclass(frozen=True)
+class MonteCarloResult:
+    """Per-variant accuracy of one deployed assignment (DESIGN.md §6.5).
+
+    ``accuracy[0]`` is the nominal (zero-offset) instance; the remaining
+    rows are sampled fabricated instances.  ``key_data`` is the raw jax
+    PRNG key the mismatch was drawn with — enough to reproduce the exact
+    variant set.
+    """
+
+    accuracy: np.ndarray      # (V,) per-variant validation accuracy
+    assignment: list          # per-pair kernel map evaluated
+    n_variants: int
+    sigma_scale: float
+    key_data: list
+
+    @property
+    def nominal(self) -> float:
+        return float(self.accuracy[0])
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.accuracy))
+
+    @property
+    def std(self) -> float:
+        return float(np.std(self.accuracy))
+
+    @property
+    def worst(self) -> float:
+        return float(np.min(self.accuracy))
+
+    def yield_at(self, accuracy_floor: float) -> float:
+        """Fraction of instances at or above the accuracy floor."""
+        return float(np.mean(self.accuracy >= accuracy_floor))
 
 
 class MixedKernelSVM:
@@ -84,6 +145,7 @@ class MixedKernelSVM:
         use_pallas: Optional[bool] = None,
         mesh=None,
         hw_all: bool = True,
+        circuit: Optional[CircuitParams] = None,
     ):
         self.weight_bits = weight_bits
         self.input_bits = input_bits
@@ -102,6 +164,11 @@ class MixedKernelSVM:
         # the batched engine) so the kernel-assignment design space has an
         # RBF-analog candidate per pair; False restores the lean saves.
         self.hw_all = hw_all
+        # Circuit-parameter overrides for the analog behavioral model
+        # (sigma sweeps, bias studies) WITHOUT touching internals: the hw
+        # model is calibrated from `(seed, circuit)` deterministically, so
+        # — unlike a user-supplied `hw` object — it serializes.
+        self.circuit = circuit
         self._custom_hw = hw is not None
         self.hw_ = hw
         self.pairs_: Optional[list[selection.PairResult]] = None
@@ -116,6 +183,11 @@ class MixedKernelSVM:
         self._dse_cm: Optional[hwcost.CostModel] = None
         self._candidate_cache = None
         self._candidate_machine = None
+        # Monte-Carlo state: compiled variant machines keyed by their
+        # sampling config (cached per fit), plus the serialized MC config
+        # of the last variation-aware sweep (key data, n_variants, ...).
+        self._mc_machines: dict[tuple, MonteCarloMachine] = {}
+        self.mc_state_: Optional[dict] = None
 
     # -- fitting --------------------------------------------------------------
 
@@ -135,7 +207,7 @@ class MixedKernelSVM:
                 f"every class present; got classes {classes.tolist()}")
         self.n_classes_ = int(classes.size)
         if self.hw_ is None:
-            self.hw_ = selection.default_hw(self.seed)
+            self.hw_ = selection.default_hw(self.seed, self.circuit)
         self.pairs_ = selection.train_pairs(
             np.asarray(x), y, self.n_classes_, hw=self.hw_,
             n_epochs=self.n_epochs, seed=self.seed,
@@ -143,6 +215,7 @@ class MixedKernelSVM:
             mesh=self.mesh, hw_all=self.hw_all)
         self.assignment_ = None
         self.pareto_ = None
+        self.mc_state_ = None
         self._build()
         return self
 
@@ -157,6 +230,7 @@ class MixedKernelSVM:
         self._dse_cm = None
         self._candidate_cache = None
         self._candidate_machine = None
+        self._mc_machines = {}
 
     def _check_fitted(self) -> None:
         if self._banks is None:
@@ -193,6 +267,7 @@ class MixedKernelSVM:
         target: str = "float",
         area_budget: Optional[float] = None,
         power_budget: Optional[float] = None,
+        yield_floor: Optional[float] = None,
     ) -> CompiledMachine:
         """Lower ``target``'s bank to one batched jit inference path.
 
@@ -203,8 +278,15 @@ class MixedKernelSVM:
         its per-pair kernel map in ``assignment_`` (serialized by
         ``save``), and compiles that machine.  With no budget the
         Algorithm-1 machine is returned unchanged.
+
+        ``yield_floor`` (requires a prior Monte-Carlo :meth:`pareto`
+        sweep, ``n_variants=...``) switches to the robust rule: the
+        CHEAPEST budget-feasible design whose yield — fraction of sampled
+        fabricated instances at or above the sweep's accuracy floor —
+        meets the floor (``SweepResult.select``).
         """
-        if area_budget is None and power_budget is None:
+        if area_budget is None and power_budget is None \
+                and yield_floor is None:
             if target not in self._compiled:
                 self._compiled[target] = compile_machine(
                     self.bank(target), use_pallas=self.use_pallas)
@@ -218,8 +300,11 @@ class MixedKernelSVM:
                 "no Pareto front available: call est.pareto(x_val, y_val) "
                 "before deploying against a budget")
         i = self.pareto_.select(area_budget=area_budget,
-                                power_budget=power_budget)
+                                power_budget=power_budget,
+                                yield_floor=yield_floor)
         self.assignment_ = self.pareto_.kernel_map(i)
+        if yield_floor is not None and self.mc_state_ is not None:
+            self.mc_state_["yield_floor"] = float(yield_floor)
         return self.deploy_assignment(self.assignment_)
 
     # -- kernel-assignment design space (DESIGN.md §5) -------------------------
@@ -274,6 +359,10 @@ class MixedKernelSVM:
         x_val: np.ndarray,
         y_val: np.ndarray,
         cm: Optional[hwcost.CostModel] = None,
+        n_variants: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+        sigma_scale: float = 1.0,
+        accuracy_floor: Optional[float] = None,
         **sweep_kwargs,
     ) -> dse_mod.SweepResult:
         """Sweep the kernel-assignment space on validation data and return
@@ -282,13 +371,104 @@ class MixedKernelSVM:
         Exhaustive ``2^P`` for ``P <= 12`` (two jit compiles: the candidate
         bit tensor + the bit-recombination program); seeded greedy/flip
         search beyond, seeded with the Algorithm-1 assignment.
+
+        Monte-Carlo mode (``n_variants=``): every assignment additionally
+        gets mean/std/worst-case accuracy and yield over ``n_variants``
+        sampled fabricated instances, and the result carries the robust
+        four-objective front — still two jit compiles (the MC forward +
+        the batched recombination).  ``key`` is the explicit mismatch
+        PRNG key (default ``PRNGKey(self.seed)``); ``accuracy_floor``
+        defaults to two points below the nominal Algorithm-1 circuit
+        accuracy on the given validation set.  The MC config (key data,
+        ``n_variants``, ``sigma_scale``, floor) is recorded in
+        ``mc_state_`` and serialized by :meth:`save`.
         """
         space = self.design_space(cm)
         seeds = sweep_kwargs.pop("seeds", dse_mod.assignment_from_kernel_map(
             self.kernel_map_)[None, :])
+        mc_machine = None
+        if n_variants is not None:
+            if key is None:
+                key = jax.random.PRNGKey(self.seed)
+            if accuracy_floor is None:
+                accuracy_floor = self.score(x_val, y_val,
+                                            target="circuit") - 0.02
+            mc_machine = self.monte_carlo_machine(
+                n_variants, key, sigma_scale=sigma_scale)
+        elif accuracy_floor is not None:
+            raise ValueError(
+                "accuracy_floor only applies to Monte-Carlo sweeps; pass "
+                "n_variants=... as well")
         self.pareto_ = space.sweep(np.asarray(x_val), np.asarray(y_val),
-                                   seeds=seeds, **sweep_kwargs)
+                                   seeds=seeds, mc_machine=mc_machine,
+                                   accuracy_floor=accuracy_floor,
+                                   **sweep_kwargs)
+        if mc_machine is not None:
+            self.mc_state_ = {
+                "key_data": np.asarray(mc_machine.key_data).tolist(),
+                "n_variants": int(n_variants),
+                "sigma_scale": float(sigma_scale),
+                "accuracy_floor": float(accuracy_floor),
+            }
         return self.pareto_
+
+    # -- Monte-Carlo variation (DESIGN.md §6) -----------------------------------
+
+    def monte_carlo_machine(
+        self,
+        n_variants: int,
+        key: jax.Array,
+        sigma_scale: float = 1.0,
+    ) -> MonteCarloMachine:
+        """The compiled variant machine for this estimator's candidates:
+        ``pair_bits(x) -> (V, n, P, 2)`` in one jitted forward, variant 0
+        nominal.  Cached per ``(n_variants, key, sigma_scale)`` so repeated
+        sweeps/evaluations with one config compile once."""
+        self._check_fitted()
+        cache_key = (int(n_variants),
+                     _key_data(key).tobytes(), float(sigma_scale))
+        if cache_key not in self._mc_machines:
+            self._mc_machines[cache_key] = compile_variants(
+                self._candidates(), self.n_classes_, key=key,
+                n_variants=n_variants, sigma_scale=sigma_scale,
+                use_pallas=self.use_pallas)
+        return self._mc_machines[cache_key]
+
+    def monte_carlo(
+        self,
+        x: np.ndarray,
+        y: np.ndarray,
+        n_variants: int = 64,
+        key: Optional[jax.Array] = None,
+        sigma_scale: float = 1.0,
+        assignment: Optional[list] = None,
+    ) -> "MonteCarloResult":
+        """Per-variant accuracy of ONE deployed assignment under sampled
+        process variation.
+
+        ``assignment`` defaults to the estimator's current circuit
+        assignment (``assignment_`` from a budgeted/yield deploy if set,
+        else the Algorithm-1 kernel map).  ``key`` is the explicit
+        mismatch key (default ``PRNGKey(self.seed)``); the key data is
+        recorded in the result for reproducibility.
+        """
+        self._check_fitted()
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        if assignment is None:
+            assignment = self.assignment_ or self.kernel_map_
+        kmap = [k if isinstance(k, str) else ("rbf" if k else "linear")
+                for k in list(assignment)]
+        machine = self.monte_carlo_machine(n_variants, key,
+                                           sigma_scale=sigma_scale)
+        bits3 = machine.pair_bits(np.asarray(x))
+        a = dse_mod.assignment_from_kernel_map(kmap)
+        acc = dse_mod.assignment_accuracies_mc(
+            bits3, a[None, :], np.asarray(y), self.n_classes_)[:, 0]
+        return MonteCarloResult(
+            accuracy=acc, assignment=kmap, n_variants=int(n_variants),
+            sigma_scale=float(sigma_scale),
+            key_data=np.asarray(machine.key_data).tolist())
 
     def deploy_assignment(
         self, assignment: Optional[list] = None
@@ -379,8 +559,11 @@ class MixedKernelSVM:
                 "alpha_floor_rel": self.alpha_floor_rel,
                 "cv_epochs": self.cv_epochs,
                 "hw_all": self.hw_all,
+                "circuit": (None if self.circuit is None
+                            else dataclasses.asdict(self.circuit)),
             },
             "assignment": self.assignment_,
+            "monte_carlo": self.mc_state_,
             "pairs": meta_pairs,
         }
         np.savez(path + ".npz", **arrays)
@@ -401,9 +584,12 @@ class MixedKernelSVM:
                 f"build reads up to version {_FORMAT_VERSION} — upgrade "
                 "the library to load it")
         npz = np.load(path + ".npz")
-        est = cls(use_pallas=use_pallas, **meta["config"])
+        config = dict(meta["config"])
+        if config.get("circuit"):
+            config["circuit"] = CircuitParams(**config["circuit"])
+        est = cls(use_pallas=use_pallas, **config)
         est.n_classes_ = int(meta["n_classes"])
-        est.hw_ = selection.default_hw(est.seed)
+        est.hw_ = selection.default_hw(est.seed, est.circuit)
 
         def rebuild(i: int, slot: str, m_meta: dict) -> SVMModel:
             def arr(name):
@@ -440,6 +626,8 @@ class MixedKernelSVM:
         est.pairs_ = pairs
         assignment = meta.get("assignment")
         est.assignment_ = list(assignment) if assignment else None
+        mc = meta.get("monte_carlo")
+        est.mc_state_ = dict(mc) if mc else None
         est._build()
         return est
 

@@ -20,6 +20,20 @@ Two layers, mirroring the paper's methodology exactly:
 hardware model: alpha normalisation into the (0,1) multiplier range, signed
 accumulation of per-SV currents on +/- rails, and a comparator producing the
 1-bit digital output (analog-in digital-out — no ADC).
+
+Monte-Carlo variation (DESIGN.md §6): printed/flexible devices carry large
+process variation, so a single nominal behavioral model under-reports the
+deployed accuracy distribution.  ``VariantSet`` holds per-SV-cell mismatch
+draws for ``V`` fabricated instances (4 Gaussian-cell offsets + 2 alpha-
+multiplier offsets per cell, plus one comparator offset per instance);
+``variant_transfer_params`` reduces the raw draws to per-cell perturbations
+of the *measured* transfer curves (a horizontal threshold shift, a gain
+factor, an alpha control-voltage shift/slope scale, a comparator offset),
+so the zero-offset variant evaluates the exact same interpolation the
+nominal path runs — bit-identical by construction.  ``AnalogRBFModel``,
+``AnalogBinaryClassifier`` and ``VariantSet`` are registered pytrees, so
+the variant axis vmaps end-to-end through one compiled program
+(``repro.api.compiled.compile_variants``).
 """
 from __future__ import annotations
 
@@ -51,6 +65,7 @@ class CircuitParams:
     mirror_err: float = 0.02      # readout mirror ratio error (rel.)
     lambda_ds: float = 0.01       # residual V_DS sensitivity (rel.)
     comparator_offset: float = 1.0e-10  # comparator input offset (A)
+    comparator_sigma: float = 1.0e-10   # comparator offset mismatch (A, 1-sigma)
 
 
 def _pair_fraction(x: jnp.ndarray) -> jnp.ndarray:
@@ -109,6 +124,146 @@ def dc_sweep_alpha(
     dva = jnp.linspace(-0.25, 0.25, n_points)
     offsets = jax.random.normal(key, (2,)) if key is not None else jnp.zeros((2,))
     return np.asarray(dva), np.asarray(alpha_multiplier_circuit(dva, p, offsets))
+
+
+# --------------------------------------------------------------------------
+# Monte-Carlo process variation (DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+#: Raw mismatch draws per 1-D Gaussian cell (two pair vth offsets, mirror
+#: ratio error, V_DS modulation) and per alpha multiplier (vth offset,
+#: slope error) — the same offset vectors the circuit surrogate consumes.
+N_GAUSS_OFFSETS = 4
+N_ALPHA_OFFSETS = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSet:
+    """Standard-normal mismatch draws for ``V`` instances of one classifier.
+
+    Shapes: ``gauss (V, m, d, 4)`` — per SV x feature Gaussian cell,
+    ``alpha (V, m, 2)`` — per-SV alpha multiplier, ``comparator (V,)`` —
+    one comparator per instance.  Row 0 is the all-zero *nominal* instance
+    when sampled with ``include_nominal=True`` (the default everywhere):
+    its evaluation is bit-identical to the un-varied path.
+    """
+
+    gauss: jnp.ndarray
+    alpha: jnp.ndarray
+    comparator: jnp.ndarray
+
+    @property
+    def n_variants(self) -> int:
+        return int(self.gauss.shape[0])
+
+    @property
+    def n_support(self) -> int:
+        return int(self.gauss.shape[1])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.gauss.shape[2])
+
+
+jax.tree_util.register_dataclass(
+    VariantSet, data_fields=["gauss", "alpha", "comparator"], meta_fields=[])
+
+
+def sample_variant_offsets(
+    key: jax.Array,
+    n_variants: int,
+    n_support: int,
+    n_features: int,
+    include_nominal: bool = True,
+    sigma_scale: float = 1.0,
+) -> VariantSet:
+    """Draw mismatch offsets for ``n_variants`` fabricated instances.
+
+    ``key`` is an explicit ``jax.random`` key — there is no hidden global
+    RNG state anywhere in the Monte-Carlo path.  ``sigma_scale`` multiplies
+    the standard-normal draws, i.e. scales every process sigma
+    (``sigma_vth``, ``mirror_err``, ``lambda_ds``, ``comparator_sigma``)
+    jointly — the knob behind yield-vs-sigma sweeps.  With
+    ``include_nominal`` (default) row 0 is the zero-offset instance, so
+    ``n_variants`` counts it and ``n_variants - 1`` random instances are
+    drawn.
+    """
+    if n_variants < 1 + int(include_nominal):
+        raise ValueError(
+            f"n_variants={n_variants} too small (include_nominal="
+            f"{include_nominal})")
+    v = n_variants - 1 if include_nominal else n_variants
+    kg, ka, kc = jax.random.split(key, 3)
+    s = jnp.float32(sigma_scale)
+    gauss = s * jax.random.normal(kg, (v, n_support, n_features,
+                                       N_GAUSS_OFFSETS))
+    alpha = s * jax.random.normal(ka, (v, n_support, N_ALPHA_OFFSETS))
+    comparator = s * jax.random.normal(kc, (v,))
+    if include_nominal:
+        gauss = jnp.concatenate([jnp.zeros_like(gauss[:1]), gauss])
+        alpha = jnp.concatenate([jnp.zeros_like(alpha[:1]), alpha])
+        comparator = jnp.concatenate(
+            [jnp.zeros_like(comparator[:1]), comparator])
+    return VariantSet(gauss=gauss, alpha=alpha, comparator=comparator)
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantTransferParams:
+    """Per-cell perturbations of the measured transfers for ``V`` instances.
+
+    The raw circuit offsets of a :class:`VariantSet` are reduced to the
+    four quantities a *calibrated* instance's transfer actually moves by
+    (see DESIGN.md §6.2 for the derivation from the surrogate equations):
+
+    * ``shift (V, m, d)``   — Gaussian-cell bell center shift (V): the
+      common-mode vth offset of the two differential pairs,
+    * ``gain (V, m, d)``    — cell peak gain: mirror-ratio and V_DS errors
+      times the peak attenuation ``4 sig(-e)(1 - sig(e))`` of the
+      *differential* vth offset ``e`` between the two pairs,
+    * ``alpha_shift (V, m)`` / ``alpha_slope (V, m)`` — alpha-multiplier
+      control-voltage offset and logistic slope scale,
+    * ``comp_offset (V,)``  — comparator offset in units of I_in.
+
+    All-zero draws reduce to shift 0, gain 1, slope 1 and the nominal
+    comparator offset *exactly* (0.5 and 1.0 are exact in f32), so the
+    nominal variant's arithmetic is bit-identical to the un-varied path.
+    """
+
+    shift: jnp.ndarray
+    gain: jnp.ndarray
+    alpha_shift: jnp.ndarray
+    alpha_slope: jnp.ndarray
+    comp_offset: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    VariantTransferParams,
+    data_fields=["shift", "gain", "alpha_shift", "alpha_slope",
+                 "comp_offset"],
+    meta_fields=[])
+
+
+def variant_transfer_params(
+    v: VariantSet, p: CircuitParams
+) -> VariantTransferParams:
+    """Reduce raw mismatch draws to measured-transfer perturbations."""
+    nvt = p.n * p.v_t
+    g = v.gauss
+    shift = (0.5 * (g[..., 0] + g[..., 1])) * p.sigma_vth
+    diff = (0.5 * (g[..., 0] - g[..., 1])) * (p.sigma_vth / nvt)
+    peak = 4.0 * _pair_fraction(-diff) * (1.0 - _pair_fraction(diff))
+    gain = (peak
+            * (1.0 + g[..., 2] * p.mirror_err)
+            * (1.0 + g[..., 3] * p.lambda_ds))
+    alpha_shift = v.alpha[..., 0] * p.sigma_vth
+    alpha_slope = 1.0 + v.alpha[..., 1] * 0.02
+    # Nominal offset divided in f64 first so variant 0 carries the exact
+    # f32 cast of the same number the nominal lowering stores.
+    comp_offset = (p.comparator_offset / p.i_bias
+                   + v.comparator * (p.comparator_sigma / p.i_bias))
+    return VariantTransferParams(
+        shift=shift, gain=gain, alpha_shift=alpha_shift,
+        alpha_slope=alpha_slope, comp_offset=comp_offset)
 
 
 # --------------------------------------------------------------------------
@@ -186,10 +341,19 @@ class AnalogRBFModel:
         key: Optional[jax.Array] = None,
         v_scale: float = 0.5,
     ) -> "AnalogRBFModel":
-        """Calibrate the behavioral model from surrogate-SPICE DC sweeps."""
-        dv, curve = dc_sweep_gaussian(p, key)
+        """Calibrate the behavioral model from surrogate-SPICE DC sweeps.
+
+        ``key`` seeds the fabricated instance's mismatch draws; the key is
+        split so the Gaussian-cell and alpha-multiplier sweeps see
+        *independent* offsets (reusing one key for two different draws
+        silently correlates the two circuits).
+        """
+        kg = ka = None
+        if key is not None:
+            kg, ka = jax.random.split(key)
+        dv, curve = dc_sweep_gaussian(p, kg)
         a0, g0, mu = fit_gaussian(dv, curve)
-        dva, ratio = dc_sweep_alpha(p, key)
+        dva, ratio = dc_sweep_alpha(p, ka)
         x0, s = fit_logistic(dva, ratio)
         return cls(
             params=p, dv_grid=dv, kernel_curve=curve / curve.max(),
@@ -220,6 +384,46 @@ class AnalogRBFModel:
             jnp.asarray(self.dv_grid), jnp.asarray(self.kernel_curve),
             left=float(self.kernel_curve[0]), right=float(self.kernel_curve[-1]),
         )
+
+    def kernel_1d_variants(
+        self, dv_volts: jnp.ndarray, shift: jnp.ndarray, gain: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Per-cell measured transfer under mismatch (DESIGN.md §6.2):
+
+            ``gain * curve(dv + mu - shift)``
+
+        ``dv_volts`` broadcasts against the per-cell ``shift``/``gain`` of
+        :func:`variant_transfer_params` (typically ``dv (n, m, d)`` against
+        ``(V, 1, m, d)`` for the ``(V, n, m, d)`` variant tensor).  With
+        zero offsets this is ``curve(dv + mu) * 1.0`` — the exact
+        :meth:`kernel_1d` arithmetic, bit for bit.
+        """
+        return gain * jnp.interp(
+            dv_volts + self.mu - shift,
+            jnp.asarray(self.dv_grid), jnp.asarray(self.kernel_curve),
+            left=float(self.kernel_curve[0]), right=float(self.kernel_curve[-1]),
+        )
+
+    def kernel_response_variants(
+        self,
+        x: jnp.ndarray,
+        sv: jnp.ndarray,
+        gamma_star,
+        shift: jnp.ndarray,
+        gain: jnp.ndarray,
+    ) -> jnp.ndarray:
+        """Separable kernel of ``V`` mismatched instances: ``(V, n, m)``.
+
+        ``x (n, d)``, ``sv (m, d)``, ``shift``/``gain (V, m, d)`` — every
+        one of the ``V * m * d`` Gaussian cells evaluates its own perturbed
+        transfer, vectorized over the whole ``(V, m)`` grid instead of the
+        one shared 1-D curve of :meth:`kernel_response`.
+        """
+        s = self.input_scale(gamma_star)
+        dv = self.v_scale * s * (x[:, None, :] - sv[None, :, :])  # (n, m, d)
+        k = self.kernel_1d_variants(
+            dv[None], shift[:, None], gain[:, None])              # (V, n, m, d)
+        return jnp.prod(k, axis=-1)
 
     def kernel_response(
         self, x: jnp.ndarray, sv: jnp.ndarray, gamma_star
@@ -319,6 +523,60 @@ class AnalogBinaryClassifier:
         off = self.hw.params.comparator_offset / self.hw.params.i_bias
         return np.asarray(i_plus - i_minus + off >= 0.0, np.int32)
 
+    # -- Monte-Carlo variation (DESIGN.md §6) --------------------------------
+
+    def sample_variants(
+        self,
+        key: jax.Array,
+        n_variants: int,
+        include_nominal: bool = True,
+        sigma_scale: float = 1.0,
+    ) -> VariantSet:
+        """Draw per-SV-cell mismatch for ``n_variants`` instances of THIS
+        classifier's circuit (its ``m x d`` Gaussian cells, ``m`` alpha
+        multipliers and one comparator)."""
+        return sample_variant_offsets(
+            key, n_variants, self.n_support, self.n_features,
+            include_nominal=include_nominal, sigma_scale=sigma_scale)
+
+    def decision_mc(self, x: np.ndarray, variants: VariantSet) -> jnp.ndarray:
+        """Comparator input ``I+ - I- + offset`` per variant: ``(V, n)``.
+
+        Every instance evaluates its own perturbed per-cell transfers
+        (Gaussian cells AND alpha multipliers AND comparator) vectorized
+        over the ``(V, m)`` grid; the zero-offset row reproduces the
+        nominal :meth:`rail_currents`/:meth:`predict_bits` arithmetic
+        bit for bit.
+        """
+        t = variant_transfer_params(variants, self.hw.params)
+        xj = jnp.asarray(x, jnp.float32)
+        k = self.hw.kernel_response_variants(
+            xj, jnp.asarray(self.support_x, jnp.float32), self.gamma_star,
+            t.shift, t.gain)                                      # (V, n, m)
+        dva = self.hw.alpha_control_voltage(
+            jnp.asarray(self.alpha_hw, jnp.float32))              # (m,)
+        a = self.hw.alpha_realized(
+            (dva[None, :] - t.alpha_shift) / t.alpha_slope)       # (V, m)
+        cur = k * a[:, None, :]
+        pos = jnp.asarray(self.support_y > 0, jnp.float32)
+        neg = 1.0 - pos
+        # Rail accumulation per variant with the exact nominal (n, m)@(m,)
+        # matvec shapes: batched/reshaped contractions reduce m in a
+        # different order on CPU (observed 1-ulp drift), which would break
+        # the nominal-variant bit-identity contract.  This is the reference
+        # path — the compiled MonteCarloMachine is the throughput path.
+        bias_p = jnp.maximum(self.bias_hw, 0.0)
+        bias_n = jnp.maximum(-self.bias_hw, 0.0)
+        rows = [(cur[i] @ pos + bias_p) - (cur[i] @ neg + bias_n)
+                for i in range(cur.shape[0])]
+        return jnp.stack(rows) + t.comp_offset[:, None]
+
+    def predict_bits_mc(
+        self, x: np.ndarray, variants: VariantSet
+    ) -> np.ndarray:
+        """Per-variant comparator bits ``(V, n)`` int32."""
+        return np.asarray(self.decision_mc(x, variants) >= 0.0, np.int32)
+
     @property
     def n_support(self) -> int:
         return int(self.support_x.shape[0])
@@ -326,3 +584,39 @@ class AnalogBinaryClassifier:
     @property
     def n_features(self) -> int:
         return int(self.support_x.shape[1])
+
+
+# --------------------------------------------------------------------------
+# Pytree registration: the behavioral model and the deployed classifier are
+# batchable JAX containers (array/scalar fields are leaves; the frozen
+# CircuitParams rides along as static aux data), so a stacked model vmaps
+# over a leading variant/instance axis end-to-end.
+# --------------------------------------------------------------------------
+
+_RBF_MODEL_LEAVES = ("dv_grid", "kernel_curve", "a0", "gamma0", "mu",
+                     "alpha_x0", "alpha_s", "dva_grid", "alpha_curve",
+                     "v_scale")
+_CLF_LEAVES = ("hw", "support_x", "support_y", "alpha_hw", "bias_hw",
+               "gamma_star")
+
+
+def _rbf_model_flatten(m: "AnalogRBFModel"):
+    return tuple(getattr(m, f) for f in _RBF_MODEL_LEAVES), m.params
+
+
+def _rbf_model_unflatten(params: CircuitParams, leaves) -> "AnalogRBFModel":
+    return AnalogRBFModel(params, *leaves)
+
+
+def _clf_flatten(c: "AnalogBinaryClassifier"):
+    return tuple(getattr(c, f) for f in _CLF_LEAVES), None
+
+
+def _clf_unflatten(_, leaves) -> "AnalogBinaryClassifier":
+    return AnalogBinaryClassifier(*leaves)
+
+
+jax.tree_util.register_pytree_node(
+    AnalogRBFModel, _rbf_model_flatten, _rbf_model_unflatten)
+jax.tree_util.register_pytree_node(
+    AnalogBinaryClassifier, _clf_flatten, _clf_unflatten)

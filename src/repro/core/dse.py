@@ -27,6 +27,17 @@ vectorized passes over an ``(S, P)`` boolean assignment matrix:
 non-dominated set; ``SweepResult.select`` picks the cheapest front point
 meeting an area/power budget (the deployment rule behind
 ``MixedKernelSVM.deploy(..., area_budget=..., power_budget=...)``).
+
+Monte-Carlo variation (DESIGN.md §6): with a ``MonteCarloMachine`` the
+candidate bit tensor gains a leading variant axis ``(V, n, P, 2)`` and the
+SAME bit-recombination GEMM, vmapped over it
+(``assignment_accuracies_mc``), scores every (variant, assignment) cell in
+one program.  Each assignment then carries mean/std/worst-case accuracy
+and **yield** — the fraction of fabricated instances meeting an accuracy
+floor — ``pareto_front`` gains a robust four-objective mode, and
+``SweepResult.select(yield_floor=...)`` picks the cheapest budget-feasible
+design meeting the yield spec (the rule behind
+``MixedKernelSVM.deploy(..., yield_floor=...)``).
 """
 from __future__ import annotations
 
@@ -75,8 +86,7 @@ def enumerate_assignments(n_pairs: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _sweep_encoder(bits2, assignments, y, table, weights):
+def _encoder_accuracy(bits2, assignments, y, table, weights):
     """Accuracy of ALL assignments through the packed encoder table.
 
     ``bits2 (n, P, 2)`` int32, ``assignments (S, P)`` int32, ``y (n,)``
@@ -92,8 +102,7 @@ def _sweep_encoder(bits2, assignments, y, table, weights):
     return jnp.mean((labels == y[:, None]).astype(jnp.float32), axis=0)
 
 
-@jax.jit
-def _sweep_votes(bits2, assignments, y, vote_a, vote_b):
+def _votes_accuracy(bits2, assignments, y, vote_a, vote_b):
     """Votes-matmul fallback for machines beyond the encoder-table regime.
 
     Materializes the selected bits ``(n, S, P)`` — callers chunk the
@@ -104,6 +113,19 @@ def _sweep_votes(bits2, assignments, y, vote_a, vote_b):
     votes = sel @ vote_a + (1 - sel) @ vote_b               # (n, S, K)
     labels = jnp.argmax(votes, axis=-1)                     # lowest-index tie
     return jnp.mean((labels == y[:, None]).astype(jnp.float32), axis=0)
+
+
+_sweep_encoder = jax.jit(_encoder_accuracy)
+_sweep_votes = jax.jit(_votes_accuracy)
+
+#: The Monte-Carlo programs vmap the SAME recombination bodies over a
+#: leading variant axis of the bit tensor: ``bits3 (V, n, P, 2) -> (V, S)``.
+#: One extra jit compile each — the second of the "<= 2 additional
+#: compiles" budget of the variant axis (the first is the MC forward).
+_sweep_encoder_mc = jax.jit(
+    jax.vmap(_encoder_accuracy, in_axes=(0, None, None, None, None)))
+_sweep_votes_mc = jax.jit(
+    jax.vmap(_votes_accuracy, in_axes=(0, None, None, None, None)))
 
 
 def _vote_matrices(n_classes: int) -> tuple[np.ndarray, np.ndarray]:
@@ -157,20 +179,109 @@ def assignment_accuracies(
     return out
 
 
+#: Assignment chunk of the Monte-Carlo encoder sweep: bounds the
+#: ``(V, n, CHUNK)`` codes tensor when the variant axis multiplies the
+#: exhaustive space (64 x 400 x 512 int32 ~ 50 MB).
+MC_CHUNK = 512
+
+
+def assignment_accuracies_mc(
+    bits3: np.ndarray,
+    assignments: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    max_table_bits: int = MAX_EXHAUSTIVE_PAIRS,
+) -> np.ndarray:
+    """Validation accuracy of every (variant, assignment): ``(V, S)`` f64.
+
+    ``bits3`` is the ``(V, n, P, 2)`` per-variant candidate-bit tensor of
+    ``MonteCarloMachine.pair_bits``.  The bit-recombination GEMM is batched
+    over the leading variant axis — ONE jitted program scores the whole
+    ``V x S`` grid (chunked over assignments beyond ``MC_CHUNK`` to bound
+    the codes tensor; chunks are padded to one compiled shape).
+    """
+    bits3 = np.asarray(bits3, np.int32)
+    if bits3.ndim != 4:
+        raise ValueError(f"bits3 must be (V, n, P, 2), got {bits3.shape}")
+    a = np.atleast_2d(np.asarray(assignments)).astype(np.int32)
+    y = np.asarray(y, np.int32)
+    n_pairs = bits3.shape[2]
+    if a.shape[1] != n_pairs:
+        raise ValueError(
+            f"assignments have {a.shape[1]} pairs, bits tensor has {n_pairs}")
+    if n_pairs <= max_table_bits:
+        table = jnp.asarray(build_encoder_table(n_classes))
+        weights = jnp.asarray((1 << np.arange(n_pairs)).astype(np.int32))
+        if a.shape[0] <= MC_CHUNK:
+            return np.asarray(
+                _sweep_encoder_mc(bits3, a, y, table, weights), np.float64)
+        out = np.empty((bits3.shape[0], a.shape[0]), np.float64)
+        for lo in range(0, a.shape[0], MC_CHUNK):
+            chunk = a[lo: lo + MC_CHUNK]
+            pad = MC_CHUNK - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate([chunk, np.repeat(a[:1], pad, 0)])
+            acc = np.asarray(_sweep_encoder_mc(bits3, chunk, y, table,
+                                               weights))
+            out[:, lo: lo + MC_CHUNK] = acc[:, : MC_CHUNK - pad or None]
+        return out
+    va, vb = _vote_matrices(n_classes)
+    va, vb = jnp.asarray(va), jnp.asarray(vb)
+    # The vmapped votes program materializes a (V, n, CHUNK, P) selected-
+    # bits tensor — V times the nominal path's footprint — so the chunk
+    # shrinks by V to keep the same memory bound.
+    chunk_size = max(1, VOTES_CHUNK // bits3.shape[0])
+    out = np.empty((bits3.shape[0], a.shape[0]), np.float64)
+    for lo in range(0, a.shape[0], chunk_size):
+        chunk = a[lo: lo + chunk_size]
+        pad = chunk_size - chunk.shape[0]
+        if pad:
+            chunk = np.concatenate([chunk, np.repeat(a[:1], pad, 0)])
+        acc = np.asarray(_sweep_votes_mc(bits3, chunk, y, va, vb))
+        out[:, lo: lo + chunk_size] = acc[:, : chunk_size - pad or None]
+    return out
+
+
+def mc_statistics(acc_vs: np.ndarray, accuracy_floor: float) -> dict:
+    """Per-assignment robustness statistics over the variant axis.
+
+    ``acc_vs (V, S)`` -> dict of ``(S,)`` arrays: ``mean``, ``std``
+    (population), ``worst`` (min over variants) and ``yield`` — the
+    fraction of variants whose accuracy meets ``accuracy_floor``.
+    """
+    acc_vs = np.asarray(acc_vs, np.float64)
+    return {
+        "mean": acc_vs.mean(axis=0),
+        "std": acc_vs.std(axis=0),
+        "worst": acc_vs.min(axis=0),
+        "yield": (acc_vs >= accuracy_floor).mean(axis=0),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Pareto reduction and budget selection
 # ---------------------------------------------------------------------------
 
 
 def pareto_front(
-    accuracy: np.ndarray, area: np.ndarray, power: np.ndarray
+    accuracy: np.ndarray,
+    area: np.ndarray,
+    power: np.ndarray,
+    yield_: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Indices of the non-dominated points (max accuracy, min area/power),
     sorted by ascending area.  A point is dominated if another is at least
-    as good on all three objectives and strictly better on one."""
+    as good on all objectives and strictly better on one.
+
+    Robust mode: passing the per-assignment ``yield_`` of a Monte-Carlo
+    sweep adds a fourth maximized objective, so a design that trades a
+    little mean accuracy for a markedly higher fraction of in-spec
+    fabricated instances stays on the front.
+    """
     acc = np.asarray(accuracy, np.float64)
     ar = np.asarray(area, np.float64)
     pw = np.asarray(power, np.float64)
+    yd = None if yield_ is None else np.asarray(yield_, np.float64)
     n = acc.shape[0]
     keep = np.ones(n, bool)
     # Chunked O(S^2) bool reduction: at S = 4096 this is a handful of
@@ -178,19 +289,32 @@ def pareto_front(
     chunk = 1024
     for lo in range(0, n, chunk):
         sl = slice(lo, min(lo + chunk, n))
-        ge_acc = acc[None, :] >= acc[sl, None]
-        le_ar = ar[None, :] <= ar[sl, None]
-        le_pw = pw[None, :] <= pw[sl, None]
+        ge = (acc[None, :] >= acc[sl, None]) \
+            & (ar[None, :] <= ar[sl, None]) \
+            & (pw[None, :] <= pw[sl, None])
         strict = (acc[None, :] > acc[sl, None]) | \
             (ar[None, :] < ar[sl, None]) | (pw[None, :] < pw[sl, None])
-        keep[sl] &= ~(ge_acc & le_ar & le_pw & strict).any(axis=1)
+        if yd is not None:
+            ge &= yd[None, :] >= yd[sl, None]
+            strict |= yd[None, :] > yd[sl, None]
+        keep[sl] &= ~(ge & strict).any(axis=1)
     idx = np.flatnonzero(keep)
     return idx[np.argsort(ar[idx], kind="stable")]
 
 
 @dataclasses.dataclass
 class SweepResult:
-    """Evaluated design points of one DSE sweep + their Pareto front."""
+    """Evaluated design points of one DSE sweep + their Pareto front.
+
+    The Monte-Carlo fields are populated only by variation-aware sweeps
+    (``DesignSpace.sweep(mc_machine=...)``): ``accuracy`` then holds the
+    *nominal* (zero-offset variant) accuracy, ``accuracy_mc`` the full
+    ``(V, S)`` per-variant matrix, and ``acc_mean``/``acc_std``/
+    ``acc_worst``/``yield_`` its per-assignment statistics (``yield_`` =
+    fraction of variants at or above ``accuracy_floor``).  ``front`` stays
+    the nominal three-objective front; ``robust_front`` is the
+    four-objective (mean accuracy, area, power, yield) front.
+    """
 
     assignments: np.ndarray   # (S, P) bool — True: pair on the RBF candidate
     accuracy: np.ndarray      # (S,) validation accuracy
@@ -201,10 +325,32 @@ class SweepResult:
     exhaustive: bool          # full 2^P enumeration vs seeded search
     elapsed_s: float
     assignments_per_s: float
+    # -- Monte-Carlo robustness (None on nominal sweeps) --------------------
+    accuracy_mc: Optional[np.ndarray] = None   # (V, S) per-variant accuracy
+    acc_mean: Optional[np.ndarray] = None      # (S,)
+    acc_std: Optional[np.ndarray] = None       # (S,)
+    acc_worst: Optional[np.ndarray] = None     # (S,)
+    yield_: Optional[np.ndarray] = None        # (S,) frac >= accuracy_floor
+    accuracy_floor: Optional[float] = None
+    n_variants: Optional[int] = None
+    sigma_scale: Optional[float] = None
+    mc_key_data: Optional[np.ndarray] = None   # raw jax PRNG key data
+    robust_front: Optional[np.ndarray] = None  # 4-objective front indices
 
     @property
     def n_pairs(self) -> int:
         return int(self.assignments.shape[1])
+
+    @property
+    def is_monte_carlo(self) -> bool:
+        return self.accuracy_mc is not None
+
+    def yield_at(self, accuracy_floor: float) -> np.ndarray:
+        """Per-assignment yield against an ad-hoc floor (MC sweeps only)."""
+        if not self.is_monte_carlo:
+            raise RuntimeError("yield_at requires a Monte-Carlo sweep")
+        return (np.asarray(self.accuracy_mc, np.float64)
+                >= accuracy_floor).mean(axis=0)
 
     def kernel_map(self, i: int) -> list[str]:
         return kernel_map_from_assignment(self.assignments[i])
@@ -234,38 +380,84 @@ class SweepResult:
         self,
         area_budget: Optional[float] = None,
         power_budget: Optional[float] = None,
+        yield_floor: Optional[float] = None,
     ) -> int:
-        """Deployment rule: the most accurate Pareto point within budget,
-        ties broken toward lower area then lower power."""
-        idx = self.front
-        ok = np.ones(idx.shape[0], bool)
+        """Deployment rule.
+
+        Nominal (``yield_floor=None``): the most accurate Pareto point
+        within budget, ties broken toward lower area then lower power.
+
+        Robust (``yield_floor=``, requires a Monte-Carlo sweep): the
+        CHEAPEST budget-feasible point of the robust front whose yield —
+        fraction of fabricated instances at or above the sweep's
+        ``accuracy_floor`` — meets the floor; ties broken toward lower
+        power then higher mean accuracy.  The different objective order is
+        deliberate: once the yield spec is met, a flexible-electronics
+        deployment is cost-driven.
+        """
+        if yield_floor is None:
+            idx = self.front
+            ok = np.ones(idx.shape[0], bool)
+            if area_budget is not None:
+                ok &= self.area[idx] <= area_budget
+            if power_budget is not None:
+                ok &= self.power[idx] <= power_budget
+            if not ok.any():
+                cheapest = idx[np.argmin(self.area[idx])]
+                raise ValueError(
+                    "no Pareto point meets the budget (cheapest front "
+                    f"point: area {self.area[cheapest]:.4f} mm^2, power "
+                    f"{self.power[cheapest]:.4f} mW)")
+            cand = idx[ok]
+            order = np.lexsort((self.power[cand], self.area[cand],
+                                -self.accuracy[cand]))
+            return int(cand[order[0]])
+        if not self.is_monte_carlo:
+            raise RuntimeError(
+                "select(yield_floor=...) needs a Monte-Carlo sweep: run "
+                "DesignSpace.sweep(mc_machine=...) / "
+                "est.pareto(..., n_variants=...) first")
+        idx = self.robust_front
+        ok = self.yield_[idx] >= yield_floor
         if area_budget is not None:
             ok &= self.area[idx] <= area_budget
         if power_budget is not None:
             ok &= self.power[idx] <= power_budget
         if not ok.any():
-            cheapest = idx[np.argmin(self.area[idx])]
+            best = idx[np.argmax(self.yield_[idx])]
             raise ValueError(
-                "no Pareto point meets the budget (cheapest front point: "
-                f"area {self.area[cheapest]:.4f} mm^2, power "
-                f"{self.power[cheapest]:.4f} mW)")
+                f"no robust-front point meets yield >= {yield_floor} "
+                f"within budget (best available yield "
+                f"{self.yield_[best]:.3f} at accuracy floor "
+                f"{self.accuracy_floor}, area {self.area[best]:.4f} mm^2)")
         cand = idx[ok]
-        order = np.lexsort((self.power[cand], self.area[cand],
-                            -self.accuracy[cand]))
+        order = np.lexsort((-self.acc_mean[cand], self.power[cand],
+                            self.area[cand]))
         return int(cand[order[0]])
 
-    def front_points(self) -> list[dict]:
-        """JSON-friendly view of the front (benchmarks/pareto.py)."""
-        return [
-            {
+    def front_points(self, robust: bool = False) -> list[dict]:
+        """JSON-friendly view of the front (benchmarks/pareto.py,
+        benchmarks/montecarlo.py).  ``robust=True`` walks the
+        four-objective robust front of a Monte-Carlo sweep instead."""
+        idx = self.robust_front if robust else self.front
+        out = []
+        for i in idx:
+            entry = {
                 "kernel_map": self.kernel_map(i),
                 "n_rbf": int(self.assignments[i].sum()),
                 "accuracy": float(self.accuracy[i]),
                 "area_mm2": float(self.area[i]),
                 "power_mw": float(self.power[i]),
             }
-            for i in self.front
-        ]
+            if self.is_monte_carlo:
+                entry.update(
+                    acc_mean=float(self.acc_mean[i]),
+                    acc_std=float(self.acc_std[i]),
+                    acc_worst=float(self.acc_worst[i]),
+                    yield_frac=float(self.yield_[i]),
+                )
+            out.append(entry)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -388,6 +580,8 @@ class DesignSpace:
         n_random: int = 16,
         rng_seed: int = 0,
         max_rounds: int = 64,
+        mc_machine=None,
+        accuracy_floor: Optional[float] = None,
     ) -> SweepResult:
         """Evaluate accuracy + cost over the assignment space.
 
@@ -395,30 +589,74 @@ class DesignSpace:
         max_exhaustive`` (two jit compiles total: candidate bits + the
         recombination program), else the seeded greedy/flip search
         (``seeds`` typically carries the Algorithm-1 assignment).
+
+        Monte-Carlo mode: pass an ``mc_machine``
+        (``repro.api.compiled.MonteCarloMachine``, sampled with
+        ``include_nominal``) and an ``accuracy_floor``.  The per-variant
+        bit tensor is recombined in ONE batched program — every assignment
+        gets mean/std/worst-case accuracy and yield (fraction of variants
+        at or above the floor) for the cost of the same bit-recombination
+        GEMM batched over V, and the result carries the robust
+        four-objective front.  Still exactly two jit compiles on the
+        exhaustive path: the MC forward and the MC recombination (the
+        nominal ``accuracy`` column is the zero-offset variant's row).
         """
         t0 = time.perf_counter()
-        bits2 = self.machine.pair_bits(x_val)
+        acc_vs = None
+        if mc_machine is not None:
+            if accuracy_floor is None:
+                raise ValueError(
+                    "a Monte-Carlo sweep needs an explicit accuracy_floor "
+                    "(the yield spec); pass accuracy_floor=...")
+            if not mc_machine.include_nominal:
+                raise ValueError(
+                    "the MC machine must be sampled with include_nominal "
+                    "so the sweep carries the nominal accuracy column")
+            bits3 = mc_machine.pair_bits(x_val)
+            bits2 = bits3[0]
+        else:
+            bits2 = self.machine.pair_bits(x_val)
+        search_acc = None
         if assignments is not None:
             assignments = np.atleast_2d(np.asarray(assignments, bool))
-            acc = assignment_accuracies(bits2, assignments, y_val,
-                                        self.n_classes)
             exhaustive = False
         elif self.n_pairs <= max_exhaustive:
             assignments = enumerate_assignments(self.n_pairs)
-            acc = assignment_accuracies(bits2, assignments, y_val,
-                                        self.n_classes)
             exhaustive = True
         else:
-            assignments, acc = _search_assignments(
+            assignments, search_acc = _search_assignments(
                 bits2, y_val, self.cost_table, self.n_classes,
                 seeds, n_random, rng_seed, max_rounds)
             exhaustive = False
+        if mc_machine is not None:
+            acc_vs = assignment_accuracies_mc(
+                bits3, assignments, y_val, self.n_classes)
+            acc = acc_vs[0]
+        elif search_acc is not None:
+            acc = search_acc
+        else:
+            acc = assignment_accuracies(bits2, assignments, y_val,
+                                        self.n_classes)
         area, power = hwcost.assignment_costs(self.cost_table, assignments)
         front = pareto_front(acc, area, power)
         elapsed = time.perf_counter() - t0
-        return SweepResult(
+        result = SweepResult(
             assignments=assignments, accuracy=acc, area=area, power=power,
             front=front, n_classes=self.n_classes, exhaustive=exhaustive,
             elapsed_s=elapsed,
             assignments_per_s=assignments.shape[0] / max(elapsed, 1e-9),
         )
+        if acc_vs is not None:
+            stats = mc_statistics(acc_vs, accuracy_floor)
+            result.accuracy_mc = acc_vs
+            result.acc_mean = stats["mean"]
+            result.acc_std = stats["std"]
+            result.acc_worst = stats["worst"]
+            result.yield_ = stats["yield"]
+            result.accuracy_floor = float(accuracy_floor)
+            result.n_variants = int(mc_machine.n_variants)
+            result.sigma_scale = float(mc_machine.sigma_scale)
+            result.mc_key_data = mc_machine.key_data
+            result.robust_front = pareto_front(
+                result.acc_mean, area, power, yield_=result.yield_)
+        return result

@@ -124,6 +124,24 @@ def _uniform_interp(v, curve, lo, hi, left, right, inv_step):
     return f
 
 
+def measured_cell(v, grid, curve, left, right, uniform: bool, inv_step):
+    """ONE measured-transfer-curve cell evaluation, shared by every
+    consumer of a calibrated analog sweep (the nominal compiled machine,
+    the Monte-Carlo variant lanes, hardware-in-the-loop training).
+
+    ``uniform`` is a static Python bool: a linspace abscissa takes the
+    O(1) ``_uniform_interp`` fast path, anything else falls back to
+    ``jnp.interp``.  Keeping this a single function is part of the
+    nominal-equivalence contract (DESIGN.md §6.3): the variant path runs
+    the *same* interpolation code as the nominal path, so a zero-offset
+    variant cannot drift from it.
+    """
+    if uniform:
+        return _uniform_interp(v, curve, grid[0], grid[-1], left, right,
+                               inv_step)
+    return jnp.interp(v, grid, curve, left=left, right=right)
+
+
 def _grid_fast_path(grid) -> dict:
     """{'uniform_grid': bool, 'inv_step': float} for a sweep abscissa."""
     import numpy as np

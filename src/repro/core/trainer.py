@@ -90,9 +90,19 @@ def binary_subset(
     return x[mask], yy
 
 
-def default_hw(seed: int = 0) -> AnalogRBFModel:
-    """The default calibrated analog behavioral model (one fabricated core)."""
-    return AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(seed))
+def default_hw(seed: int = 0, params=None) -> AnalogRBFModel:
+    """The default calibrated analog behavioral model (one fabricated core).
+
+    ``params`` optionally overrides the :class:`CircuitParams` the
+    surrogate sweeps run with (sigma sweeps, bias studies) — the
+    construction stays deterministic in ``(seed, params)``, which is what
+    makes estimators built this way serializable.
+    """
+    from repro.core.analog import CircuitParams
+
+    return AnalogRBFModel.from_circuit(
+        params if params is not None else CircuitParams(),
+        key=jax.random.PRNGKey(seed))
 
 
 def hw_gamma_grid(hw: AnalogRBFModel, n: int = 7) -> np.ndarray:

@@ -95,3 +95,159 @@ def test_deploy_prunes_sub_dac_alphas():
         alpha=np.array([1.0, 0.5, 1e-5, 1e-6]), bias=0.0, gamma=2.0, c=1.0)
     clf = analog.AnalogBinaryClassifier.deploy(m, hw)
     assert clf.n_support == 2
+
+
+# ---------------------------------------------------------------------------
+# Alpha-floor pruning bound (property test) and Monte-Carlo variation (§6)
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402
+
+from _compat import property_test  # noqa: E402
+
+_PRUNE_EXAMPLES = [(0,), (1,), (2,), (5,), (11,), (23,)]
+
+
+def _random_rbf_model(seed: int):
+    """A random RBF model whose alphas span sub-DAC to dominant scales."""
+    rng = np.random.RandomState(seed)
+    m = rng.randint(4, 40)
+    d = rng.randint(1, 5)
+    alpha = np.abs(rng.randn(m)) * 10.0 ** rng.uniform(-6, 1, m)
+    return svm_mod.SVMModel(
+        kind="rbf", support_x=rng.rand(m, d),
+        support_y=np.where(rng.rand(m) > 0.5, 1.0, -1.0),
+        alpha=alpha, bias=float(rng.randn() * 0.2),
+        gamma=float(10.0 ** rng.uniform(-0.5, 1.0)), c=1.0), rng
+
+
+@property_test(_PRUNE_EXAMPLES,
+               strategies=lambda st: (st.integers(0, 10_000),),
+               max_examples=25)
+def test_deploy_pruning_perturbation_within_documented_bound(seed):
+    """``AnalogBinaryClassifier.deploy`` documents that the decision-
+    function perturbation from alpha-floor pruning stays below ``m *
+    floor`` (in units of I_in): each pruned cell's realised alpha is below
+    ``floor / 1.05`` and its kernel response is at most ~1, so the pruned
+    rail mass — and hence the comparator-input change — is bounded by the
+    cell count times the floor.  Property-tested on random models."""
+    model, rng = _random_rbf_model(seed)
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(0))
+    floor = 1.0 / 256.0
+    pruned = analog.AnalogBinaryClassifier.deploy(model, hw,
+                                                  alpha_floor_rel=floor)
+    full = analog.AnalogBinaryClassifier.deploy(model, hw,
+                                                alpha_floor_rel=0.0)
+    assert pruned.n_support <= full.n_support == model.alpha.shape[0]
+    x = rng.rand(48, model.support_x.shape[1])
+
+    def decision(clf):
+        i_plus, i_minus = clf.rail_currents(x)
+        return np.asarray(i_plus - i_minus)
+
+    err = np.max(np.abs(decision(pruned) - decision(full)))
+    assert err <= model.alpha.shape[0] * floor, (err, model.alpha.shape[0])
+
+
+def _deployed(seed=5, n=120):
+    rng = np.random.RandomState(seed)
+    x = rng.rand(n, 3)
+    y = np.where((x[:, 0] - 0.5) ** 2 + (x[:, 1] - 0.5) ** 2 < 0.08,
+                 1.0, -1.0)
+    hw = analog.AnalogRBFModel.from_circuit(key=jax.random.PRNGKey(seed))
+    m = svm_mod.train_binary(x, y, hw.kernel_response, gamma=8.0, c=10.0,
+                             n_epochs=150)
+    return x, analog.AnalogBinaryClassifier.deploy(m, hw)
+
+
+def test_sample_variants_shapes_keys_and_nominal_row():
+    x, clf = _deployed()
+    v = clf.sample_variants(jax.random.PRNGKey(1), 6)
+    assert v.n_variants == 6
+    assert v.gauss.shape == (6, clf.n_support, clf.n_features,
+                             analog.N_GAUSS_OFFSETS)
+    assert v.alpha.shape == (6, clf.n_support, analog.N_ALPHA_OFFSETS)
+    assert v.comparator.shape == (6,)
+    # row 0 is the zero-offset nominal instance
+    assert not np.asarray(v.gauss[0]).any()
+    assert not np.asarray(v.alpha[0]).any()
+    # explicit keys: same key reproduces, different keys differ
+    v2 = clf.sample_variants(jax.random.PRNGKey(1), 6)
+    np.testing.assert_array_equal(np.asarray(v.gauss), np.asarray(v2.gauss))
+    v3 = clf.sample_variants(jax.random.PRNGKey(2), 6)
+    assert not np.array_equal(np.asarray(v.gauss), np.asarray(v3.gauss))
+    # sigma_scale scales the draws linearly
+    v4 = clf.sample_variants(jax.random.PRNGKey(1), 6, sigma_scale=2.0)
+    np.testing.assert_allclose(np.asarray(v4.gauss),
+                               2.0 * np.asarray(v.gauss), rtol=1e-6)
+    # without the nominal row every instance is a draw
+    v5 = clf.sample_variants(jax.random.PRNGKey(1), 2,
+                             include_nominal=False)
+    assert np.asarray(v5.gauss[0]).any()
+    with pytest.raises(ValueError, match="n_variants"):
+        clf.sample_variants(jax.random.PRNGKey(0), 1)
+
+
+def test_variant_transfer_params_nominal_is_exact():
+    """The zero-offset reduction lands on exact f32 identities (shift 0,
+    gain 1, slope 1, nominal comparator offset) — the arithmetic basis of
+    the bit-identity contract."""
+    x, clf = _deployed()
+    v = clf.sample_variants(jax.random.PRNGKey(3), 4)
+    t = analog.variant_transfer_params(v, clf.hw.params)
+    assert not np.asarray(t.shift[0]).any()
+    assert (np.asarray(t.gain[0]) == 1.0).all()
+    assert not np.asarray(t.alpha_shift[0]).any()
+    assert (np.asarray(t.alpha_slope[0]) == 1.0).all()
+    p = clf.hw.params
+    assert np.asarray(t.comp_offset)[0] == np.float32(
+        p.comparator_offset / p.i_bias)
+
+
+def test_decision_mc_nominal_bit_identity_and_spread():
+    """Variant 0 of the object-path Monte-Carlo evaluation reproduces the
+    nominal rails bit for bit; sampled variants actually move."""
+    x, clf = _deployed()
+    v = clf.sample_variants(jax.random.PRNGKey(4), 8)
+    scores = np.asarray(clf.decision_mc(x, v))
+    i_plus, i_minus = clf.rail_currents(x)
+    off = clf.hw.params.comparator_offset / clf.hw.params.i_bias
+    nominal = np.asarray(i_plus - i_minus + off)
+    np.testing.assert_array_equal(scores[0], nominal)
+    np.testing.assert_array_equal(clf.predict_bits_mc(x, v)[0],
+                                  clf.predict_bits(x))
+    assert np.abs(scores[1:] - nominal[None, :]).max() > 0
+    # sigma_scale=0 collapses every instance onto the nominal one
+    v0 = clf.sample_variants(jax.random.PRNGKey(5), 3, sigma_scale=0.0)
+    s0 = np.asarray(clf.decision_mc(x, v0))
+    for row in s0:
+        np.testing.assert_array_equal(row, nominal)
+
+
+def test_analog_models_are_registered_pytrees():
+    """AnalogRBFModel / AnalogBinaryClassifier / VariantSet flatten and
+    rebuild through jax.tree_util (the batchable-model contract)."""
+    x, clf = _deployed()
+    leaves, treedef = jax.tree_util.tree_flatten(clf)
+    assert len(leaves) > 5
+    clf2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(clf2.predict_bits(x), clf.predict_bits(x))
+    v = clf.sample_variants(jax.random.PRNGKey(0), 3)
+    v2 = jax.tree_util.tree_unflatten(*reversed(
+        jax.tree_util.tree_flatten(v)))
+    np.testing.assert_array_equal(np.asarray(v2.gauss), np.asarray(v.gauss))
+
+
+def test_from_circuit_splits_calibration_keys():
+    """The Gaussian and alpha sweeps draw INDEPENDENT mismatch: the model
+    calibrated with a key differs from one whose alpha sweep reused the
+    Gaussian key (the pre-fix behavior would make them identical)."""
+    key = jax.random.PRNGKey(7)
+    hw = analog.AnalogRBFModel.from_circuit(key=key)
+    dva_reused, ratio_reused = analog.dc_sweep_alpha(
+        analog.CircuitParams(), key=key)
+    assert not np.array_equal(hw.alpha_curve, ratio_reused)
+    # and the gaussian sweep is the first split of the key
+    kg = jax.random.split(key)[0]
+    dv, curve = analog.dc_sweep_gaussian(analog.CircuitParams(), key=kg)
+    np.testing.assert_array_equal(hw.kernel_curve, curve / curve.max())

@@ -1,0 +1,307 @@
+"""Tests for the Monte-Carlo variant axis (DESIGN.md §6).
+
+Covers the tentpole guarantees:
+
+  * the compiled ``MonteCarloMachine`` agrees with the object-path
+    ``AnalogBinaryClassifier.predict_bits_mc`` reference, variant for
+    variant, under the same per-pair key split;
+  * the zero-offset variant is BIT-IDENTICAL (scores and bits) to the
+    nominal ``CandidateMachine`` — the acceptance contract;
+  * evaluating V = 64 variants on a paper dataset costs at most 2
+    additional jit compiles (MC forward + batched recombination);
+  * the batched bit-recombination: ``assignment_accuracies_mc`` equals a
+    per-variant loop of the nominal recombination, on both the encoder
+    and the votes fallback, through the assignment-chunked path;
+  * yield/robust-front semantics: ``pareto_front(yield_=...)``,
+    ``SweepResult.select(yield_floor=...)``, ``deploy(yield_floor=...)``;
+  * serialization: the chosen assignment + MC key/config and the
+    ``CircuitParams`` override round-trip through save/load.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    CircuitParams,
+    MixedKernelSVM,
+    compile_candidates,
+    compile_variants,
+)
+from repro.core import dse
+from repro.data import datasets
+
+N_VARIANTS = 64  # the acceptance setting
+
+
+@pytest.fixture(scope="module")
+def balance():
+    ds = datasets.load("balance")
+    est = MixedKernelSVM(n_epochs=60, seed=0).fit(ds.x_train, ds.y_train)
+    return ds, est
+
+
+@pytest.fixture(scope="module")
+def mc_machine(balance):
+    _, est = balance
+    return est.monte_carlo_machine(N_VARIANTS, jax.random.PRNGKey(0))
+
+
+# -- the compiled variant machine --------------------------------------------
+
+
+def test_pair_bits_shape_and_reproducibility(balance, mc_machine):
+    ds, est = balance
+    bits3 = mc_machine.pair_bits(ds.x_test)
+    assert bits3.shape == (N_VARIANTS, len(ds.x_test),
+                           len(est.kernel_map_), 2)
+    # cached machine: same config returns the same compiled object
+    assert est.monte_carlo_machine(
+        N_VARIANTS, jax.random.PRNGKey(0)) is mc_machine
+    # same key -> same draws -> same bits through a fresh lowering
+    fresh = compile_variants(est._candidates(), est.n_classes_,
+                             key=jax.random.PRNGKey(0),
+                             n_variants=N_VARIANTS)
+    np.testing.assert_array_equal(fresh.pair_bits(ds.x_test), bits3)
+
+
+def test_nominal_variant_bit_identical_to_candidate_machine(
+        balance, mc_machine):
+    """ACCEPTANCE: zero-offset MC variant == nominal compiled path,
+    bit for bit, scores included."""
+    ds, est = balance
+    nominal = compile_candidates(est._candidates(), est.n_classes_)
+    for x in (ds.x_train, ds.x_test):
+        np.testing.assert_array_equal(mc_machine.pair_scores(x)[0],
+                                      nominal.pair_scores(x))
+        np.testing.assert_array_equal(mc_machine.pair_bits(x)[0],
+                                      nominal.pair_bits(x))
+
+
+def test_linear_lanes_are_variation_free(balance, mc_machine):
+    ds, _ = balance
+    scores = mc_machine.pair_scores(ds.x_test)
+    for v in range(1, scores.shape[0]):
+        np.testing.assert_array_equal(scores[v, :, :, 0], scores[0, :, :, 0])
+    # ... while the analog lanes actually move
+    assert np.abs(scores[1:, :, :, 1] - scores[:1, :, :, 1]).max() > 0
+
+
+def test_compiled_matches_object_path_reference(balance):
+    """Every variant of every analog lane reproduces the behavioral-model
+    reference (`predict_bits_mc`) under the same per-pair key split."""
+    ds, est = balance
+    key, v = jax.random.PRNGKey(11), 8
+    machine = compile_variants(est._candidates(), est.n_classes_, key=key,
+                               n_variants=v)
+    bits3 = machine.pair_bits(ds.x_test)
+    keys = jax.random.split(key, len(est.kernel_map_))
+    for p, (_, clf) in enumerate(est._candidates()):
+        variants = clf.sample_variants(keys[p], v)
+        np.testing.assert_array_equal(
+            bits3[:, :, p, 1], clf.predict_bits_mc(ds.x_test, variants))
+
+
+def test_mc_sweep_two_additional_compiles(balance):
+    """ACCEPTANCE: V = 64 variants on a paper dataset in <= 2 additional
+    jit compiles (the MC forward + the batched recombination)."""
+    from benchmarks.svm_train import count_compiles
+
+    ds, est = balance
+    est.pareto(ds.x_test, ds.y_test)           # warm the nominal DSE path
+    key = jax.random.PRNGKey(42)
+    est.monte_carlo_machine(N_VARIANTS, key)   # lowering outside the count
+    with count_compiles() as cc:
+        sweep = est.pareto(ds.x_test, ds.y_test, n_variants=N_VARIANTS,
+                           key=key, accuracy_floor=0.85)
+    assert cc.count() <= 2, cc.names
+    assert sweep.is_monte_carlo and sweep.n_variants == N_VARIANTS
+
+
+# -- the batched recombination ------------------------------------------------
+
+
+def test_accuracies_mc_match_per_variant_loop(balance, mc_machine):
+    ds, est = balance
+    bits3 = mc_machine.pair_bits(ds.x_test)
+    a = dse.enumerate_assignments(len(est.kernel_map_))
+    acc_vs = dse.assignment_accuracies_mc(bits3, a, ds.y_test,
+                                          est.n_classes_)
+    assert acc_vs.shape == (N_VARIANTS, a.shape[0])
+    for v in range(0, N_VARIANTS, 13):
+        np.testing.assert_allclose(
+            acc_vs[v],
+            dse.assignment_accuracies(bits3[v], a, ds.y_test,
+                                      est.n_classes_),
+            atol=1e-12)
+    # votes fallback agrees with the encoder path
+    acc_votes = dse.assignment_accuracies_mc(bits3, a, ds.y_test,
+                                             est.n_classes_,
+                                             max_table_bits=0)
+    np.testing.assert_allclose(acc_votes, acc_vs, atol=1e-7)
+
+
+def test_accuracies_mc_chunked_path():
+    """The fixed-shape assignment chunking (S > MC_CHUNK) returns the same
+    matrix as one unchunked call would."""
+    rng = np.random.RandomState(0)
+    v, n, p, k = 3, 60, 10, 5
+    bits3 = rng.randint(0, 2, (v, n, p, 2)).astype(np.int32)
+    y = rng.randint(0, k, n)
+    a = dse.enumerate_assignments(p)           # 1024 > MC_CHUNK = 512
+    assert a.shape[0] > dse.MC_CHUNK
+    acc = dse.assignment_accuracies_mc(bits3, a, y, k)
+    for v_i in range(v):
+        np.testing.assert_allclose(
+            acc[v_i], dse.assignment_accuracies(bits3[v_i], a, y, k),
+            atol=1e-12)
+
+
+def test_mc_statistics_and_yield():
+    acc_vs = np.array([[0.9, 0.5], [0.8, 0.5], [0.7, 0.5]])
+    s = dse.mc_statistics(acc_vs, accuracy_floor=0.75)
+    np.testing.assert_allclose(s["mean"], [0.8, 0.5])
+    np.testing.assert_allclose(s["worst"], [0.7, 0.5])
+    np.testing.assert_allclose(s["yield"], [2 / 3, 0.0])
+    np.testing.assert_allclose(s["std"][1], 0.0)
+
+
+def test_pareto_front_robust_mode():
+    """The yield objective keeps a lower-accuracy, higher-yield point that
+    three-objective domination would discard."""
+    acc = np.array([0.95, 0.90])
+    area = np.array([1.0, 1.0])
+    power = np.array([1.0, 1.0])
+    assert dse.pareto_front(acc, area, power).tolist() == [0]
+    yld = np.array([0.2, 0.99])
+    assert sorted(dse.pareto_front(acc, area, power,
+                                   yield_=yld).tolist()) == [0, 1]
+
+
+# -- sweep + selection + deployment ------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mc_sweep(balance, mc_machine):
+    ds, est = balance
+    return est.pareto(ds.x_test, ds.y_test, n_variants=N_VARIANTS,
+                      key=jax.random.PRNGKey(0), accuracy_floor=0.85)
+
+
+def test_mc_sweep_fields(balance, mc_sweep):
+    ds, est = balance
+    sw = mc_sweep
+    assert sw.is_monte_carlo and sw.exhaustive
+    assert sw.accuracy_mc.shape == (N_VARIANTS, 8)
+    # the nominal column IS the zero-offset variant's row
+    np.testing.assert_array_equal(sw.accuracy, sw.accuracy_mc[0])
+    assert (sw.acc_worst <= sw.acc_mean + 1e-12).all()
+    assert ((0.0 <= sw.yield_) & (sw.yield_ <= 1.0)).all()
+    # the all-linear corner is variation-free: zero spread, yield 0 or 1
+    i = sw.find(np.zeros(sw.n_pairs, bool))
+    assert sw.acc_std[i] == 0.0 and sw.yield_[i] in (0.0, 1.0)
+    # yields are monotone in the floor
+    assert (sw.yield_at(0.5) >= sw.yield_).all()
+    # MC provenance recorded on the sweep and the estimator
+    assert sw.n_variants == N_VARIANTS and sw.mc_key_data is not None
+    assert est.mc_state_["n_variants"] == N_VARIANTS
+    assert est.mc_state_["accuracy_floor"] == pytest.approx(0.85)
+
+
+def test_robust_selection_rule(mc_sweep):
+    sw = mc_sweep
+    feasible = sw.yield_[sw.robust_front]
+    floor = float(np.sort(feasible)[len(feasible) // 2])
+    i = sw.select(yield_floor=floor)
+    assert sw.yield_[i] >= floor
+    # cheapest-first: no other feasible robust-front point is cheaper
+    others = [j for j in sw.robust_front
+              if sw.yield_[j] >= floor and j != i]
+    assert all(sw.area[i] <= sw.area[j] + 1e-15 for j in others)
+    with pytest.raises(ValueError, match="yield"):
+        sw.select(yield_floor=1.1)
+
+
+def test_yield_floor_requires_mc(balance):
+    ds, est = balance
+    nominal = est.design_space().sweep(ds.x_test, ds.y_test)
+    with pytest.raises(RuntimeError, match="Monte-Carlo"):
+        nominal.select(yield_floor=0.9)
+    with pytest.raises(ValueError, match="accuracy_floor"):
+        est.design_space().sweep(ds.x_test, ds.y_test,
+                                 mc_machine=est.monte_carlo_machine(
+                                     8, jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="n_variants"):
+        est.pareto(ds.x_test, ds.y_test, accuracy_floor=0.9)
+
+
+def test_monte_carlo_result(balance):
+    ds, est = balance
+    mc = est.monte_carlo(ds.x_test, ds.y_test, n_variants=16,
+                         key=jax.random.PRNGKey(5))
+    assert mc.accuracy.shape == (16,)
+    assert mc.nominal == pytest.approx(
+        est.score(ds.x_test, ds.y_test, target="circuit"), abs=1e-6)
+    assert mc.worst <= mc.mean <= 1.0
+    assert mc.yield_at(0.0) == 1.0
+    assert mc.yield_at(0.5) >= mc.yield_at(0.9)
+    assert mc.key_data and mc.n_variants == 16
+    # sigma_scale=0 collapses the distribution onto the nominal machine
+    mc0 = est.monte_carlo(ds.x_test, ds.y_test, n_variants=4,
+                          key=jax.random.PRNGKey(5), sigma_scale=0.0)
+    assert mc0.std == 0.0 and mc0.mean == mc0.nominal
+
+
+def test_yield_deploy_and_roundtrip(balance, mc_sweep, tmp_path):
+    ds, est = balance
+    sw = mc_sweep
+    floor = float(sw.yield_[sw.robust_front].max())
+    machine = est.deploy("circuit", yield_floor=floor)
+    assert est.assignment_ is not None
+    i = sw.find(dse.assignment_from_kernel_map(est.assignment_))
+    assert sw.yield_[i] >= floor
+    assert est.mc_state_["yield_floor"] == pytest.approx(floor)
+    # chosen assignment + MC seed/config survive save/load
+    path = os.path.join(tmp_path, "m")
+    est.save(path)
+    est2 = MixedKernelSVM.load(path)
+    assert est2.assignment_ == est.assignment_
+    assert est2.mc_state_ == est.mc_state_
+    np.testing.assert_array_equal(
+        est2.deploy_assignment().predict(ds.x_test),
+        machine.predict(ds.x_test))
+    # the loaded estimator reproduces the exact variant set from the key
+    key = np.asarray(est2.mc_state_["key_data"], np.uint32)
+    m2 = est2.monte_carlo_machine(est2.mc_state_["n_variants"],
+                                  jax.numpy.asarray(key))
+    np.testing.assert_array_equal(
+        m2.pair_bits(ds.x_test),
+        est.monte_carlo_machine(N_VARIANTS,
+                                jax.random.PRNGKey(0)).pair_bits(ds.x_test))
+    est.assignment_ = None  # restore fixture state
+
+
+# -- CircuitParams through the public API -------------------------------------
+
+
+def test_circuit_params_override_and_roundtrip(tmp_path):
+    ds = datasets.load("balance")
+    circuit = CircuitParams(sigma_vth=6e-3, comparator_sigma=2e-10)
+    est = MixedKernelSVM(n_epochs=30, seed=1, circuit=circuit).fit(
+        ds.x_train, ds.y_train)
+    assert est.hw_.params.sigma_vth == pytest.approx(6e-3)
+    base = MixedKernelSVM(n_epochs=30, seed=1)
+    # a different process corner calibrates a different instance
+    assert not np.array_equal(
+        est.hw_.kernel_curve,
+        base.fit(ds.x_train, ds.y_train).hw_.kernel_curve)
+    path = os.path.join(tmp_path, "m")
+    est.save(path)
+    est2 = MixedKernelSVM.load(path)
+    assert est2.circuit == circuit
+    np.testing.assert_array_equal(est2.hw_.kernel_curve,
+                                  est.hw_.kernel_curve)
+    np.testing.assert_array_equal(
+        est2.deploy("circuit").predict(ds.x_test),
+        est.deploy("circuit").predict(ds.x_test))
