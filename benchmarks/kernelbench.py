@@ -17,8 +17,10 @@ from repro.kernels import ops, ref
 
 
 def _time(fn, *args, iters=10):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    # Warm up ONCE and reuse the result for the tuple check (the old
+    # `isinstance`-on-a-fresh-call pattern evaluated fn twice).
+    out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -45,6 +47,25 @@ def run(verbose: bool = True):
     err = float(jnp.max(jnp.abs(
         ops.rbf_matrix(x, z, 4.0, kind="sech2", bm=128, bn=128) - f_s(x, z))))
     rows.append(("sech2_matrix_512x256x5", us, f"maxerr={err:.2e}"))
+
+    # Fused dual-coordinate-ascent solver lanes (Algorithm 1's hot loop):
+    # timing on the materialized-Gram jnp oracle, numerics on the fused
+    # Pallas kernel in interpret mode (same layout svm_train.py's solver
+    # micro-bench uses for the lanes/s + peak-memory trajectory rows).
+    pl_, nl, dl, gl, ll, ep = 2, 96, 4, 2, 4, 30
+    xs = jnp.asarray(rng.rand(pl_, nl, dl), jnp.float32)
+    ys = jnp.asarray(np.where(rng.rand(pl_, nl) > 0.5, 1.0, -1.0),
+                     jnp.float32)
+    cb = jnp.asarray(rng.rand(pl_, ll, nl) * 5.0, jnp.float32)
+    gm = jnp.asarray(rng.rand(pl_, gl) * 4.0 + 0.5, jnp.float32)
+    f_sol = jax.jit(lambda a, b, c, g: ref.solve_lanes(
+        a, b, c, g, kind="rbf", n_epochs=ep))
+    a_ref, _ = f_sol(xs, ys, cb, gm)        # also serves as the warm-up
+    us = _time(f_sol, xs, ys, cb, gm)
+    a_pl, _ = ops.solve_lanes(xs, ys, cb, gm, kind="rbf", n_epochs=ep)
+    err = float(jnp.max(jnp.abs(a_pl - a_ref)))
+    rows.append((f"solver_dca_{pl_*gl*ll}lanes_n{nl}", us,
+                 f"maxerr={err:.2e}"))
 
     # flash attention vs reference
     q = jnp.asarray(rng.randn(1, 4, 256, 64), jnp.float32)

@@ -75,11 +75,33 @@ def main() -> None:
     print(f"\ntotal_bench_seconds,{total:.1f}")
 
     if args.json:
-        payload = {"total_bench_seconds": round(total, 1), **results}
+        payload = {"machine": _machine_note(),
+                   "total_bench_seconds": round(total, 1), **results}
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"aggregated JSON -> {args.json}")
+
+
+def _machine_note() -> dict:
+    """Reproducibility header for BENCH_*.json trajectory files: where the
+    numbers came from and the seed policy.  Every sub-benchmark uses fixed
+    seeds internally (RandomState(0)/PRNGKey(0) unless its JSON record
+    says otherwise), so a trajectory diff isolates code changes."""
+    import platform
+
+    import jax
+
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "seed_policy": "fixed seeds (0) per sub-benchmark; explicit "
+                       "seeds/keys recorded in each record",
+    }
 
 
 if __name__ == "__main__":

@@ -15,6 +15,13 @@ per OvO pair; every pair's unique subset size forces fresh compiles); the
 batched path is ``repro.core.trainer.train_pairs`` (all pairs x folds x
 grid in one program per family).  Kernel maps and hyper-parameter
 selections are asserted equal before timings are reported.
+
+Two further sections cover the fused Pallas solver (DESIGN.md §7): a
+reduced-config engine leg with ``use_pallas=True`` (selections asserted
+equal to the blocked engine, compile counts under the same O(1) gate) and
+``solver_bench`` — lanes/s, HLO-cost peak-memory (fused vs
+materialized-Gram baseline) and oracle max-abs-diff, hard-gated by
+``--assert-solver-parity``.
 """
 from __future__ import annotations
 
@@ -81,8 +88,116 @@ def count_compiles():
         jax.config.update("jax_log_compiles", False if not prev else prev)
 
 
+def solver_bench(n_max: int = 256, d: int = 4, n_epochs: int = 40,
+                 seed: int = 0, verbose: bool = True,
+                 assert_parity: bool = False) -> dict:
+    """Micro-bench the fused Pallas solver against the materialized-Gram
+    lanes baseline (``kernels.ref.solve_lanes``): lanes/s for both paths,
+    an HLO-cost peak-memory estimate per program (argument + output +
+    temp bytes from XLA's ``memory_analysis``), and the oracle
+    max-abs-diff on the alphas.
+
+    On this CPU container the Pallas path runs in the interpreter, so its
+    wall-clock is a numerics-validation figure, not the TPU number; the
+    *memory* figures are the point — the fused kernel's program carries no
+    (lanes, n, n) Gram temporaries at any ``n_max``, which is the
+    acceptance gate (pallas peak strictly below baseline at n_max >= 256).
+    """
+    import time as _time_mod
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    p, g, l = 2, 3, 6
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.rand(p, n_max, d), np.float32)
+    y = jnp.asarray(np.where(rng.rand(p, n_max) > 0.5, 1.0, -1.0),
+                    np.float32)
+    c_box = jnp.asarray(
+        rng.rand(p, l, n_max) * 5.0 * (rng.rand(p, l, n_max) > 0.2),
+        np.float32)
+    gamma = jnp.asarray(rng.rand(p, g) * 4.0 + 0.5, np.float32)
+    lanes = p * g * l
+
+    # One jit wrapper per path, compiled once and reused for BOTH the
+    # timing loop and the memory_analysis lowering (a fresh lambda would
+    # re-compile the expensive Gram-baseline program a second time).
+    pallas_fn = jax.jit(lambda xa, ya, ca, ga: ops.solve_lanes(
+        xa, ya, ca, ga, kind="rbf", n_epochs=n_epochs))
+    base_fn = jax.jit(lambda xa, ya, ca, ga: ref.solve_lanes(
+        xa, ya, ca, ga, kind="rbf", n_epochs=n_epochs))
+
+    def timed(fn):
+        out = fn(x, y, c_box, gamma)
+        out[0].block_until_ready()                      # warm-up/compile
+        t0 = _time_mod.perf_counter()
+        out = fn(x, y, c_box, gamma)
+        out[0].block_until_ready()
+        return out, _time_mod.perf_counter() - t0
+
+    def peak_bytes(fn):
+        stats = fn.lower(x, y, c_box, gamma).compile().memory_analysis()
+        if stats is None:                               # backend w/o stats
+            return None
+        return {
+            "argument_bytes": int(stats.argument_size_in_bytes),
+            "output_bytes": int(stats.output_size_in_bytes),
+            "temp_bytes": int(stats.temp_size_in_bytes),
+            "peak_bytes": int(stats.argument_size_in_bytes
+                              + stats.output_size_in_bytes
+                              + stats.temp_size_in_bytes),
+        }
+
+    (a_pl, _), t_pl = timed(pallas_fn)
+    (a_ref, _), t_ref = timed(base_fn)
+    maxdiff = float(jnp.max(jnp.abs(a_pl - a_ref)))
+    mem_pl = peak_bytes(pallas_fn)
+    mem_ref = peak_bytes(base_fn)
+
+    result = {
+        "benchmark": "svm_train.solver",
+        "n_max": n_max, "d": d, "lanes": lanes, "n_epochs": n_epochs,
+        "seed": seed,
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "pallas_lanes_per_s": round(lanes / t_pl, 1),
+        "baseline_lanes_per_s": round(lanes / t_ref, 1),
+        "pallas_memory": mem_pl,
+        "baseline_memory": mem_ref,
+        "oracle_max_abs_diff": maxdiff,
+    }
+    if verbose:
+        print("solver,path,lanes_per_s,peak_bytes")
+        print(f"solver,pallas,{result['pallas_lanes_per_s']},"
+              f"{mem_pl['peak_bytes'] if mem_pl else 'n/a'}")
+        print(f"solver,gram_baseline,{result['baseline_lanes_per_s']},"
+              f"{mem_ref['peak_bytes'] if mem_ref else 'n/a'}")
+        print(f"solver,oracle_max_abs_diff,{maxdiff:.2e},")
+    if assert_parity:
+        tol = 5e-4  # f32 round-off over n_epochs of re-associated margins
+        ok = maxdiff <= tol
+        mem_ok = (mem_pl is None or mem_ref is None
+                  or mem_pl["peak_bytes"] < mem_ref["peak_bytes"])
+        print(f"solver-parity assertion: max_abs_diff {maxdiff:.2e} "
+              f"(tol {tol:g}) -> {'OK' if ok else 'FAIL'}; "
+              f"peak-memory pallas < baseline -> "
+              f"{'OK' if mem_ok else 'FAIL'}")
+        if not ok:
+            raise AssertionError(
+                f"Pallas solver diverged from the materialized-Gram oracle:"
+                f" max|dalpha| = {maxdiff:.3e} > {tol:g}")
+        if not mem_ok:
+            raise AssertionError(
+                f"fused solver peak-memory regression: pallas "
+                f"{mem_pl['peak_bytes']} >= baseline "
+                f"{mem_ref['peak_bytes']} bytes at n_max={n_max}")
+    return result
+
+
 def run(n_epochs: int = 200, seed: int = 0, verbose: bool = True,
-        max_family_compiles: int | None = None) -> dict:
+        max_family_compiles: int | None = None,
+        assert_solver_parity: bool = False) -> dict:
     import jax
 
     from repro.core import selection, trainer
@@ -119,6 +234,42 @@ def run(n_epochs: int = 200, seed: int = 0, verbose: bool = True,
                 f"pair {ps.pair}: selected ({ps.model.gamma}, {ps.model.c}) "
                 f"vs ({pb.model.gamma}, {pb.model.c})")
 
+    # --- fused Pallas solver engine leg (reduced config) -----------------
+    # The Pallas path must reproduce the blocked engine's selections and
+    # stay inside the same O(1)-compiles-per-family contract.  On CPU the
+    # lanes run in the Pallas *interpreter* (numerics validation, not a
+    # speed figure), so this leg subsamples Balance at reduced epochs and
+    # compares against the blocked engine at the SAME config.
+    n_sub, ep_sub, cv_sub, folds_sub = 160, 60, 30, 3
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(len(ds.y_train))[:n_sub]
+    xs, ys = ds.x_train[idx], ds.y_train[idx]
+    jax.clear_caches()
+    pairs_blk = trainer.train_pairs(
+        xs, ys, k, n_epochs=ep_sub, cv_epochs=cv_sub, n_folds=folds_sub,
+        seed=seed, use_pallas=False)
+    jax.clear_caches()
+    with count_compiles() as cc_pal:
+        t0 = time.perf_counter()
+        pairs_pal = trainer.train_pairs(
+            xs, ys, k, n_epochs=ep_sub, cv_epochs=cv_sub, n_folds=folds_sub,
+            seed=seed, use_pallas=True)
+        t_pal = time.perf_counter() - t0
+    map_blk = [p.kernel for p in pairs_blk]
+    map_pal = [p.kernel for p in pairs_pal]
+    if map_blk != map_pal:
+        raise AssertionError(
+            f"kernel maps diverge with the Pallas solver enabled: "
+            f"blocked {map_blk} vs pallas {map_pal}")
+    for pb, pp in zip(pairs_blk, pairs_pal):
+        if (pb.model.gamma, pb.model.c) != (pp.model.gamma, pp.model.c):
+            raise AssertionError(
+                f"pair {pb.pair}: blocked selected "
+                f"({pb.model.gamma}, {pb.model.c}) vs pallas "
+                f"({pp.model.gamma}, {pp.model.c})")
+    pallas_family_compiles = {name: cc_pal.count(name)
+                              for name in ENGINE_PROGRAMS}
+
     family_compiles = {name: cc_bat.count(name) for name in ENGINE_PROGRAMS}
     result = {
         "benchmark": "svm_train",
@@ -131,6 +282,18 @@ def run(n_epochs: int = 200, seed: int = 0, verbose: bool = True,
         "compiles_sequential": cc_seq.count(),
         "compiles_batched": cc_bat.count(),
         "engine_family_compiles": family_compiles,
+        "pallas_engine": {
+            "n_subsample": n_sub, "n_epochs": ep_sub,
+            "cv_epochs": cv_sub, "n_folds": folds_sub, "seed": seed,
+            "interpret": jax.default_backend() != "tpu",
+            "seconds": round(t_pal, 3),
+            "kernel_map": map_pal,
+            "selections_match_blocked": True,
+            "compiles": cc_pal.count(),
+            "engine_family_compiles": pallas_family_compiles,
+        },
+        "solver": solver_bench(seed=seed, verbose=verbose,
+                               assert_parity=assert_solver_parity),
     }
     if verbose:
         print("path,seconds,xla_compiles")
@@ -142,14 +305,21 @@ def run(n_epochs: int = 200, seed: int = 0, verbose: bool = True,
 
     if max_family_compiles is not None:
         n_fam = sum(family_compiles.values())
+        n_fam_pal = sum(pallas_family_compiles.values())
         print(f"compile-count assertion: {n_fam} engine-program compiles "
+              f"(blocked), {n_fam_pal} (pallas solver) "
               f"(limit {max_family_compiles}) -> "
-              f"{'OK' if n_fam <= max_family_compiles else 'FAIL'}")
+              f"{'OK' if max(n_fam, n_fam_pal) <= max_family_compiles else 'FAIL'}")
         if n_fam > max_family_compiles:
             raise AssertionError(
                 f"batched engine compiled {n_fam} family programs "
                 f"(> {max_family_compiles}): per-pair recompilation "
                 f"regression — check that padding keeps shapes static")
+        if n_fam_pal > max_family_compiles:
+            raise AssertionError(
+                f"Pallas-solver engine compiled {n_fam_pal} family programs "
+                f"(> {max_family_compiles}): the fused solver path is "
+                f"leaking shapes into fresh compiles")
     return result
 
 
@@ -159,10 +329,17 @@ def main() -> None:
     ap.add_argument("--n-epochs", type=int, default=200)
     ap.add_argument("--max-family-compiles", type=int, default=None,
                     help="fail if the engine compiles more than this many "
-                         "family programs (3 kernel families -> 3 expected)")
+                         "family programs (3 kernel families -> 3 expected); "
+                         "applied to the blocked AND Pallas-solver legs")
+    ap.add_argument("--assert-solver-parity", action="store_true",
+                    help="fail unless the fused Pallas solver matches the "
+                         "materialized-Gram oracle to f32 round-off AND its "
+                         "HLO-cost peak memory is strictly below the "
+                         "baseline's at n_max=256")
     args = ap.parse_args()
     result = run(n_epochs=args.n_epochs,
-                 max_family_compiles=args.max_family_compiles)
+                 max_family_compiles=args.max_family_compiles,
+                 assert_solver_parity=args.assert_solver_parity)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)

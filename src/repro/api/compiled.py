@@ -292,7 +292,8 @@ def _bank_cell(bank: _KernelBank, dv: jnp.ndarray) -> jnp.ndarray:
 
 def _pair_kernel(bank: _KernelBank, xv: jnp.ndarray, sv: jnp.ndarray,
                  gamma, scale, shift, use_pallas: bool,
-                 vshift=None, vgain=None) -> jnp.ndarray:
+                 vshift=None, vgain=None,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """(n, M) kernel matrix of ONE pair (vmapped over the bank).
 
     ``vshift``/``vgain`` (M, d), when given, evaluate ONE Monte-Carlo
@@ -319,18 +320,21 @@ def _pair_kernel(bank: _KernelBank, xv: jnp.ndarray, sv: jnp.ndarray,
     if use_pallas:
         from repro.kernels import ops
 
-        return ops.rbf_matrix(xv, sv, gamma, kind=bank.kind, v_scale=1.0)
+        return ops.rbf_matrix(xv, sv, gamma, kind=bank.kind, v_scale=1.0,
+                              interpret=interpret)
     return kern.kernel_matrix(bank.kind, xv, sv, gamma)
 
 
 def _bank_scores(bank: _KernelBank, xv: jnp.ndarray,
-                 use_pallas: bool) -> jnp.ndarray:
+                 use_pallas: bool,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
     """(n, P) decision scores for one kernel bank, kernel + contraction
     fused per pair: the (n, M) kernel tile feeds one (M, 2) GEMM for the
     +/- rails while it is still hot."""
 
     def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off):
-        k = _pair_kernel(bank, xv, sv, gamma, scale, shift, use_pallas)
+        k = _pair_kernel(bank, xv, sv, gamma, scale, shift, use_pallas,
+                         interpret=interpret)
         rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
         return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
 
@@ -341,7 +345,8 @@ def _bank_scores(bank: _KernelBank, xv: jnp.ndarray,
 
 
 def _all_scores(x: jnp.ndarray, linear_banks, kernel_banks,
-                inv_perm: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+                inv_perm: jnp.ndarray, use_pallas: bool,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
     """x (n, d) f32 -> scores (n, P) in lowering (pair-index) order.
 
     Input quantization is computed once per distinct ADC width and shared
@@ -359,7 +364,8 @@ def _all_scores(x: jnp.ndarray, linear_banks, kernel_banks,
     for bank in linear_banks:
         cols.append(xq(bank.input_bits) @ bank.w.T + bank.b[None, :])
     for bank in kernel_banks:
-        cols.append(_bank_scores(bank, xq(bank.input_bits), use_pallas))
+        cols.append(_bank_scores(bank, xq(bank.input_bits), use_pallas,
+                                 interpret=interpret))
     return jnp.concatenate(cols, axis=1)[:, inv_perm]
 
 
@@ -424,6 +430,7 @@ class CompiledMachine:
         kernel_banks: list[_KernelBank],
         kernel_map: Optional[list[str]] = None,
         use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
     ):
         self.n_classes = int(n_classes)
         self._linear_banks = linear_banks
@@ -440,6 +447,10 @@ class CompiledMachine:
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
+        # None follows the kernels.ops backend default (interpreter off
+        # TPU); a bool forces it, so CPU CI can exercise the compiled-mode
+        # Pallas path deliberately (DESIGN.md SS7.5).
+        self.interpret = interpret
 
         # Column order after bank concatenation -> pair order inversion.
         self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
@@ -491,7 +502,8 @@ class CompiledMachine:
     def _forward(self, x: jnp.ndarray):
         """x (n, d) f32 -> (scores (n, P), bits (n, P), labels (n,))."""
         scores = _all_scores(x, self._linear_banks, self._kernel_banks,
-                             self._inv_perm, self.use_pallas)
+                             self._inv_perm, self.use_pallas,
+                             interpret=self.interpret)
         bits = (scores >= 0.0).astype(jnp.int32)
         if self._table is not None:
             labels = jnp.take(self._table, bits @ self._bit_weights)
@@ -563,8 +575,8 @@ class CompiledMachine:
             json.dump(meta, f, indent=2)
 
     @classmethod
-    def load(cls, path: str, use_pallas: Optional[bool] = None
-             ) -> "CompiledMachine":
+    def load(cls, path: str, use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None) -> "CompiledMachine":
         path = _strip_ext(path)
         with open(path + ".json") as f:
             meta = json.load(f)
@@ -600,7 +612,8 @@ class CompiledMachine:
                     **_grid_fast_path(
                         npz[f"{bid}.grid"] if has_grid else None)))
         return cls(meta["n_classes"], linear_banks, kernel_banks,
-                   kernel_map=meta.get("kernel_map"), use_pallas=use_pallas)
+                   kernel_map=meta.get("kernel_map"), use_pallas=use_pallas,
+                   interpret=interpret)
 
 
 def _strip_ext(path: str) -> str:
@@ -620,6 +633,7 @@ def compile_machine(
     n_classes: Optional[int] = None,
     kernel_map: Optional[list[str]] = None,
     use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> CompiledMachine:
     """Lower a bank of bit-classifiers to a single batched inference path.
 
@@ -645,7 +659,8 @@ def compile_machine(
     specs = [_lower_classifier(i, c) for i, c in enumerate(classifiers)]
     linear_banks, kernel_banks = _build_banks(specs)
     return CompiledMachine(n_classes, linear_banks, kernel_banks,
-                           kernel_map=kernel_map, use_pallas=use_pallas)
+                           kernel_map=kernel_map, use_pallas=use_pallas,
+                           interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -675,7 +690,8 @@ class CandidateMachine:
     """
 
     def __init__(self, n_classes: int, linear_banks, kernel_banks,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
         self.n_classes = int(n_classes)
         self.n_pairs = len(class_pairs(self.n_classes))
         self._linear_banks = linear_banks
@@ -684,6 +700,7 @@ class CandidateMachine:
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
+        self.interpret = interpret
         # Lowering indices: candidate 0 of pair p is column p, candidate 1
         # is column P + p; the inverse permutation restores that order.
         self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
@@ -693,7 +710,8 @@ class CandidateMachine:
     def _forward(self, x: jnp.ndarray):
         """x (n, d) f32 -> (scores (n, P, 2), bits (n, P, 2))."""
         flat = _all_scores(x, self._linear_banks, self._kernel_banks,
-                           self._inv_perm, self.use_pallas)     # (n, 2P)
+                           self._inv_perm, self.use_pallas,
+                           interpret=self.interpret)            # (n, 2P)
         scores = jnp.stack(
             [flat[:, : self.n_pairs], flat[:, self.n_pairs:]], axis=-1)
         return scores, (scores >= 0.0).astype(jnp.int32)
@@ -718,6 +736,7 @@ def compile_candidates(
     candidates: Sequence,
     n_classes: int,
     use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> CandidateMachine:
     """Lower per-pair candidate classifiers to one :class:`CandidateMachine`.
 
@@ -738,7 +757,7 @@ def compile_candidates(
         specs.append(_lower_classifier(p + i, rbf_clf))
     linear_banks, kernel_banks = _build_banks(specs)
     return CandidateMachine(n_classes, linear_banks, kernel_banks,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -838,7 +857,8 @@ def _key_data(key: jax.Array) -> np.ndarray:
 
 
 def _bank_scores_mc(bank: _KernelBank, bv: _BankVariants, xv: jnp.ndarray,
-                    use_pallas: bool, include_nominal: bool) -> jnp.ndarray:
+                    use_pallas: bool, include_nominal: bool,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """(V, n, P) decision scores of one analog bank under variation.
 
     Only the variant-dependent tensors carry the leading V axis; the bank
@@ -861,7 +881,7 @@ def _bank_scores_mc(bank: _KernelBank, bv: _BankVariants, xv: jnp.ndarray,
     def one(sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off,
             vshift, vgain):
         k = _pair_kernel(bank, xv, sv, gamma, scale, shift, use_pallas,
-                         vshift=vshift, vgain=vgain)
+                         vshift=vshift, vgain=vgain, interpret=interpret)
         rails = k @ jnp.stack([cpos, cneg], axis=1)      # (n, 2)
         return (rails[:, 0] + bpos) - (rails[:, 1] + bneg) + off
 
@@ -877,13 +897,14 @@ def _bank_scores_mc(bank: _KernelBank, bv: _BankVariants, xv: jnp.ndarray,
         bv.coef_neg[lo:], bv.offset[lo:])
     if not include_nominal:
         return var
-    nom = _bank_scores(bank, xv, use_pallas)
+    nom = _bank_scores(bank, xv, use_pallas, interpret=interpret)
     return jnp.concatenate([nom[None], var], axis=0)
 
 
 def _all_scores_mc(x: jnp.ndarray, linear_banks, kernel_banks,
                    bank_variants, inv_perm: jnp.ndarray, n_variants: int,
-                   include_nominal: bool, use_pallas: bool) -> jnp.ndarray:
+                   include_nominal: bool, use_pallas: bool,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """x (n, d) f32 -> scores (V, n, C) in lowering (pair-index) order.
 
     Variation-free lanes (linear-digital, digital-RBF) are evaluated ONCE
@@ -903,11 +924,13 @@ def _all_scores_mc(x: jnp.ndarray, linear_banks, kernel_banks,
         cols.append(jnp.broadcast_to(c[None], (n_variants,) + c.shape))
     for bank, bv in zip(kernel_banks, bank_variants):
         if bv is None:
-            c = _bank_scores(bank, xq(bank.input_bits), use_pallas)
+            c = _bank_scores(bank, xq(bank.input_bits), use_pallas,
+                             interpret=interpret)
             cols.append(jnp.broadcast_to(c[None], (n_variants,) + c.shape))
         else:
             cols.append(_bank_scores_mc(bank, bv, xq(bank.input_bits),
-                                        use_pallas, include_nominal))
+                                        use_pallas, include_nominal,
+                                        interpret=interpret))
     return jnp.concatenate(cols, axis=2)[:, :, inv_perm]
 
 
@@ -934,7 +957,8 @@ class MonteCarloMachine:
     def __init__(self, n_classes: int, linear_banks, kernel_banks,
                  bank_variants, n_variants: int, include_nominal: bool,
                  sigma_scale: float, key_data: Optional[np.ndarray] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
         self.n_classes = int(n_classes)
         self.n_pairs = len(class_pairs(self.n_classes))
         self.n_variants = int(n_variants)
@@ -948,6 +972,7 @@ class MonteCarloMachine:
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
+        self.interpret = interpret
         self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
                                        2 * self.n_pairs)
         self._forward_jit = jax.jit(self._forward)
@@ -957,7 +982,7 @@ class MonteCarloMachine:
         flat = _all_scores_mc(x, self._linear_banks, self._kernel_banks,
                               self._bank_variants, self._inv_perm,
                               self.n_variants, self.include_nominal,
-                              self.use_pallas)
+                              self.use_pallas, interpret=self.interpret)
         scores = jnp.stack(
             [flat[..., : self.n_pairs], flat[..., self.n_pairs:]], axis=-1)
         return scores, (scores >= 0.0).astype(jnp.int32)
@@ -987,6 +1012,7 @@ def compile_variants(
     include_nominal: bool = True,
     sigma_scale: float = 1.0,
     use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> MonteCarloMachine:
     """Lower per-pair candidates + sampled process variation to ONE machine.
 
@@ -1037,4 +1063,4 @@ def compile_variants(
         n_classes, linear_banks, kernel_banks, bank_variants,
         n_variants=n_variants, include_nominal=include_nominal,
         sigma_scale=sigma_scale, key_data=_key_data(key),
-        use_pallas=use_pallas)
+        use_pallas=use_pallas, interpret=interpret)

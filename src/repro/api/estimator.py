@@ -143,6 +143,7 @@ class MixedKernelSVM:
         cv_epochs: Optional[int] = None,
         hw: Optional[AnalogRBFModel] = None,
         use_pallas: Optional[bool] = None,
+        interpret: Optional[bool] = None,
         mesh=None,
         hw_all: bool = True,
         circuit: Optional[CircuitParams] = None,
@@ -157,6 +158,9 @@ class MixedKernelSVM:
         # search; None keeps the historical max(60, n_epochs // 2) policy.
         self.cv_epochs = cv_epochs
         self.use_pallas = use_pallas
+        # Pallas-interpreter override for the compiled paths (None = the
+        # kernels.ops backend default); runtime-only, like `use_pallas`.
+        self.interpret = interpret
         # Optional device mesh for the batched trainer's shard_map variant
         # (runtime-only, like `hw`/`use_pallas`: not serialized).
         self.mesh = mesh
@@ -212,7 +216,8 @@ class MixedKernelSVM:
             np.asarray(x), y, self.n_classes_, hw=self.hw_,
             n_epochs=self.n_epochs, seed=self.seed,
             tie_margin=self.tie_margin, cv_epochs=self.cv_epochs,
-            mesh=self.mesh, hw_all=self.hw_all)
+            mesh=self.mesh, hw_all=self.hw_all,
+            use_pallas=self.use_pallas, interpret=self.interpret)
         self.assignment_ = None
         self.pareto_ = None
         self.mc_state_ = None
@@ -289,7 +294,8 @@ class MixedKernelSVM:
                 and yield_floor is None:
             if target not in self._compiled:
                 self._compiled[target] = compile_machine(
-                    self.bank(target), use_pallas=self.use_pallas)
+                    self.bank(target), use_pallas=self.use_pallas,
+                    interpret=self.interpret)
             return self._compiled[target]
         if target != "circuit":
             raise ValueError(
@@ -346,7 +352,7 @@ class MixedKernelSVM:
             if self._candidate_machine is None:
                 self._candidate_machine = compile_candidates(
                     self._candidates(), self.n_classes_,
-                    use_pallas=self.use_pallas)
+                    use_pallas=self.use_pallas, interpret=self.interpret)
             table = hwcost.pair_cost_table(self._candidates(), cm,
                                            n_classes=self.n_classes_)
             self._dse = dse_mod.DesignSpace(
@@ -431,7 +437,7 @@ class MixedKernelSVM:
             self._mc_machines[cache_key] = compile_variants(
                 self._candidates(), self.n_classes_, key=key,
                 n_variants=n_variants, sigma_scale=sigma_scale,
-                use_pallas=self.use_pallas)
+                use_pallas=self.use_pallas, interpret=self.interpret)
         return self._mc_machines[cache_key]
 
     def monte_carlo(
@@ -488,7 +494,8 @@ class MixedKernelSVM:
                                       for k in kmap)
         if key not in self._compiled:
             self._compiled[key] = compile_machine(
-                self._assignment_bank(kmap), use_pallas=self.use_pallas)
+                self._assignment_bank(kmap), use_pallas=self.use_pallas,
+                interpret=self.interpret)
         return self._compiled[key]
 
     def _assignment_bank(self, kmap: list[str]) -> MulticlassSVM:
@@ -571,8 +578,8 @@ class MixedKernelSVM:
             json.dump(meta, f, indent=2)
 
     @classmethod
-    def load(cls, path: str, use_pallas: Optional[bool] = None
-             ) -> "MixedKernelSVM":
+    def load(cls, path: str, use_pallas: Optional[bool] = None,
+             interpret: Optional[bool] = None) -> "MixedKernelSVM":
         path = _strip_ext(path)
         with open(path + ".json") as f:
             meta = json.load(f)
@@ -587,7 +594,7 @@ class MixedKernelSVM:
         config = dict(meta["config"])
         if config.get("circuit"):
             config["circuit"] = CircuitParams(**config["circuit"])
-        est = cls(use_pallas=use_pallas, **config)
+        est = cls(use_pallas=use_pallas, interpret=interpret, **config)
         est.n_classes_ = int(meta["n_classes"])
         est.hw_ = selection.default_hw(est.seed, est.circuit)
 

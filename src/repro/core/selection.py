@@ -79,6 +79,8 @@ def train_pairs(
     n_folds: int = 5,
     mesh=None,
     hw_all: bool = False,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> list[PairResult]:
     """Run Algorithm 1: one PairResult per OvO pair (batched engine).
 
@@ -101,7 +103,8 @@ def train_pairs(
     return trainer_mod.train_pairs(
         x_train, y_train, n_classes, hw=hw, n_epochs=n_epochs, seed=seed,
         tie_margin=tie_margin, cv_epochs=cv_epochs, n_folds=n_folds,
-        mesh=mesh, hw_all=hw_all)
+        mesh=mesh, hw_all=hw_all, use_pallas=use_pallas,
+        interpret=interpret)
 
 
 def train_pairs_sequential(

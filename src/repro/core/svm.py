@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kernels as kern
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,50 @@ class SVMModel:
 # --------------------------------------------------------------------------
 # Core solver
 # --------------------------------------------------------------------------
+
+
+def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    """The ``api/compiled.py`` convention: None -> Pallas only on TPU
+    (the CPU container would run the interpreter; pass ``interpret=True``
+    alongside ``use_pallas=True`` to exercise that path deliberately)."""
+    if use_pallas is None:
+        return jax.default_backend() == "tpu"
+    return bool(use_pallas)
+
+
+def cv_lanes_accuracy_pallas(
+    x: jnp.ndarray,           # (P, n, d)
+    y: jnp.ndarray,           # (P, n)
+    fold_masks: jnp.ndarray,  # (P, F, n) 1 train / 0 held-out
+    valid: jnp.ndarray,       # (P, n) 1 real / 0 padding
+    gammas_pg: jnp.ndarray,   # (P, G)
+    cs: jnp.ndarray,          # (C,)
+    kind: str,
+    n_epochs: int,
+    interpret: Optional[bool] = None,
+    block: int = 16,
+) -> jnp.ndarray:
+    """(P, G, C) mean CV accuracy through the fused Pallas solver.
+
+    The Gram-free twin of the ``_cell_cv_accuracy`` reduction: lanes are
+    the C-major flattening of (C, fold) — matching ``jnp.repeat(cs,
+    n_f)`` in the blocked path — the box folds train-mask and validity
+    in, and validation consumes the solver's fused margin output ``f``
+    directly (``kp @ (alpha * y)`` never materializes a Gram).
+    """
+    p, n_f, n = fold_masks.shape
+    n_c = cs.shape[0]
+    m_lanes = jnp.tile(fold_masks, (1, n_c, 1))          # (P, C*F, n)
+    c_lanes = jnp.repeat(cs, n_f)                        # (C*F,)
+    c_box = c_lanes[None, :, None] * m_lanes * valid[:, None, :]
+    _, f = kops.solve_lanes(x, y, c_box, gammas_pg, kind=kind,
+                            n_epochs=n_epochs, block=block,
+                            interpret=interpret)
+    pred = jnp.where(f >= 0.0, 1.0, -1.0)                # (P, G, C*F, n)
+    val = (1.0 - m_lanes) * valid[:, None, :]            # (P, C*F, n)
+    hit = ((pred == y[:, None, None, :]) * val[:, None]).sum(-1)
+    acc = hit / jnp.clip(val.sum(-1), 1.0, None)[:, None]
+    return acc.reshape(p, gammas_pg.shape[1], n_c, n_f).mean(-1)
 
 
 @partial(jax.jit, static_argnames=("n_epochs",))
@@ -97,18 +142,30 @@ def train_binary(
     c: float = 1.0,
     n_epochs: int = 200,
     sv_tol: float = 1e-6,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> SVMModel:
     """Train one binary SVM and extract its support set (host-side).
 
     ``kind`` may be a callable kernel (hardware-in-the-loop), recorded as
-    kind='hw' with the callable kept on the model.
+    kind='hw' with the callable kept on the model.  ``use_pallas`` routes
+    the solve through the fused Gram-free Pallas kernel for the string
+    kinds (alphas agree with the reference to f32 round-off); callables
+    always take the materialized-Gram path.
     """
     xj = jnp.asarray(x, jnp.float32)
     yj = jnp.asarray(y, jnp.float32)
-    kp = _gram(kind, xj, gamma)
-    alpha = np.asarray(
-        dual_coordinate_ascent(kp, yj, jnp.full((x.shape[0],), float(c)), n_epochs)
-    )
+    if resolve_use_pallas(use_pallas) and isinstance(kind, str):
+        a_lanes, _ = kops.solve_lanes(
+            xj[None], yj[None],
+            jnp.full((1, 1, x.shape[0]), float(c), jnp.float32),
+            jnp.full((1, 1), float(gamma), jnp.float32),
+            kind=kind, n_epochs=n_epochs, interpret=interpret)
+        alpha = np.asarray(a_lanes[0, 0, 0])
+    else:
+        kp = _gram(kind, xj, gamma)
+        alpha = np.asarray(dual_coordinate_ascent(
+            kp, yj, jnp.full((x.shape[0],), float(c)), n_epochs))
     sv = alpha > sv_tol
     bias = float(np.sum(alpha[sv] * y[sv]))
     w = None
@@ -185,12 +242,30 @@ def cv_grid_accuracy(
     n_folds: int = 5,
     n_epochs: int = 120,
     seed: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> np.ndarray:
-    """(len(gammas), len(cs)) mean CV accuracy — all folds x grid in one vmap."""
+    """(len(gammas), len(cs)) mean CV accuracy — all folds x grid in one vmap.
+
+    With ``use_pallas`` (string kinds) the whole grid runs through the
+    fused solver lanes instead: no Gram is ever materialized, and the
+    blocked update sequence replaces the reference solver's (accuracies
+    agree to f32 round-off, DESIGN.md §7).
+    """
     n = x.shape[0]
     rng = np.random.RandomState(seed)
     fold_of = rng.permutation(n) % n_folds
     masks = np.stack([(fold_of != f).astype(np.float32) for f in range(n_folds)])
+
+    if resolve_use_pallas(use_pallas) and isinstance(kind, str):
+        acc = cv_lanes_accuracy_pallas(
+            jnp.asarray(x, jnp.float32)[None],
+            jnp.asarray(y, jnp.float32)[None],
+            jnp.asarray(masks)[None], jnp.ones((1, n), jnp.float32),
+            jnp.asarray(gammas, jnp.float32)[None],
+            jnp.asarray(cs, jnp.float32),
+            kind=kind, n_epochs=n_epochs, interpret=interpret)
+        return np.asarray(acc[0])
 
     gg, cc = np.meshgrid(np.asarray(gammas, np.float32),
                          np.asarray(cs, np.float32), indexing="ij")
@@ -220,6 +295,8 @@ def fit_best(
     n_epochs: int = 200,
     seed: int = 0,
     cv_epochs: int | None = None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> tuple[SVMModel, float]:
     """Grid-search (gamma, C) by CV, refit on the full set. Returns (model, cv_acc).
 
@@ -227,6 +304,8 @@ def fit_best(
     the default keeps the historical policy ``max(60, n_epochs // 2)``
     (fold models only need to rank hyper-parameters, not converge fully).
     The final full-set refit always runs the full ``n_epochs``.
+    ``use_pallas``/``interpret`` route both the CV grid and the refit
+    through the fused Gram-free solver (string kinds only).
     """
     if cs is None:
         cs = np.logspace(-1, 3, 7)
@@ -236,7 +315,10 @@ def fit_best(
         gammas = np.logspace(-1, 2, 7)
     if cv_epochs is None:
         cv_epochs = max(60, n_epochs // 2)
-    acc = cv_grid_accuracy(x, y, kind, gammas, cs, n_folds, int(cv_epochs), seed)
+    acc = cv_grid_accuracy(x, y, kind, gammas, cs, n_folds, int(cv_epochs),
+                           seed, use_pallas=use_pallas, interpret=interpret)
     gi, ci = np.unravel_index(np.argmax(acc), acc.shape)
-    model = train_binary(x, y, kind, float(gammas[gi]), float(cs[ci]), n_epochs)
+    model = train_binary(x, y, kind, float(gammas[gi]), float(cs[ci]),
+                         n_epochs, use_pallas=use_pallas,
+                         interpret=interpret)
     return model, float(acc[gi, ci])

@@ -55,7 +55,12 @@ import numpy as np
 from repro.core import kernels as kern
 from repro.core.analog import AnalogRBFModel
 from repro.core.ovo import class_pairs
-from repro.core.svm import SVMModel
+from repro.core.svm import (
+    SVMModel,
+    cv_lanes_accuracy_pallas,
+    resolve_use_pallas,
+)
+from repro.kernels import ops as kops
 
 #: fit_best's hyper-parameter grid defaults (paper Sec. V-A2).
 DEFAULT_CS = np.logspace(-1, 3, 7)
@@ -345,7 +350,12 @@ def _training_kernel(kind):
 
 def _cell_cv_accuracy(kp, yp, mask, vp, c, n_epochs):
     """Train on (mask & valid), validate on (~mask & valid) — the padded
-    counterpart of ``svm._train_eval_masked``."""
+    counterpart of ``svm._train_eval_masked``.
+
+    The fused-solver twin is ``svm.cv_lanes_accuracy_pallas``: same
+    train/validate weighting, but the prediction margins come out of the
+    Pallas solver's fused ``f`` output instead of a ``kp @ (alpha * y)``
+    against a materialized Gram (DESIGN.md §7.1)."""
     alpha = dual_coordinate_ascent_blocked(kp, yp, c * mask * vp, n_epochs)
     f = kp @ (alpha * yp)
     pred = jnp.where(f >= 0.0, 1.0, -1.0)
@@ -376,31 +386,62 @@ def _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, n_epochs):
     return jax.vmap(per_gamma)(gammas).reshape(gammas.shape[0], n_c)
 
 
-@partial(jax.jit, static_argnames=("kind", "n_epochs"))
-def _cv_grid_all_pairs(x, y, fold_masks, valid, gammas, cs, kind, n_epochs):
+@partial(jax.jit, static_argnames=("kind", "n_epochs", "use_pallas",
+                                   "interpret"))
+def _cv_grid_all_pairs(x, y, fold_masks, valid, gammas, cs, kind, n_epochs,
+                       use_pallas=False, interpret=None):
     """CV grid only, (P, G, C) — the utility/shard-path entry point.
 
     ``train_pairs`` itself uses `_family_program` (grid + argmax + refit
     fused); this standalone program backs `family_cv_grid` so callers that
     only want the accuracy tensor don't pay a discarded refit.
     """
+    if use_pallas and isinstance(kind, str):
+        gammas_pg = jnp.broadcast_to(gammas[None], (x.shape[0],
+                                                    gammas.shape[0]))
+        return cv_lanes_accuracy_pallas(
+            x, y, fold_masks, valid, gammas_pg, cs, kind=kind,
+            n_epochs=n_epochs, interpret=interpret, block=SOLVER_BLOCK)
     return jax.vmap(
         lambda xp, yp, fm, vp: _pair_cv_grid(xp, yp, fm, vp, gammas, cs,
                                              kind, n_epochs)
     )(x, y, fold_masks, valid)
 
 
-@partial(jax.jit, static_argnames=("kind", "cv_epochs", "n_epochs"))
+@partial(jax.jit, static_argnames=("kind", "cv_epochs", "n_epochs",
+                                   "use_pallas", "interpret"),
+         donate_argnames=("y",))
 def _family_program(x, y, fold_masks, valid, gammas, cs, kind, cv_epochs,
-                    n_epochs):
+                    n_epochs, use_pallas=False, interpret=None):
     """The whole family in ONE program: CV grid -> argmax -> full refit.
 
     Returns ``(acc (P, G, C), gi (P,), ci (P,), alpha (P, n))``.  The
     argmax runs on device over the gamma-major flattened grid — the same
     first-maximum tie-break as ``np.unravel_index(np.argmax(...))`` in
     ``svm.fit_best``.
+
+    ``use_pallas`` (string kinds) swaps both the CV grid and the refit
+    onto the fused Gram-free solver lanes (``repro.kernels.solver``); the
+    per-lane Gram matrices the vmap path materializes disappear from the
+    program entirely.  ``y`` is donated: its buffer is dead by the time
+    the refit alphas are produced, so XLA reuses it for the (P, n) output
+    instead of growing the peak.
     """
     n_c = cs.shape[0]
+
+    if use_pallas and isinstance(kind, str):
+        gammas_pg = jnp.broadcast_to(gammas[None], (x.shape[0],
+                                                    gammas.shape[0]))
+        acc = cv_lanes_accuracy_pallas(
+            x, y, fold_masks, valid, gammas_pg, cs, kind=kind,
+            n_epochs=cv_epochs, interpret=interpret, block=SOLVER_BLOCK)
+        flat = jnp.argmax(acc.reshape(acc.shape[0], -1), axis=1)
+        gi, ci = flat // n_c, flat % n_c
+        c_box = (cs[ci][:, None] * valid)[:, None, :]      # (P, 1, n)
+        alpha, _ = kops.solve_lanes(
+            x, y, c_box, gammas[gi][:, None], kind=kind,
+            n_epochs=n_epochs, block=SOLVER_BLOCK, interpret=interpret)
+        return acc, gi, ci, alpha[:, 0, 0]
 
     def per_pair(xp, yp, fm, vp):
         acc = _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, cv_epochs)
@@ -413,19 +454,36 @@ def _family_program(x, y, fold_masks, valid, gammas, cs, kind, cv_epochs,
     return jax.vmap(per_pair)(x, y, fold_masks, valid)
 
 
-@partial(jax.jit, static_argnames=("kind", "n_epochs"))
-def _refit_all_pairs(x, y, valid, gamma_sel, c_sel, kind, n_epochs):
+@partial(jax.jit, static_argnames=("kind", "n_epochs", "use_pallas",
+                                   "interpret"),
+         donate_argnames=("y",))
+def _refit_all_pairs(x, y, valid, gamma_sel, c_sel, kind, n_epochs,
+                     use_pallas=False, interpret=None):
     """Full-set refit of every pair at its selected (gamma, C): (P, n).
 
     Only used by the shard_map path, where selection happens on host
-    between the sharded CV grid and the refit.
+    between the sharded CV grid and the refit.  ``y`` is donated (see
+    ``_family_program``).
     """
+    if use_pallas and isinstance(kind, str):
+        c_box = (c_sel[:, None] * valid)[:, None, :]       # (P, 1, n)
+        alpha, _ = kops.solve_lanes(
+            x, y, c_box, gamma_sel[:, None], kind=kind,
+            n_epochs=n_epochs, block=SOLVER_BLOCK, interpret=interpret)
+        return alpha[:, 0, 0]
 
     def one(xp, yp, vp, g, c):
         kp = kern.kernel_matrix(kind, xp, xp, g) + 1.0
         return dual_coordinate_ascent_blocked(kp, yp, c * vp, n_epochs)
 
     return jax.vmap(one)(x, y, valid, gamma_sel, c_sel)
+
+
+def _family_use_pallas(use_pallas, kind) -> bool:
+    """Pallas solver applies to the stateless string kinds only; the
+    hardware-in-the-loop measured-curve kernel keeps the blocked path."""
+    return bool(use_pallas) and isinstance(kind, str) and \
+        kind in ("linear", "rbf", "sech2")
 
 
 def family_cv_grid(
@@ -435,20 +493,26 @@ def family_cv_grid(
     cs: np.ndarray,
     n_epochs: int,
     mesh=None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> np.ndarray:
     """CV-accuracy tensor ``(P, |gammas|, |cs|)`` for one kernel family.
 
     ``kind`` is a kernel name or a callable (hardware-in-the-loop).  With a
     ``mesh`` the grid runs under shard_map over the pair x gamma axis.
+    ``use_pallas`` (string kinds) runs the fused Gram-free solver lanes.
     """
     kind = _training_kernel(kind)
+    use_pallas = _family_use_pallas(resolve_use_pallas(use_pallas), kind)
     if mesh is not None:
-        return _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh)
+        return _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh,
+                                use_pallas=use_pallas, interpret=interpret)
     return np.asarray(_cv_grid_all_pairs(
         jnp.asarray(padded.x), jnp.asarray(padded.y),
         jnp.asarray(padded.fold_masks), jnp.asarray(padded.valid),
         jnp.asarray(gammas, jnp.float32), jnp.asarray(cs, jnp.float32),
-        kind=kind, n_epochs=n_epochs))
+        kind=kind, n_epochs=n_epochs, use_pallas=use_pallas,
+        interpret=interpret))
 
 
 def family_refit(
@@ -457,14 +521,19 @@ def family_refit(
     gamma_sel: np.ndarray,
     c_sel: np.ndarray,
     n_epochs: int,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> np.ndarray:
     """Vmapped full-set solve at the selected hyper-parameters: (P, n_max)."""
+    kind = _training_kernel(kind)
     return np.asarray(_refit_all_pairs(
         jnp.asarray(padded.x), jnp.asarray(padded.y),
         jnp.asarray(padded.valid),
         jnp.asarray(gamma_sel, jnp.float32),
         jnp.asarray(c_sel, jnp.float32),
-        kind=_training_kernel(kind), n_epochs=n_epochs))
+        kind=kind, n_epochs=n_epochs,
+        use_pallas=_family_use_pallas(resolve_use_pallas(use_pallas), kind),
+        interpret=interpret))
 
 
 # ---------------------------------------------------------------------------
@@ -475,13 +544,16 @@ def family_refit(
 PAIRGRID_AXIS = "pairgrid"
 
 
-def _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh):
+def _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh,
+                     use_pallas=False, interpret=None):
     """The same (P, G, C) CV grid, shard_mapped over flattened pair x gamma.
 
     Each (pair, gamma) entry is independent (no collectives), so the only
     cost of distribution is that the pairwise-distance hoisting happens per
     entry instead of per pair.  The flattened axis is padded with repeats
     of entry 0 up to a device-count multiple; padded outputs are dropped.
+    With ``use_pallas`` each shard's cells run through the fused solver
+    lanes (P=cells, G=1) instead of the vmapped blocked solver.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -510,6 +582,12 @@ def _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh):
         gg = np.concatenate([gg] + [gg[pad]] * n_pad)
 
     def local(xs, ys, fs, vs, gs, cs_rep):
+        if use_pallas and isinstance(kind, str):
+            acc = cv_lanes_accuracy_pallas(
+                xs, ys, fs, vs, gs[:, None], cs_rep, kind=kind,
+                n_epochs=n_epochs, interpret=interpret, block=SOLVER_BLOCK)
+            return acc[:, 0, :]
+
         def cell(xp, yp, fm, vp, gamma):
             kp = kern.kernel_matrix(kind, xp, xp, gamma) + 1.0
             accs = jax.vmap(
@@ -580,6 +658,8 @@ def _train_family(
     n_epochs: int,
     cv_epochs: int,
     mesh=None,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
 ) -> tuple[list[SVMModel], list[float]]:
     """CV-grid + select + refit one family for every pair in ``padded``.
 
@@ -588,19 +668,24 @@ def _train_family(
     the (small) vmapped refit program.
     """
     if mesh is not None:
-        acc = family_cv_grid(padded, kind, gammas, cs, cv_epochs, mesh=mesh)
+        acc = family_cv_grid(padded, kind, gammas, cs, cv_epochs, mesh=mesh,
+                             use_pallas=use_pallas, interpret=interpret)
         sel = [_argmax_grid(acc[i], gammas, cs)
                for i in range(padded.n_pairs)]
         g_sel = np.asarray([s[0] for s in sel], np.float32)
         c_sel = np.asarray([s[1] for s in sel], np.float32)
-        alphas = family_refit(padded, kind, g_sel, c_sel, n_epochs)
+        alphas = family_refit(padded, kind, g_sel, c_sel, n_epochs,
+                              use_pallas=use_pallas, interpret=interpret)
     else:
+        kind_t = _training_kernel(kind)
         acc, gi, ci, alphas = _family_program(
             jnp.asarray(padded.x), jnp.asarray(padded.y),
             jnp.asarray(padded.fold_masks), jnp.asarray(padded.valid),
             jnp.asarray(gammas, jnp.float32), jnp.asarray(cs, jnp.float32),
-            kind=_training_kernel(kind), cv_epochs=int(cv_epochs),
-            n_epochs=int(n_epochs))
+            kind=kind_t, cv_epochs=int(cv_epochs),
+            n_epochs=int(n_epochs),
+            use_pallas=_family_use_pallas(use_pallas, kind_t),
+            interpret=interpret)
         acc, alphas = np.asarray(acc), np.asarray(alphas)
         sel = [(float(gammas[g]), float(cs[c]), float(acc[p, g, c]))
                for p, (g, c) in enumerate(zip(np.asarray(gi),
@@ -624,6 +709,8 @@ def train_pairs(
     n_folds: int = 5,
     mesh=None,
     hw_all: bool = False,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
 ) -> list[PairResult]:
     """Algorithm 1, batched: one compiled program per kernel family.
 
@@ -632,6 +719,15 @@ def train_pairs(
     ``cv_epochs`` controlling the fold-training epochs (default: the
     historical ``max(60, n_epochs // 2)``).  ``mesh`` optionally runs the
     CV grids under shard_map (see :data:`PAIRGRID_AXIS`).
+
+    ``use_pallas`` routes the linear/rbf families through the fused
+    Gram-free Pallas solver (``repro.kernels.solver``); ``None`` follows
+    the ``api/compiled.py`` convention (on only where the tiles compile
+    to Mosaic, i.e. TPU), and ``interpret`` forces the Pallas interpreter
+    so CPU CI can exercise the code path deliberately.  The
+    hardware-in-the-loop family always keeps the blocked XLA solver
+    (measured-curve kernels have no tile body).  Selections agree with
+    the blocked path to the documented comparator-tie epsilon.
 
     ``hw_all=True`` keeps the hardware co-optimized ``model_hw`` for EVERY
     pair instead of only the RBF-selected ones.  The engine trains the hw
@@ -645,6 +741,7 @@ def train_pairs(
     if cv_epochs is None:
         cv_epochs = max(60, n_epochs // 2)
     cv_epochs = int(cv_epochs)
+    use_pallas = resolve_use_pallas(use_pallas)
 
     padded = pad_pairs(x_train, y_train, n_classes, n_folds=n_folds,
                        seed=seed)
@@ -668,12 +765,14 @@ def train_pairs(
 
         workers = max(1, min(len(jobs), os.cpu_count() or 1))
         with ThreadPoolExecutor(max_workers=workers) as ex:
-            futs = {k: ex.submit(_train_family, *a, n_epochs, cv_epochs)
+            futs = {k: ex.submit(_train_family, *a, n_epochs, cv_epochs,
+                                 None, use_pallas, interpret)
                     for k, a in jobs.items()}
             out = {k: f.result() for k, f in futs.items()}
     else:
         # shard_map programs already span every device; run them in turn.
-        out = {k: _train_family(*a, n_epochs, cv_epochs, mesh)
+        out = {k: _train_family(*a, n_epochs, cv_epochs, mesh,
+                                use_pallas, interpret)
                for k, a in jobs.items()}
     lin_models, lin_accs = out["linear"]
     rbf_models, rbf_accs = out["rbf"]

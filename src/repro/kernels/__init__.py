@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the compute hot-spots (+ pure-jnp oracles).
 
   rbf.py              paper hot loop: tiled RBF / sech2 kernel matrix (MXU)
+  solver.py           fused dual-coordinate-ascent training solver: lane-
+                      resident state + on-the-fly Gram tiles (DESIGN.md §7)
   flash_attention.py  online-softmax attention, causal/sliding-window, GQA
   ssd.py              Mamba2 SSD chunked scan
   ops.py              jit'd wrappers w/ interpret-mode dispatch

@@ -14,6 +14,7 @@ import jax
 from repro.kernels import ref  # noqa: F401  (re-exported oracle)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rbf import kernel_matrix_pallas as _rbf
+from repro.kernels.solver import dual_ascent_lanes_pallas as _solver
 from repro.kernels.ssd import ssd_scan_pallas as _ssd
 
 
@@ -36,6 +37,16 @@ def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
         interpret = _interpret_default()
     return _flash(q, k, v, causal=causal, window=window, q_offset=q_offset,
                   interpret=interpret, **kw)
+
+
+def solve_lanes(x, y, c_box, gamma, kind: str = "rbf", n_epochs: int = 200,
+                block: int = 16, interpret: bool | None = None, **kw):
+    """Fused dual-coordinate-ascent over (pair, gamma, C-lane) solver
+    lanes with on-the-fly Gram tiles -> (alpha, f), each (P, G, L, n)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _solver(x, y, c_box, gamma, kind=kind, n_epochs=n_epochs,
+                   block=block, interpret=interpret, **kw)
 
 
 def ssd_scan(x, a, bmat, cmat, chunk: int = 128,

@@ -39,6 +39,109 @@ def sech2_matrix(
 
 
 # ---------------------------------------------------------------------------
+# Dual coordinate ascent over solver lanes (the training hot loop)
+# ---------------------------------------------------------------------------
+
+
+def dual_ascent_blocked(
+    kp: jnp.ndarray,      # (n, n) Gram WITH bias folded in (K + 1)
+    y: jnp.ndarray,       # (n,) labels in {-1, +1}
+    c_box: jnp.ndarray,   # (n,) per-sample box (0 masks a sample out)
+    n_epochs: int,
+    block: int = 16,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked Gauss-Seidel dual ascent on a MATERIALIZED Gram matrix.
+
+    The semantic twin of the fused Pallas solver
+    (``repro.kernels.solver.dual_ascent_lanes_pallas``): the coordinate
+    update sequence is identical to
+    ``repro.core.trainer.dual_coordinate_ascent_blocked`` — same block
+    visit order, fresh per-block margins via one GEMM — which stays the
+    oracle of record.  Returns ``(alpha, f)`` with the final margins
+    ``f = K' @ (alpha * y)`` appended (the Pallas kernel emits both).
+    """
+    n = kp.shape[0]
+    block = int(min(block, n))
+    n_pad = -(-n // block) * block
+    if n_pad != n:
+        kp = jnp.pad(kp, ((0, n_pad - n), (0, n_pad - n)))
+        y = jnp.pad(y, (0, n_pad - n), constant_values=1.0)
+        c_box = jnp.pad(c_box, (0, n_pad - n))
+    qdiag = jnp.clip(jnp.diag(kp), 1e-12, None)
+    n_blocks = n_pad // block
+
+    def block_body(b, alpha):
+        j0 = b * block
+        rows = jax.lax.dynamic_slice(kp, (j0, 0), (block, n_pad))
+        kbb = jax.lax.dynamic_slice(rows, (0, j0), (block, block))
+        yb = jax.lax.dynamic_slice(y, (j0,), (block,))
+        cb = jax.lax.dynamic_slice(c_box, (j0,), (block,))
+        qb = jax.lax.dynamic_slice(qdiag, (j0,), (block,))
+        ab = jax.lax.dynamic_slice(alpha, (j0,), (block,))
+        fb = rows @ (alpha * y)
+
+        def coord(i, carry):
+            ab, fb = carry
+            g = 1.0 - yb[i] * fb[i]
+            a_new = jnp.clip(ab[i] + g / qb[i], 0.0, cb[i])
+            d = a_new - ab[i]
+            fb = fb + d * yb[i] * kbb[:, i]
+            return ab.at[i].set(a_new), fb
+
+        ab, _ = jax.lax.fori_loop(0, block, coord, (ab, fb))
+        return jax.lax.dynamic_update_slice(alpha, ab, (j0,))
+
+    def epoch(_, alpha):
+        return jax.lax.fori_loop(0, n_blocks, block_body, alpha)
+
+    alpha = jax.lax.fori_loop(0, n_epochs, epoch,
+                              jnp.zeros((n_pad,), kp.dtype))
+    f = kp @ (alpha * y)
+    return alpha[:n], f[:n]
+
+
+def solve_lanes(
+    x: jnp.ndarray,       # (P, n, d) per-pair inputs
+    y: jnp.ndarray,       # (P, n)
+    c_box: jnp.ndarray,   # (P, L, n) gamma-independent box lanes
+    gamma: jnp.ndarray,   # (P, G)
+    kind: str = "rbf",
+    n_epochs: int = 200,
+    block: int = 16,
+    n_slope: float = 1.38,
+    v_t: float = 0.02585,
+    v_scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-jnp lanes oracle: materialized per-(pair, gamma) Gram + the
+    blocked update sequence, vmapped over (P, G, L).  Returns ``(alpha,
+    f)``, each (P, G, L, n) — exactly the fused solver's outputs, with
+    the Gram built once per (pair, gamma) and shared across the C x fold
+    lanes that close over it (the XLA baseline the Pallas kernel trades
+    HBM traffic against)."""
+
+    def kmat(xp, g):
+        if kind == "linear":
+            k = xp @ xp.T
+        elif kind == "rbf":
+            k = rbf_matrix(xp, xp, g)
+        elif kind == "sech2":
+            k = sech2_matrix(xp, xp, g, n_slope, v_t, v_scale)
+        else:
+            raise ValueError(f"no lanes oracle for kernel kind {kind!r}")
+        return k + 1.0  # bias-as-feature
+
+    def per_pair(xp, yp, cl, gg):
+        def per_gamma(g):
+            kp = kmat(xp, g)
+            return jax.vmap(
+                lambda cb: dual_ascent_blocked(kp, yp, cb, n_epochs, block)
+            )(cl)
+        return jax.vmap(per_gamma)(gg)
+
+    return jax.vmap(per_pair)(x, y, c_box, gamma)
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 

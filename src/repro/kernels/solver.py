@@ -1,0 +1,176 @@
+"""Fused Pallas training solver: lane-resident dual coordinate ascent with
+on-the-fly Gram tiles (DESIGN.md §7).
+
+Algorithm 1's compute is ``dual_coordinate_ascent_blocked`` swept over all
+solver *lanes* — OvO pair x CV fold x (C, gamma) grid cell.  Under the
+XLA vmap formulation every lane's (n_max, n_max) Gram matrix K' is
+materialized in HBM and its row blocks are re-read once per block per
+epoch, so the sweep is HBM-bound.  This kernel inverts the trade: the
+grid iterates over lanes, each program keeps its lane's state — ``alpha``,
+the (n_max, d) inputs, labels and C-box — resident in VMEM for the whole
+epoch loop, and *recomputes* each (block, n_max) Gram row slab on the fly
+from the inputs with the very same tile bodies the kernel-matrix grid
+uses (``repro.kernels.rbf.tile_body``).  The (lanes, n_max, n_max) Gram
+tensor is never materialized anywhere: O(n^2) HBM traffic per lane-epoch
+becomes O(n*d) VMEM-resident FLOPs, a trade that favors compute-rich
+hardware by orders of magnitude for the paper's d <= 32 workloads.
+
+Update-sequence contract
+------------------------
+The coordinate update sequence is IDENTICAL to
+``repro.core.trainer.dual_coordinate_ascent_blocked`` (the oracle): same
+block visit order, fresh per-block margins from one GEMM against the
+current alphas, Gauss-Seidel inside the block against the diagonal
+(block, block) tile.  Only the Gram values' provenance differs (tile
+recompute vs materialized matrix), so alphas agree to f32 round-off.
+Masked samples (``c_box = 0``) remain exact no-ops, which keeps trailing
+padding rows inert exactly as in the blocked solver.
+
+Lane layout
+-----------
+``x (P, n, d)`` / ``y (P, n)`` are per-*pair*; ``gamma (P, G)`` spans the
+width grid; ``c_box (P, L, n)`` spans the gamma-independent C x fold
+lanes (the box already folds the train-mask and validity in).  The grid
+is ``(P, G, L)`` — row-major iteration revisits the same pair block for
+all its (G, L) lanes, so Pallas's pipelining keeps the pair inputs hot.
+Outputs are ``alpha (P, G, L, n)`` and the final margins ``f (P, G, L,
+n)`` (``f_j = sum_i K'_ji alpha_i y_i``), computed by one extra fused
+pass over the row slabs so CV validation never needs the Gram either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rbf import tile_body
+
+#: Coordinate-block size; matches ``repro.core.trainer.SOLVER_BLOCK``.
+DEFAULT_BLOCK = 16
+
+
+def _solver_kernel(x_ref, y_ref, c_ref, g_ref, alpha_ref, f_ref, *,
+                   block: int, n_epochs: int, tile):
+    """One lane: full dual-coordinate-ascent epoch loop, VMEM-resident."""
+    x = x_ref[0]                      # (n_pad, d)
+    yv = y_ref[...]                   # (1, n_pad)
+    cv = c_ref[0]                     # (1, n_pad)
+    gamma = g_ref[0, 0]
+    n_pad, d = x.shape
+    n_blocks = n_pad // block
+
+    def rows_at(j0):
+        """Fresh (block, n_pad) Gram row slab K'[j0:j0+block, :] + bias."""
+        xb = jax.lax.dynamic_slice(x, (j0, 0), (block, d))
+        return tile(xb, x, gamma) + 1.0          # bias-as-feature
+
+    def block_body(b, alpha):
+        j0 = b * block
+        rows = rows_at(j0)
+        kbb = jax.lax.dynamic_slice(rows, (0, j0), (block, block))
+        yb = jax.lax.dynamic_slice(yv, (0, j0), (1, block))
+        cb = jax.lax.dynamic_slice(cv, (0, j0), (1, block))
+        # The oracle's qdiag values: K'(x_i, x_i), same tile math.
+        qb = jnp.clip(jnp.diagonal(kbb), 1e-12, None)
+        ab = jax.lax.dynamic_slice(alpha, (0, j0), (1, block))
+        # Fresh block margins from the current alphas: ONE (1, n) x
+        # (block, n)^T contraction — the blocked oracle's `rows @ (a*y)`.
+        fb = jax.lax.dot_general(
+            alpha * yv, rows, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (1, block)
+
+        def coord(i, carry):
+            ab, fb = carry
+            g = 1.0 - yb[0, i] * fb[0, i]
+            a_new = jnp.clip(ab[0, i] + g / qb[i], 0.0, cb[0, i])
+            dlt = a_new - ab[0, i]
+            col = jax.lax.dynamic_slice(kbb, (0, i), (block, 1))
+            fb = fb + dlt * yb[0, i] * col.reshape(1, block)
+            ab = jax.lax.dynamic_update_slice(
+                ab, a_new.reshape(1, 1), (0, i))
+            return ab, fb
+
+        ab, _ = jax.lax.fori_loop(0, block, coord, (ab, fb))
+        return jax.lax.dynamic_update_slice(alpha, ab, (0, j0))
+
+    def epoch(_, alpha):
+        return jax.lax.fori_loop(0, n_blocks, block_body, alpha)
+
+    alpha = jax.lax.fori_loop(0, n_epochs, epoch,
+                              jnp.zeros((1, n_pad), jnp.float32))
+
+    # Final margins f = K' @ (alpha * y), one more fused pass over the
+    # row slabs — CV validation consumes f directly, Gram-free.
+    ay = alpha * yv
+
+    def final_block(b, f):
+        j0 = b * block
+        fb = jax.lax.dot_general(
+            ay, rows_at(j0), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(f, fb, (0, j0))
+
+    f = jax.lax.fori_loop(0, n_blocks, final_block,
+                          jnp.zeros((1, n_pad), jnp.float32))
+    alpha_ref[...] = alpha.reshape(alpha_ref.shape)
+    f_ref[...] = f.reshape(f_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "n_epochs", "block", "interpret",
+                     "n_slope", "v_t", "v_scale"),
+)
+def dual_ascent_lanes_pallas(
+    x: jnp.ndarray,       # (P, n, d) per-pair inputs
+    y: jnp.ndarray,       # (P, n) labels in {-1, +1}
+    c_box: jnp.ndarray,   # (P, L, n) per-lane box (0 masks a sample out)
+    gamma: jnp.ndarray,   # (P, G) kernel widths
+    kind: str = "rbf",    # 'linear' | 'rbf' | 'sech2'
+    n_epochs: int = 200,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+    n_slope: float = 1.38,
+    v_t: float = 0.02585,
+    v_scale: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Solve every (pair, gamma, C-lane) in one fused grid.
+
+    Returns ``(alpha, f)``, each ``(P, G, L, n)``.  ``v_scale`` defaults
+    to 1.0 — feature-unit gamma, matching ``core.kernels.sech2_kernel``.
+    """
+    p, n, d = x.shape
+    g_count = gamma.shape[1]
+    l_count = c_box.shape[1]
+    blk = int(min(block, n))
+    n_pad = -(-n // blk) * blk
+    if n_pad != n:
+        # Padding rows are inert: zero box ==> alpha frozen at 0 ==> they
+        # contribute exact zeros to every margin contraction.
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, n_pad - n)), constant_values=1.0)
+        c_box = jnp.pad(c_box, ((0, 0), (0, 0), (0, n_pad - n)))
+    tile = tile_body(kind, n_slope=n_slope, v_t=v_t, v_scale=v_scale)
+    body = functools.partial(_solver_kernel, block=blk,
+                             n_epochs=int(n_epochs), tile=tile)
+    out_shape = jax.ShapeDtypeStruct((p, g_count, l_count, n_pad),
+                                     jnp.float32)
+    alpha, f = pl.pallas_call(
+        body,
+        grid=(p, g_count, l_count),
+        in_specs=[
+            pl.BlockSpec((1, n_pad, d), lambda i, j, k: (i, 0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, 1, n_pad), lambda i, j, k: (i, k, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, n_pad), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, 1, n_pad), lambda i, j, k: (i, j, k, 0)),
+        ],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(x, y, c_box, jnp.asarray(gamma, jnp.float32))
+    return alpha[..., :n], f[..., :n]

@@ -21,6 +21,47 @@ def test_rbf_matrix_sweep(n, m, d, kind):
                                atol=5e-6, rtol=1e-5)
 
 
+@pytest.mark.parametrize("n,m,d", [
+    (100, 33, 1),     # d = 1 (single-feature datasets)
+    (1, 64, 3),       # single-row query
+    (64, 1, 3),       # single support vector
+    (1, 1, 1),        # fully degenerate
+    (97, 130, 2),     # n AND m off the (bm, bn) grid simultaneously
+])
+@pytest.mark.parametrize("kind", ["rbf", "sech2"])
+def test_rbf_matrix_awkward_shapes(n, m, d, kind):
+    """Shapes off the tile grid: d=1, single-row operands, double ragged."""
+    rng = np.random.RandomState(11 * n + m + d)
+    x = jnp.asarray(rng.rand(n, d), jnp.float32)
+    z = jnp.asarray(rng.rand(m, d), jnp.float32)
+    got = ops.rbf_matrix(x, z, 2.7, kind=kind, bm=64, bn=64)
+    want = (ref.rbf_matrix if kind == "rbf" else ref.sech2_matrix)(x, z, 2.7)
+    assert got.shape == (n, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_slope,v_t,v_scale", [
+    (1.38, 0.02585, 0.5),     # the defaults, explicitly
+    (1.7, 0.031, 0.8),        # non-default hardware constants
+    (1.1, 0.02585, 1.0),
+])
+def test_sech2_matrix_hardware_constants(n_slope, v_t, v_scale):
+    """Non-default n_slope/v_t/v_scale thread through to the tile body and
+    match the oracle evaluated with the SAME constants (the feature-unit
+    gamma parametrization makes the result constant-invariant up to
+    round-off, so the oracle must be built from matching values)."""
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.rand(40, 3), jnp.float32)
+    z = jnp.asarray(rng.rand(25, 3), jnp.float32)
+    got = ops.rbf_matrix(x, z, 4.0, kind="sech2", bm=32, bn=32,
+                         n_slope=n_slope, v_t=v_t, v_scale=v_scale)
+    want = ref.sech2_matrix(x, z, 4.0, n_slope=n_slope, v_t=v_t,
+                            v_scale=v_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-6, rtol=1e-5)
+
+
 @pytest.mark.parametrize("gamma", [0.1, 1.0, 30.0])
 def test_rbf_matrix_gamma_sweep(gamma):
     rng = np.random.RandomState(7)

@@ -1,0 +1,223 @@
+"""Fused Pallas training solver vs its oracles (DESIGN.md §7).
+
+Covers the tentpole's guarantees:
+
+  * the Pallas kernel (interpret mode) reproduces
+    ``trainer.dual_coordinate_ascent_blocked`` — the oracle of record —
+    to f32 round-off on random lanes (property test), including the
+    fused margin output ``f = K' @ (alpha * y)``;
+  * awkward shapes: n not a multiple of the coordinate block, d = 1,
+    single-sample lanes, single-lane grids;
+  * kernel-kind coverage: linear / rbf / sech2 (incl. non-default
+    hardware constants) against the pure-jnp lanes oracle
+    ``kernels.ref.solve_lanes``;
+  * masking: c_box = 0 rows stay exact no-ops (the padding contract);
+  * end-to-end: ``trainer.train_pairs(use_pallas=True)`` picks identical
+    (gamma, C) and support sets to the blocked engine on a Balance
+    subsample, and ``svm.fit_best(use_pallas=True)`` agrees on tiny data;
+  * the ``interpret`` override reaches the compiled inference machines
+    (``compile_machine(use_pallas=True, interpret=True)`` on CPU).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _compat import property_test
+
+from repro.core import kernels as kern
+from repro.core import svm as svm_mod, trainer
+from repro.kernels import ops, ref
+
+
+def _lanes(seed, p, n, d, g, l, c_hi=5.0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.rand(p, n, d), jnp.float32)
+    y = jnp.asarray(np.where(rng.rand(p, n) > 0.5, 1.0, -1.0), jnp.float32)
+    c_box = jnp.asarray(
+        rng.rand(p, l, n) * c_hi * (rng.rand(p, l, n) > 0.2), jnp.float32)
+    gamma = jnp.asarray(rng.rand(p, g) * 6.0 + 0.3, jnp.float32)
+    return x, y, c_box, gamma
+
+
+# -- parity vs the oracle of record ------------------------------------------
+
+
+@property_test(
+    fixed_examples=[(0, 37, 3, 2.0, 30), (1, 70, 1, 10.0, 40),
+                    (2, 16, 5, 0.5, 25), (3, 101, 2, 100.0, 20)],
+    strategies=lambda st: (st.integers(0, 50), st.integers(2, 80),
+                           st.integers(1, 5), st.floats(0.3, 100.0),
+                           st.integers(5, 40)),
+    max_examples=15,
+)
+def test_pallas_matches_blocked_oracle(seed, n, d, c, n_epochs):
+    """Random lanes: Pallas (interpret) == dual_coordinate_ascent_blocked
+    to f32 round-off, for the rbf Gram the engine actually trains on."""
+    x, y, c_box, gamma = _lanes(seed, 1, n, d, 1, 1, c_hi=c)
+    a_pl, f_pl = ops.solve_lanes(x, y, c_box, gamma, kind="rbf",
+                                 n_epochs=n_epochs, interpret=True)
+    kp = kern.kernel_matrix("rbf", x[0], x[0], gamma[0, 0]) + 1.0
+    a_or = np.asarray(trainer.dual_coordinate_ascent_blocked(
+        kp, y[0], c_box[0, 0], n_epochs))
+    scale = max(float(c), 1.0)
+    np.testing.assert_allclose(np.asarray(a_pl[0, 0, 0]), a_or,
+                               atol=5e-4 * scale, rtol=1e-3)
+    f_or = np.asarray(kp @ (jnp.asarray(a_or) * y[0]))
+    np.testing.assert_allclose(np.asarray(f_pl[0, 0, 0]), f_or,
+                               atol=5e-3 * scale, rtol=1e-3)
+
+
+@pytest.mark.parametrize("kind,n,d,g,l", [
+    ("linear", 50, 3, 1, 4),
+    ("rbf", 33, 4, 3, 5),      # n not a multiple of the block
+    ("rbf", 7, 1, 2, 2),       # d = 1, n < block
+    ("rbf", 1, 2, 1, 1),       # single-sample lane
+    ("sech2", 40, 2, 2, 3),
+])
+def test_lane_grid_matches_ref(kind, n, d, g, l):
+    """Multi-lane grids vs the pure-jnp materialized-Gram lanes oracle."""
+    x, y, c_box, gamma = _lanes(n + d, 2, n, d, g, l)
+    a_pl, f_pl = ops.solve_lanes(x, y, c_box, gamma, kind=kind,
+                                 n_epochs=25, interpret=True)
+    a_rf, f_rf = ref.solve_lanes(x, y, c_box, gamma, kind=kind, n_epochs=25)
+    np.testing.assert_allclose(np.asarray(a_pl), np.asarray(a_rf),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_pl), np.asarray(f_rf),
+                               atol=5e-3, rtol=1e-3)
+
+
+def test_sech2_nondefault_hardware_constants():
+    """Non-default n_slope/v_t/v_scale reach the tile body and match the
+    oracle built from the same constants.
+
+    Note the feature-unit gamma parametrization realizes the requested
+    width EXACTLY — the input scaling s = sqrt(gamma/gamma0) *
+    v_scale/(n*v_t) cancels every hardware constant (dv = 2*sqrt(gamma) *
+    dx) — so non-default constants may only differ from the defaults by
+    round-off; the contract here is tile-vs-oracle agreement under the
+    SAME constants."""
+    kw = dict(n_slope=1.7, v_t=0.031, v_scale=0.8)
+    x, y, c_box, gamma = _lanes(9, 1, 26, 3, 2, 2)
+    a_pl, _ = ops.solve_lanes(x, y, c_box, gamma, kind="sech2",
+                              n_epochs=20, interpret=True, **kw)
+    a_rf, _ = ref.solve_lanes(x, y, c_box, gamma, kind="sech2",
+                              n_epochs=20, **kw)
+    np.testing.assert_allclose(np.asarray(a_pl), np.asarray(a_rf),
+                               atol=5e-4, rtol=1e-3)
+    a_def, _ = ops.solve_lanes(x, y, c_box, gamma, kind="sech2",
+                               n_epochs=20, interpret=True)
+    np.testing.assert_allclose(np.asarray(a_pl), np.asarray(a_def),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_masked_rows_exact_noops():
+    """c_box = 0 rows keep alpha at exactly 0 and leave the real rows'
+    alphas identical to the unpadded solve (the padding contract)."""
+    rng = np.random.RandomState(4)
+    n, n_pad, d = 21, 12, 3
+    x = np.zeros((1, n + n_pad, d), np.float32)
+    x[0, :n] = rng.rand(n, d)
+    x[0, n:] = rng.rand(n_pad, d) * 7.0          # garbage padding data
+    y = np.ones((1, n + n_pad), np.float32)
+    y[0, :n] = np.where(rng.rand(n) > 0.5, 1.0, -1.0)
+    c_box = np.zeros((1, 1, n + n_pad), np.float32)
+    c_box[0, 0, :n] = 3.0
+    gamma = np.full((1, 1), 2.5, np.float32)
+    a_pad, _ = ops.solve_lanes(jnp.asarray(x), jnp.asarray(y),
+                               jnp.asarray(c_box), jnp.asarray(gamma),
+                               kind="rbf", n_epochs=30, interpret=True)
+    a_ref, _ = ops.solve_lanes(jnp.asarray(x[:, :n]), jnp.asarray(y[:, :n]),
+                               jnp.asarray(c_box[:, :, :n]),
+                               jnp.asarray(gamma),
+                               kind="rbf", n_epochs=30, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a_pad[0, 0, 0, n:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(a_pad[0, 0, 0, :n]),
+                                  np.asarray(a_ref[0, 0, 0]))
+
+
+# -- training-engine integration ---------------------------------------------
+
+
+def _balance_subsample(n=150, seed=0):
+    from repro.data import datasets
+
+    ds = datasets.load("balance")
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(len(ds.y_train))[:n]
+    return ds.x_train[idx], ds.y_train[idx], ds.n_classes
+
+
+def test_train_pairs_pallas_identical_selection():
+    """End-to-end Algorithm 1 on a Balance subsample: the fused solver
+    picks identical kernels, (gamma, C) and support sets."""
+    x, y, k = _balance_subsample()
+    kw = dict(n_epochs=40, cv_epochs=20, n_folds=3, seed=0)
+    res_blk = trainer.train_pairs(x, y, k, use_pallas=False, **kw)
+    res_pal = trainer.train_pairs(x, y, k, use_pallas=True,
+                                  interpret=True, **kw)
+    for rb, rp in zip(res_blk, res_pal):
+        assert rb.kernel == rp.kernel
+        assert (rb.model.gamma, rb.model.c) == (rp.model.gamma, rp.model.c)
+        for slot in ("model_linear", "model_rbf"):
+            mb, mp = getattr(rb, slot), getattr(rp, slot)
+            np.testing.assert_array_equal(mb.support_x, mp.support_x)
+            np.testing.assert_allclose(mb.alpha, mp.alpha,
+                                       atol=5e-4, rtol=1e-3)
+        # the hw family always takes the blocked path: bit-identical
+        if rb.model_hw is not None:
+            np.testing.assert_array_equal(rb.model_hw.alpha,
+                                          rp.model_hw.alpha)
+
+
+def test_fit_best_pallas_identical_selection():
+    """svm.fit_best with the fused solver: same (gamma, C) pick and
+    support set on a small binary problem."""
+    rng = np.random.RandomState(7)
+    x = rng.rand(60, 3)
+    y = np.where(x[:, 0] + 0.3 * x[:, 1] > 0.7, 1.0, -1.0)
+    kw = dict(gammas=np.logspace(-1, 1, 3), cs=np.logspace(-1, 1, 3),
+              n_folds=3, n_epochs=40, cv_epochs=20)
+    m_blk, acc_blk = svm_mod.fit_best(x, y, "rbf", use_pallas=False, **kw)
+    m_pal, acc_pal = svm_mod.fit_best(x, y, "rbf", use_pallas=True,
+                                      interpret=True, **kw)
+    assert (m_blk.gamma, m_blk.c) == (m_pal.gamma, m_pal.c)
+    np.testing.assert_allclose(acc_blk, acc_pal, atol=1e-6)
+    np.testing.assert_array_equal(m_blk.support_x, m_pal.support_x)
+    np.testing.assert_allclose(m_blk.alpha, m_pal.alpha,
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_family_refit_pallas_matches_blocked():
+    """family_refit through the fused solver == blocked refit."""
+    x, y, k = _balance_subsample(n=90)
+    padded = trainer.pad_pairs(x, y, k, n_folds=3, seed=0)
+    g_sel = np.full((padded.n_pairs,), 2.0, np.float32)
+    c_sel = np.full((padded.n_pairs,), 5.0, np.float32)
+    a_blk = trainer.family_refit(padded, "rbf", g_sel, c_sel, 40,
+                                 use_pallas=False)
+    a_pal = trainer.family_refit(padded, "rbf", g_sel, c_sel, 40,
+                                 use_pallas=True, interpret=True)
+    np.testing.assert_allclose(a_pal, a_blk, atol=5e-4, rtol=1e-3)
+
+
+# -- interpret override through the compiled inference machines --------------
+
+
+def test_compile_machine_interpret_override():
+    """CPU CI can exercise the compiled-mode Pallas path deliberately:
+    use_pallas=True + interpret=True must agree with the jnp path."""
+    from repro.api import compile_machine
+
+    x, y, k = _balance_subsample(n=90)
+    pairs = trainer.train_pairs(x, y, k, n_epochs=30, cv_epochs=15,
+                                n_folds=3, seed=0)
+    models = [p.model_rbf for p in pairs]           # force kernel banks
+    cm_jnp = compile_machine(models, n_classes=k, use_pallas=False)
+    cm_pal = compile_machine(models, n_classes=k, use_pallas=True,
+                             interpret=True)
+    assert cm_pal.interpret is True
+    xq = x[:64]
+    np.testing.assert_allclose(cm_pal.decision_scores(xq),
+                               cm_jnp.decision_scores(xq),
+                               atol=2e-5, rtol=1e-5)
+    np.testing.assert_array_equal(cm_pal.predict(xq), cm_jnp.predict(xq))
