@@ -124,7 +124,6 @@ def model_flops_per_chip(rec: dict) -> float:
 
 def analyze(rec: dict) -> dict:
     corr = corrected_cell(rec)
-    chips = rec["chips"]
     t_c = corr["flops"] / PEAK_FLOPS
     t_m = corr["bytes"] / HBM_BW
     t_n = wire_bytes(corr["colls"], default_n=16) / ICI_BW

@@ -1,0 +1,28 @@
+"""Static invariant analyzer (DESIGN.md §8).
+
+Three passes over the repo, all waivable through the committed baseline:
+
+1. ``jaxpr_checks``  — trace the registered jitted entry points and walk
+   the closed jaxprs (F64-IN-JIT, HOST-CALLBACK, CONST-BAKE,
+   DONATION-DROPPED).
+2. ``ast_lint``      — AST convention rules (KEY-REUSE,
+   INTERPRET-THREAD, PYTREE-REG, BANNED-IN-HOT).
+3. ``pallas_budget`` — static VMEM footprints from BlockSpecs
+   (VMEM-BUDGET, GRID-DIVISIBLE, FUSED-VS-ORACLE).
+
+CLI: ``python -m repro.analysis --json report.json --baseline
+analysis_baseline.json`` — exit 0 iff every finding is waived.
+"""
+from repro.analysis.report import (  # noqa: F401
+    Finding,
+    Report,
+    Waiver,
+    dump_baseline,
+    load_baseline,
+)
+
+RULES = (
+    "F64-IN-JIT", "HOST-CALLBACK", "CONST-BAKE", "DONATION-DROPPED",
+    "KEY-REUSE", "INTERPRET-THREAD", "PYTREE-REG", "BANNED-IN-HOT",
+    "VMEM-BUDGET", "GRID-DIVISIBLE", "FUSED-VS-ORACLE",
+)

@@ -1,0 +1,108 @@
+"""CLI driver: ``python -m repro.analysis`` (DESIGN.md §8).
+
+Runs the three passes, merges findings against the baseline, writes the
+JSON report, prints the text summary, and exits non-zero iff any finding
+is not covered by a waiver.  ``--update-baseline`` rewrites the baseline
+to waive every current finding (each pre-filled with a placeholder reason
+that MUST be edited — ``load_baseline`` rejects empty justifications, and
+review rejects placeholders).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import ast_lint, jaxpr_checks, pallas_budget
+from repro.analysis.report import Report, Waiver, dump_baseline, load_baseline
+
+
+def build_report(root: str = ".", *, run_jaxpr: bool = True,
+                 run_ast: bool = True, run_pallas: bool = True,
+                 max_const_bytes: int | None = None,
+                 vmem_budget: int | None = None) -> Report:
+    """Run the selected passes over ``root`` and collect one Report."""
+    report = Report()
+
+    if run_ast:
+        findings, info = ast_lint.lint_tree(root)
+        report.extend(findings)
+        report.info["ast_lint"] = info
+
+    if run_jaxpr:
+        from repro.analysis.entrypoints import build_registry
+
+        entry_infos = []
+        for entry in build_registry():
+            if max_const_bytes is not None:
+                entry.max_const_bytes = max_const_bytes
+            findings, info = jaxpr_checks.run_entrypoint(entry)
+            report.extend(findings)
+            entry_infos.append(info)
+        report.info["jaxpr_checks"] = {"entrypoints": entry_infos}
+
+    if run_pallas:
+        kw = {} if vmem_budget is None else {"vmem_budget": vmem_budget}
+        findings, info = pallas_budget.check_kernels(**kw)
+        report.extend(findings)
+        report.info["pallas_budget"] = info
+
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static invariant analyzer: jaxpr contracts, repo "
+                    "convention lint, Pallas VMEM budgets.")
+    ap.add_argument("--root", default=".", help="repo root to scan")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full JSON report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="committed waiver baseline (analysis_baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline waiving every current finding "
+                         "(placeholder reasons must be edited)")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip Pass 1 (entry-point tracing)")
+    ap.add_argument("--no-ast", action="store_true",
+                    help="skip Pass 2 (AST lint)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip Pass 3 (VMEM budgets)")
+    ap.add_argument("--max-const-bytes", type=int, default=None,
+                    help="CONST-BAKE threshold (default 1 MiB)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="VMEM-BUDGET threshold in bytes (default 16 MiB)")
+    args = ap.parse_args(argv)
+
+    report = build_report(
+        args.root, run_jaxpr=not args.no_jaxpr, run_ast=not args.no_ast,
+        run_pallas=not args.no_pallas, max_const_bytes=args.max_const_bytes,
+        vmem_budget=args.vmem_budget)
+
+    if args.update_baseline:
+        if not args.baseline:
+            ap.error("--update-baseline requires --baseline")
+        old = load_baseline(args.baseline)
+        waivers, seen = [], set()
+        for f in report.findings:
+            prior = next((w for w in old if w.covers(f)), None)
+            w = prior or Waiver(rule=f.rule, match=f.site,
+                                reason="TODO: justify this waiver")
+            if (w.rule, w.match) not in seen:
+                seen.add((w.rule, w.match))
+                waivers.append(w)
+        dump_baseline(args.baseline, waivers)
+        print(f"wrote {len(waivers)} waiver(s) to {args.baseline}")
+        return 0
+
+    report.waivers = load_baseline(args.baseline)
+    if args.json:
+        report.dump_json(args.json)
+    print(report.format_text())
+    for w in report.unused_waivers():
+        print(f"note: unused waiver {w.rule}::{w.match}")
+    return 1 if report.new_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

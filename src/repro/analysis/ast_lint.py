@@ -1,0 +1,568 @@
+"""Pass 2 — AST convention lint: named, waivable repo-convention rules.
+
+Each rule encodes an invariant that DESIGN.md previously stated only in
+prose.  All rules are *heuristic static* checks: they trade completeness
+for zero-runtime-cost scanning of the whole tree, and every finding can be
+waived in the committed baseline with a justification (report.py).
+
+Rules
+-----
+``KEY-REUSE``
+    The same ``jax.random`` key consumed twice without a ``split`` /
+    ``fold_in`` between — the exact bug class PR 4 shipped in
+    ``AnalogRBFModel.from_circuit`` (one key feeding both the Gaussian and
+    the alpha mismatch sweeps silently correlates the two circuits).  A
+    "key" is a variable assigned from ``jax.random.PRNGKey/split/fold_in/
+    key/wrap_key_data`` (including tuple-unpacks of ``split``) or a
+    parameter named ``key``/``rng``/``*_key``.  *Consumption* is passing
+    the key to any call — a draw, a ``split``, or a helper that draws
+    internally (what made the PR 4 bug invisible to a jax-only scan).
+    Reads that don't consume (``key_data``, ``asarray`` & friends) are
+    exempt; consumptions in mutually-exclusive ``if``/``else`` branches
+    don't conflict; a single consumption inside a loop the key was defined
+    outside of counts as reuse.
+
+``INTERPRET-THREAD``
+    Any function reaching ``repro.kernels.ops`` entry points must thread
+    the ``interpret`` override: the call must pass ``interpret=...`` and,
+    when the value is the caller's own parameter, that parameter must
+    exist.  This is the api/compiled.py convention that lets CPU CI force
+    the Pallas interpreter end-to-end (DESIGN.md §7.5); an unthreaded call
+    silently pins the backend default.
+
+``PYTREE-REG``
+    A dataclass with ``jnp.ndarray`` fields must be registered with
+    ``jax.tree_util`` somewhere in the scanned tree.  Such classes cross
+    jit boundaries (as traced constants today, as arguments tomorrow);
+    an unregistered one traces as an opaque object and fails or silently
+    retraces.
+
+``BANNED-IN-HOT``
+    Inside a ``@jax.jit``-decorated function (or a function nested in
+    one): ``np.random.*`` (hidden host RNG state), ``time.time()`` /
+    ``perf_counter()`` (host clock in traced code — a constant at best),
+    and ``.item()`` (forces a device sync per call).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Optional
+
+from repro.analysis.report import Finding
+
+#: repro.kernels.ops public entry points (the interpret-dispatch layer).
+OPS_ENTRY_NAMES = ("rbf_matrix", "solve_lanes", "flash_attention",
+                   "ssd_scan")
+
+#: Callees that *read* a key without consuming it.  ``fold_in`` is here
+#: deliberately: folding distinct data into one base key is the canonical
+#: per-index derivation pattern (``fold_in(base, i)`` in a loop), not a
+#: reuse — only draws and ``split`` consume.
+KEY_NONCONSUMING = {"key_data", "_key_data", "asarray", "array", "len",
+                    "print", "repr", "str", "format", "append", "device_put",
+                    "block_until_ready", "shape", "isinstance", "hash",
+                    "fold_in"}
+
+#: jax.random constructors whose results are key variables.
+KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data",
+                 "clone"}
+
+BANNED_TIME = {"time", "perf_counter", "perf_counter_ns", "monotonic",
+               "sleep"}
+
+
+def _qualname(node: ast.expr) -> str:
+    """Dotted name of an expression, '' when not a plain attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_key_param(name: str) -> bool:
+    return name in ("key", "rng", "rng_key") or name.endswith("_key")
+
+
+# ---------------------------------------------------------------------------
+# KEY-REUSE
+# ---------------------------------------------------------------------------
+
+# A branch signature is a tuple of (id(if_node), side) ancestors; two
+# events conflict only if no shared `if` splits them onto different sides.
+
+
+def _exclusive(sig_a: tuple, sig_b: tuple) -> bool:
+    for (na, sa), (nb, sb) in zip(sig_a, sig_b):
+        if na != nb:
+            return False
+        if sa != sb:
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class _KeyEvent:
+    kind: str          # 'assign' | 'consume'
+    line: int
+    branch: tuple      # ((if_id, side), ...)
+    loops: tuple       # (loop_id, ...) ancestors
+
+
+class _KeyReuseScanner:
+    """Linear scan of one function body tracking key-variable lifetimes."""
+
+    def __init__(self, func: ast.FunctionDef, path: str,
+                 findings: list[Finding]):
+        self.func = func
+        self.path = path
+        self.findings = findings
+        self.events: dict[str, list[_KeyEvent]] = {}
+        self.branch: list[tuple] = []
+        self.loops: list[int] = []
+
+    def run(self) -> None:
+        args = self.func.args
+        params = [a.arg for a in (args.posonlyargs + args.args
+                                  + args.kwonlyargs)]
+        for p in params:
+            if _is_key_param(p):
+                self._record(p, "assign", self.func.lineno)
+        for stmt in self.func.body:
+            self._visit(stmt)
+        self._check()
+
+    # -- event recording ----------------------------------------------------
+
+    def _record(self, name: str, kind: str, line: int) -> None:
+        self.events.setdefault(name, []).append(
+            _KeyEvent(kind, line, tuple(self.branch), tuple(self.loops)))
+
+    def _target_names(self, target: ast.expr) -> list[str]:
+        if isinstance(target, ast.Name):
+            return [target.id]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            out = []
+            for el in target.elts:
+                out.extend(self._target_names(el))
+            return out
+        return []
+
+    def _is_key_producer(self, value: ast.expr) -> bool:
+        if isinstance(value, ast.Call):
+            qn = _qualname(value.func)
+            leaf = qn.rsplit(".", 1)[-1]
+            if leaf in KEY_PRODUCERS and ("random" in qn or qn == leaf):
+                return True
+        if isinstance(value, ast.Subscript):
+            return self._is_key_producer(value.value)
+        return False
+
+    # -- traversal ----------------------------------------------------------
+
+    def _visit(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes get their own scanner
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = node.value
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            if value is not None:
+                self._scan_expr(value)
+                producer = self._is_key_producer(value)
+                for t in targets:
+                    for name in self._target_names(t):
+                        if producer or _is_key_param(name):
+                            self._record(name, "assign", node.lineno)
+                        elif name in self.events:
+                            # overwritten with a non-key value: retire it
+                            self._record(name, "assign", node.lineno)
+            return
+        if isinstance(node, ast.If):
+            self._scan_expr(node.test)
+            self.branch.append((id(node), 0))
+            for s in node.body:
+                self._visit(s)
+            self.branch[-1] = (id(node), 1)
+            for s in node.orelse:
+                self._visit(s)
+            self.branch.pop()
+            return
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            self._scan_expr(node.iter)
+            self.loops.append(id(node))
+            for name in self._target_names(node.target):
+                if _is_key_param(name):
+                    self._record(name, "assign", node.lineno)
+            for s in node.body:
+                self._visit(s)
+            self.loops.pop()
+            for s in node.orelse:
+                self._visit(s)
+            return
+        if isinstance(node, ast.While):
+            self._scan_expr(node.test)
+            self.loops.append(id(node))
+            for s in node.body:
+                self._visit(s)
+            self.loops.pop()
+            for s in node.orelse:
+                self._visit(s)
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                self._scan_expr(item.context_expr)
+            for s in node.body:
+                self._visit(s)
+            return
+        if isinstance(node, ast.Try):
+            for s in node.body:
+                self._visit(s)
+            for h in node.handlers:
+                for s in h.body:
+                    self._visit(s)
+            for s in node.orelse + node.finalbody:
+                self._visit(s)
+            return
+        # leaf statements: scan expressions for consumptions
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child)
+
+    def _scan_expr(self, node: ast.expr) -> None:
+        for call in [n for n in ast.walk(node) if isinstance(n, ast.Call)]:
+            qn = _qualname(call.func)
+            leaf = qn.rsplit(".", 1)[-1]
+            if leaf in KEY_NONCONSUMING:
+                continue
+            consumed = []
+            for arg in call.args:
+                if isinstance(arg, ast.Name):
+                    consumed.append(arg.id)
+            for kw in call.keywords:
+                if kw.arg == "key" and isinstance(kw.value, ast.Name):
+                    consumed.append(kw.value.id)
+            for name in consumed:
+                if name in self.events:
+                    self._record(name, "consume", call.lineno)
+
+    # -- verdicts -----------------------------------------------------------
+
+    def _check(self) -> None:
+        for name, events in self.events.items():
+            last_assign: Optional[_KeyEvent] = None
+            consumed: list[_KeyEvent] = []
+            for i, ev in enumerate(events):
+                if ev.kind == "assign":
+                    last_assign = ev
+                    consumed = []
+                    continue
+                # A consumption inside a loop the key was defined outside
+                # of re-consumes every iteration — UNLESS the key is also
+                # reassigned inside that loop (the ``key, sub =
+                # split(key)`` rotate idiom, which is correct).
+                new_loops = [lp for lp in ev.loops
+                             if last_assign is None
+                             or lp not in last_assign.loops]
+                rotated = any(
+                    later.kind == "assign"
+                    and any(lp in later.loops for lp in new_loops)
+                    for later in events[i + 1:])
+                loop_reuse = bool(new_loops) and not rotated
+                conflict = loop_reuse or any(
+                    not _exclusive(prev.branch, ev.branch)
+                    for prev in consumed)
+                if conflict:
+                    where = ("inside a loop" if loop_reuse
+                             else f"after line {consumed[-1].line}")
+                    self.findings.append(Finding(
+                        rule="KEY-REUSE", path=self.path,
+                        symbol=self.func.name, line=ev.line,
+                        message=(f"key {name!r} consumed again at line "
+                                 f"{ev.line} {where} without an intervening "
+                                 f"split/fold_in — draws are correlated")))
+                    consumed = []  # one finding per reuse chain
+                else:
+                    consumed.append(ev)
+
+
+# ---------------------------------------------------------------------------
+# INTERPRET-THREAD
+# ---------------------------------------------------------------------------
+
+
+def _ops_bindings(tree: ast.Module) -> tuple[set, set]:
+    """How this module reaches ``repro.kernels.ops``: (aliases, bare names).
+
+    Import-aware so a local jnp oracle that happens to be named
+    ``rbf_matrix`` (e.g. ``kernels/ref.py``) is not mistaken for the ops
+    entry point.
+    """
+    aliases: set[str] = set()
+    bare: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro.kernels":
+                for a in node.names:
+                    if a.name == "ops":
+                        aliases.add(a.asname or "ops")
+            elif mod == "repro.kernels.ops":
+                for a in node.names:
+                    if a.name in OPS_ENTRY_NAMES:
+                        bare.add(a.asname or a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.kernels.ops":
+                    aliases.add(a.asname or "repro")
+    return aliases, bare
+
+
+def _calls_ops_entry(call: ast.Call, aliases: set, bare: set,
+                     ) -> Optional[str]:
+    """Entry name when ``call`` reaches a kernels.ops entry point."""
+    qn = _qualname(call.func)
+    if not qn:
+        return None
+    leaf = qn.rsplit(".", 1)[-1]
+    if leaf not in OPS_ENTRY_NAMES:
+        return None
+    if "." in qn:
+        head = qn.split(".", 1)[0]
+        if head in aliases or ".ops." in ("." + qn + "."):
+            return leaf
+        return None
+    return leaf if qn in bare else None
+
+
+def _own_nodes(func: ast.FunctionDef):
+    """Walk ``func`` without descending into nested def/class scopes.
+
+    Lambdas stay included — a call inside a lambda is attributed to the
+    enclosing named function (e.g. a benchmark's timed closure)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _check_interpret_thread(tree: ast.Module, path: str,
+                            findings: list[Finding]) -> None:
+    aliases, bare = _ops_bindings(tree)
+    if not aliases and not bare:
+        return
+    for func in [n for n in ast.walk(tree)
+                 if isinstance(n, ast.FunctionDef)]:
+        args = func.args
+        params = {a.arg for a in (args.posonlyargs + args.args
+                                  + args.kwonlyargs)}
+        has_kwargs = args.kwarg is not None
+        for call in [n for n in _own_nodes(func)
+                     if isinstance(n, ast.Call)]:
+            entry = _calls_ops_entry(call, aliases, bare)
+            if entry is None:
+                continue
+            kw_names = {kw.arg for kw in call.keywords}
+            forwards = ("interpret" in kw_names
+                        or (None in kw_names and has_kwargs))
+            if not forwards:
+                findings.append(Finding(
+                    rule="INTERPRET-THREAD", path=path, symbol=func.name,
+                    line=call.lineno,
+                    message=(f"call to ops.{entry} does not pass "
+                             f"interpret= — the CPU-CI override cannot "
+                             f"reach this kernel (api/compiled.py "
+                             f"convention)")))
+                continue
+            # when forwarding a plain name, require it to be threadable
+            for kw in call.keywords:
+                if kw.arg != "interpret":
+                    continue
+                if (isinstance(kw.value, ast.Name)
+                        and kw.value.id == "interpret"
+                        and "interpret" not in params and not has_kwargs):
+                    findings.append(Finding(
+                        rule="INTERPRET-THREAD", path=path,
+                        symbol=func.name, line=call.lineno,
+                        message=(f"call to ops.{entry} forwards "
+                                 f"'interpret' but {func.name}() has no "
+                                 f"such parameter to thread it from")))
+
+
+# ---------------------------------------------------------------------------
+# PYTREE-REG
+# ---------------------------------------------------------------------------
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _qualname(target).rsplit(".", 1)[-1] == "dataclass":
+            return True
+    return False
+
+
+def _jnp_array_fields(cls: ast.ClassDef) -> list[str]:
+    out = []
+    for stmt in cls.body:
+        if not isinstance(stmt, ast.AnnAssign):
+            continue
+        ann = ast.unparse(stmt.annotation)
+        if "jnp.ndarray" in ann or "jax.Array" in ann:
+            if isinstance(stmt.target, ast.Name):
+                out.append(stmt.target.id)
+    return out
+
+
+def _collect_registered_names(trees: dict[str, ast.Module]) -> set[str]:
+    """Class names registered via jax.tree_util anywhere in the tree."""
+    registered: set[str] = set()
+    for tree in trees.values():
+        for call in [n for n in ast.walk(tree) if isinstance(n, ast.Call)]:
+            leaf = _qualname(call.func).rsplit(".", 1)[-1]
+            if leaf not in ("register_pytree_node", "register_dataclass",
+                            "register_static", "register_pytree_node_class",
+                            "register_pytree_with_keys"):
+                continue
+            if call.args:
+                name = _qualname(call.args[0]).rsplit(".", 1)[-1]
+                if name:
+                    registered.add(name)
+        # decorator form: @jax.tree_util.register_pytree_node_class
+        for cls in [n for n in ast.walk(tree)
+                    if isinstance(n, ast.ClassDef)]:
+            for dec in cls.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if "register_pytree" in _qualname(target):
+                    registered.add(cls.name)
+    return registered
+
+
+def _check_pytree_reg(trees: dict[str, ast.Module],
+                      findings: list[Finding]) -> None:
+    registered = _collect_registered_names(trees)
+    for path, tree in trees.items():
+        for cls in [n for n in ast.walk(tree)
+                    if isinstance(n, ast.ClassDef)]:
+            if not _is_dataclass_decorated(cls):
+                continue
+            fields = _jnp_array_fields(cls)
+            if fields and cls.name not in registered:
+                findings.append(Finding(
+                    rule="PYTREE-REG", path=path, symbol=cls.name,
+                    line=cls.lineno,
+                    message=(f"dataclass {cls.name} holds jnp.ndarray "
+                             f"fields ({', '.join(fields[:4])}) but is not "
+                             f"registered with jax.tree_util — it cannot "
+                             f"cross a jit boundary as a pytree")))
+
+
+# ---------------------------------------------------------------------------
+# BANNED-IN-HOT
+# ---------------------------------------------------------------------------
+
+
+def _is_jitted(func: ast.FunctionDef) -> bool:
+    for dec in func.decorator_list:
+        qn = _qualname(dec.func if isinstance(dec, ast.Call) else dec)
+        if qn.endswith("jit"):
+            return True
+        if isinstance(dec, ast.Call) and qn.rsplit(".", 1)[-1] == "partial":
+            for arg in dec.args:
+                if _qualname(arg).endswith("jit"):
+                    return True
+    return False
+
+
+def _check_banned_in_hot(tree: ast.Module, path: str,
+                         findings: list[Finding]) -> None:
+    jitted: list[ast.FunctionDef] = []
+    for func in [n for n in ast.walk(tree)
+                 if isinstance(n, ast.FunctionDef)]:
+        if _is_jitted(func):
+            jitted.append(func)
+
+    def flag(func, node, what, why):
+        findings.append(Finding(
+            rule="BANNED-IN-HOT", path=path, symbol=func.name,
+            line=node.lineno,
+            message=f"{what} inside jitted {func.name}() — {why}"))
+
+    for func in jitted:
+        for node in ast.walk(func):
+            if isinstance(node, ast.Attribute):
+                qn = _qualname(node)
+                if qn.startswith(("np.random.", "numpy.random.")):
+                    flag(func, node, qn,
+                         "hidden host RNG state traced as a constant")
+            if isinstance(node, ast.Call):
+                qn = _qualname(node.func)
+                mod, _, leaf = qn.rpartition(".")
+                if mod == "time" and leaf in BANNED_TIME:
+                    flag(func, node, f"{qn}()",
+                         "host clock in traced code is a trace-time "
+                         "constant")
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    flag(func, node, ".item()",
+                         "forces a device sync per element")
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+DEFAULT_SCAN_DIRS = ("src", "benchmarks", "tests")
+
+
+def _iter_py_files(root: str, dirs=DEFAULT_SCAN_DIRS) -> list[str]:
+    out = []
+    for d in dirs:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [x for x in dirnames
+                           if x not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def lint_files(paths: list[str], root: str) -> tuple[list[Finding], dict]:
+    """Run all AST rules over ``paths``; returns (findings, info)."""
+    findings: list[Finding] = []
+    trees: dict[str, ast.Module] = {}
+    skipped = []
+    for p in paths:
+        rel = os.path.relpath(p, root)
+        try:
+            with open(p, encoding="utf-8") as fh:
+                trees[rel] = ast.parse(fh.read(), filename=rel)
+        except SyntaxError as e:
+            skipped.append({"path": rel, "error": str(e)})
+    for rel, tree in trees.items():
+        for func in [n for n in ast.walk(tree)
+                     if isinstance(n, ast.FunctionDef)]:
+            _KeyReuseScanner(func, rel, findings).run()
+        _check_interpret_thread(tree, rel, findings)
+        _check_banned_in_hot(tree, rel, findings)
+    _check_pytree_reg(trees, findings)
+    info = {"files_scanned": len(trees), "skipped": skipped}
+    return findings, info
+
+
+def lint_tree(root: str, dirs=DEFAULT_SCAN_DIRS) -> tuple[list[Finding], dict]:
+    """Lint every .py file under ``root``'s scan dirs."""
+    return lint_files(_iter_py_files(root, dirs), root)

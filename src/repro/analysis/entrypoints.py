@@ -1,0 +1,155 @@
+"""Registry of public jitted entry points for Pass 1 (jaxpr_checks).
+
+Every entry builds the *real* object path — hand-constructed ``SVMModel``
+banks, the calibrated analog behavioral model, the PR 3/4 compiled
+machines — at tiny deterministic shapes, then exposes the exact traced
+callable the production code jits.  No training runs and no kernel
+executes: the registry exists so ``jax.make_jaxpr`` can inspect the same
+programs users compile.
+
+Registering a new jitted entry point (DESIGN.md §8): append an
+:class:`EntryPoint` in :func:`build_registry` whose ``fn`` is the
+*unjitted* callable (close over static arguments; arrays go in ``args``)
+and, if it declares ``donate_argnames``, set ``check_donation=True`` with
+the jit wrapper in ``jit_fn`` — donation is verified on the compiled
+artifact, so keep ``donation_args`` small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.jaxpr_checks import MAX_CONST_BYTES
+
+
+@dataclasses.dataclass
+class EntryPoint:
+    """One traceable jitted program plus everything Pass 1 needs."""
+
+    symbol: str
+    path: str
+    fn: Callable                 # unjitted traceable (statics closed over)
+    args: tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    static_argnums: tuple = ()
+    max_const_bytes: int = MAX_CONST_BYTES
+    check_donation: bool = False
+    jit_fn: Optional[Callable] = None
+    donation_args: tuple = ()
+    donation_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def traceable(self) -> Callable:
+        return self.fn
+
+
+def _tiny_models():
+    """Deterministic hand-built per-pair models — no training involved."""
+    from repro.core.svm import SVMModel
+
+    rng = np.random.default_rng(0)
+    d, m = 3, 6
+    sx = rng.normal(size=(m, d)).astype(np.float32)
+    sy = np.array([1, -1, 1, -1, 1, -1], np.float32)
+    alpha = (np.abs(rng.normal(size=m)) + 0.1).astype(np.float32)
+    w = ((alpha * sy) @ sx).astype(np.float32)
+    lin = SVMModel(kind="linear", support_x=sx, support_y=sy, alpha=alpha,
+                   bias=0.1, gamma=1.0, c=1.0, w=w)
+    rbf = SVMModel(kind="rbf", support_x=sx, support_y=sy, alpha=alpha,
+                   bias=-0.05, gamma=0.7, c=1.0)
+    return lin, rbf
+
+
+def build_registry() -> list[EntryPoint]:
+    from repro.api import compiled as api
+    from repro.core import trainer
+    from repro.core.analog import AnalogBinaryClassifier
+    from repro.kernels import solver
+
+    entries: list[EntryPoint] = []
+    lin, rbf = _tiny_models()
+    d = lin.support_x.shape[1]
+    hw_clf = AnalogBinaryClassifier.deploy(rbf, trainer.default_hw(0))
+    x_in = jnp.zeros((8, d), jnp.float32)
+
+    machine = api.compile_machine([lin, rbf, hw_clf], n_classes=3)
+    entries.append(EntryPoint(
+        symbol="CompiledMachine._forward", path="src/repro/api/compiled.py",
+        fn=machine._forward, args=(x_in,)))
+
+    cands = [(lin, rbf), (lin, rbf), (lin, hw_clf)]
+    cand_machine = api.compile_candidates(cands, n_classes=3)
+    entries.append(EntryPoint(
+        symbol="CandidateMachine._forward", path="src/repro/api/compiled.py",
+        fn=cand_machine._forward, args=(x_in,)))
+
+    mc_machine = api.compile_variants(
+        cands, n_classes=3, key=jax.random.PRNGKey(0), n_variants=4)
+    entries.append(EntryPoint(
+        symbol="MonteCarloMachine._forward",
+        path="src/repro/api/compiled.py",
+        fn=mc_machine._forward, args=(x_in,)))
+
+    # -- trainer family program (jit + donate_argnames=('y',)) --------------
+    p, n, dd, g, c, f = 2, 32, 3, 2, 2, 2
+    fam_args = (
+        jnp.zeros((p, n, dd), jnp.float32),          # x
+        jnp.ones((p, n), jnp.float32),               # y (donated)
+        jnp.ones((p, f, n), jnp.float32),            # fold_masks
+        jnp.ones((p, n), jnp.float32),               # valid
+        jnp.asarray([0.5, 1.0], jnp.float32),        # gammas
+        jnp.asarray([1.0, 10.0], jnp.float32),       # cs
+    )
+
+    def family_traceable(x, y, fold_masks, valid, gammas, cs):
+        return trainer._family_program.__wrapped__(
+            x, y, fold_masks, valid, gammas, cs, kind="rbf", cv_epochs=3,
+            n_epochs=4, use_pallas=True, interpret=True)
+
+    entries.append(EntryPoint(
+        symbol="trainer._family_program", path="src/repro/core/trainer.py",
+        fn=family_traceable, args=fam_args,
+        check_donation=True, jit_fn=trainer._family_program,
+        donation_args=fam_args,
+        # donation is a property of the jit signature; verify on the XLA
+        # vmap path where tiny-shape compiles are cheap
+        donation_kwargs=dict(kind="rbf", cv_epochs=3, n_epochs=4,
+                             use_pallas=False)))
+
+    refit_args = (
+        jnp.zeros((p, n, dd), jnp.float32),          # x
+        jnp.ones((p, n), jnp.float32),               # y (donated)
+        jnp.ones((p, n), jnp.float32),               # valid
+        jnp.asarray([0.5, 1.0], jnp.float32),        # gamma_sel
+        jnp.asarray([1.0, 1.0], jnp.float32),        # c_sel
+    )
+
+    def refit_traceable(x, y, valid, gamma_sel, c_sel):
+        return trainer._refit_all_pairs.__wrapped__(
+            x, y, valid, gamma_sel, c_sel, kind="rbf", n_epochs=4,
+            use_pallas=True, interpret=True)
+
+    entries.append(EntryPoint(
+        symbol="trainer._refit_all_pairs", path="src/repro/core/trainer.py",
+        fn=refit_traceable, args=refit_args,
+        check_donation=True, jit_fn=trainer._refit_all_pairs,
+        donation_args=refit_args,
+        donation_kwargs=dict(kind="rbf", n_epochs=4, use_pallas=False)))
+
+    # -- fused solver lanes (ops.solve_lanes target) ------------------------
+    def solver_traceable(x, y, c_box, gamma):
+        return solver.dual_ascent_lanes_pallas.__wrapped__(
+            x, y, c_box, gamma, kind="rbf", n_epochs=2, interpret=True)
+
+    entries.append(EntryPoint(
+        symbol="ops.solve_lanes", path="src/repro/kernels/solver.py",
+        fn=solver_traceable,
+        args=(jnp.zeros((2, 32, 3), jnp.float32),
+              jnp.ones((2, 32), jnp.float32),
+              jnp.ones((2, 4, 32), jnp.float32),
+              jnp.ones((2, 2), jnp.float32))))
+
+    return entries

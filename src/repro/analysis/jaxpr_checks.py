@@ -1,0 +1,197 @@
+"""Pass 1 — jaxpr contract checks over the public jitted entry points.
+
+Each registered entry point (``analysis.entrypoints``) is traced under
+abstract shapes with ``jax.make_jaxpr`` and the closed jaxpr — including
+every sub-jaxpr nested in equation params (pjit bodies, scan/while/cond
+branches, custom_jvp calls) — is walked for contract violations:
+
+``F64-IN-JIT``
+    A float64 abstract value anywhere in jitted compute.  The repo runs
+    x64-disabled and every kernel/bank is f32 by design (DESIGN.md §2);
+    an f64 aval means a host ``np.float64`` scalar (e.g. from
+    ``np.logspace`` grids in core/svm.py) was traced into the graph and
+    will silently double every downstream buffer the day x64 is enabled.
+
+``HOST-CALLBACK``
+    A host-callback / infeed / debug primitive in a hot path.  These
+    serialize the device stream per call; none belong in serving or
+    training programs.
+
+``CONST-BAKE``
+    A constant larger than ``max_const_bytes`` baked into the jaxpr.
+    Closed-over arrays are embedded per-compilation: a captured weight
+    bank duplicates into every specialization (the weight-capture blowup
+    this rule exists for).  Small captured tables are normal — the limit,
+    not the mechanism, is the contract.
+
+``DONATION-DROPPED``
+    An entry point declares ``donate_argnames`` but the compiled module
+    has no ``input_output_alias`` — XLA accepted the donation and then
+    dropped it (dtype/layout mismatch, or the donated buffer is still
+    live), so the memory PR 5 promised back is not actually returned.
+    Verified on the *compiled* artifact, not the trace.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.report import Finding
+
+#: Constants above this many bytes are flagged as baked-in (CONST-BAKE).
+MAX_CONST_BYTES = 1 << 20   # 1 MiB
+
+#: Primitive names that reach back to the host / serialize the stream.
+HOST_PRIMITIVES = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+    "debug_print", "python_callback",
+}
+
+
+def _iter_jaxprs(jaxpr):
+    """Yield ``jaxpr`` and every sub-jaxpr nested in equation params."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            items = val if isinstance(val, (list, tuple)) else [val]
+            for item in items:
+                inner = getattr(item, "jaxpr", None)   # ClosedJaxpr
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from _iter_jaxprs(inner)
+                elif hasattr(item, "eqns"):            # bare Jaxpr
+                    yield from _iter_jaxprs(item)
+
+
+def _iter_consts(closed) -> list:
+    """Consts of the top-level closed jaxpr plus nested closed jaxprs."""
+    consts = list(getattr(closed, "consts", []))
+    for jaxpr in _iter_jaxprs(closed.jaxpr):
+        for eqn in jaxpr.eqns:
+            for val in eqn.params.values():
+                items = val if isinstance(val, (list, tuple)) else [val]
+                for item in items:
+                    if hasattr(item, "jaxpr") and hasattr(item, "consts"):
+                        consts.extend(item.consts)
+    return consts
+
+
+def check_jaxpr(closed, *, path: str, symbol: str,
+                max_const_bytes: int = MAX_CONST_BYTES,
+                ) -> tuple[list[Finding], dict]:
+    """F64-IN-JIT / HOST-CALLBACK / CONST-BAKE over one closed jaxpr."""
+    findings: list[Finding] = []
+    n_eqns = 0
+    f64_seen: set[str] = set()
+    host_seen: set[str] = set()
+
+    for jaxpr in _iter_jaxprs(closed.jaxpr):
+        for var in list(jaxpr.invars) + list(jaxpr.constvars):
+            aval = getattr(var, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and np.dtype(dtype) == np.float64:
+                f64_seen.add(f"argument/const {aval.str_short()}")
+        for eqn in jaxpr.eqns:
+            n_eqns += 1
+            prim = eqn.primitive.name
+            if prim in HOST_PRIMITIVES:
+                host_seen.add(prim)
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                dtype = getattr(aval, "dtype", None)
+                if dtype is not None and np.dtype(dtype) == np.float64:
+                    f64_seen.add(f"{prim} -> {aval.str_short()}")
+
+    for detail in sorted(f64_seen):
+        findings.append(Finding(
+            rule="F64-IN-JIT", path=path, symbol=symbol,
+            message=(f"float64 value in jitted compute ({detail}) — the "
+                     f"repo's kernels are f32-only; cast at the host "
+                     f"boundary")))
+    for prim in sorted(host_seen):
+        findings.append(Finding(
+            rule="HOST-CALLBACK", path=path, symbol=symbol,
+            message=(f"host primitive '{prim}' inside a jitted entry "
+                     f"point — serializes the device stream per call")))
+
+    const_bytes = 0
+    for const in _iter_consts(closed):
+        nbytes = getattr(const, "nbytes", 0)
+        const_bytes += int(nbytes)
+        if nbytes > max_const_bytes:
+            shape = getattr(const, "shape", ())
+            dtype = getattr(const, "dtype", "?")
+            findings.append(Finding(
+                rule="CONST-BAKE", path=path, symbol=symbol,
+                message=(f"constant {shape} {dtype} ({int(nbytes):,} B > "
+                         f"{max_const_bytes:,} B) baked into the jaxpr — "
+                         f"captured arrays duplicate per specialization; "
+                         f"pass it as an argument")))
+
+    info = {"eqns": n_eqns, "const_bytes": const_bytes}
+    return findings, info
+
+
+def check_donation(fn, args: tuple, kwargs: dict, *, path: str, symbol: str,
+                   ) -> tuple[list[Finding], dict]:
+    """DONATION-DROPPED: declared donation must survive to compiled HLO.
+
+    ``fn`` must be the jit-wrapped callable.  Donation is declared in
+    ``lowered.args_info`` (per-arg ``donated`` flags) and honored iff the
+    compiled module carries an ``input_output_alias`` directive — the
+    empirical signature of XLA actually reusing the buffer.
+    """
+    lowered = fn.lower(*args, **kwargs)
+    flat_info = jax.tree_util.tree_leaves(lowered.args_info)
+    donated = [i for i, a in enumerate(flat_info)
+               if getattr(a, "donated", False)]
+    findings: list[Finding] = []
+    honored: Optional[bool] = None
+    if donated:
+        text = lowered.compile().as_text()
+        honored = "input_output_alias" in text
+        if not honored:
+            findings.append(Finding(
+                rule="DONATION-DROPPED", path=path, symbol=symbol,
+                message=(f"{len(donated)} argument(s) declared donated "
+                         f"but the compiled module has no "
+                         f"input_output_alias — XLA dropped the "
+                         f"donation; the buffer is copied, not reused")))
+    info = {"declared_donated": len(donated), "honored": honored}
+    return findings, info
+
+
+def run_entrypoint(entry) -> tuple[list[Finding], dict]:
+    """Trace one registry entry and run every Pass 1 check on it.
+
+    ``entry`` is an ``analysis.entrypoints.EntryPoint``; tracing failures
+    are themselves findings (an entry point that stops tracing abstractly
+    has broken its contract).
+    """
+    findings: list[Finding] = []
+    info: dict[str, Any] = {"symbol": entry.symbol, "path": entry.path}
+    try:
+        closed = jax.make_jaxpr(
+            entry.traceable(), static_argnums=entry.static_argnums,
+        )(*entry.args, **entry.kwargs)
+    except Exception as e:   # noqa: BLE001 — any trace failure is a finding
+        findings.append(Finding(
+            rule="F64-IN-JIT", path=entry.path, symbol=entry.symbol,
+            message=f"entry point failed to trace abstractly: {e!r}"))
+        info["trace_error"] = repr(e)
+        return findings, info
+
+    fnds, jinfo = check_jaxpr(closed, path=entry.path, symbol=entry.symbol,
+                              max_const_bytes=entry.max_const_bytes)
+    findings.extend(fnds)
+    info.update(jinfo)
+
+    if entry.check_donation:
+        fnds, dinfo = check_donation(
+            entry.jit_fn, entry.donation_args, entry.donation_kwargs,
+            path=entry.path, symbol=entry.symbol)
+        findings.extend(fnds)
+        info["donation"] = dinfo
+    return findings, info

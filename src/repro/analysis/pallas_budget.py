@@ -1,0 +1,322 @@
+"""Pass 3 — static Pallas VMEM budget and grid/block divisibility.
+
+PR 5's memory contract — the fused solver keeps each lane's working set
+VMEM-resident and never materializes the (lanes, n, n) Gram tensor — was
+demonstrated once with ``memory_analysis()`` in the training benchmark.
+This pass turns it into a standing gate: every kernel entry point in
+``src/repro/kernels`` is traced with a *recording* ``pallas_call`` (the
+kernel body never runs), and each program's VMEM footprint is computed
+statically from its BlockSpecs:
+
+    footprint = sum over blocked operands of 2 x block_bytes   (the
+                Pallas pipeline double-buffers every blocked in/out)
+              + sum over VMEM scratch of its full size          (scratch
+                persists across grid steps; no double buffer)
+
+Operands placed with ``memory_space=pl.ANY`` stay out of VMEM and are
+tallied separately.  ~16 MiB/core is the budget (TPU VMEM); the exact
+number matters less than the trajectory — footprints land in the JSON
+report so a future block-size bump that silently 4x's a kernel's working
+set shows up as a diff, and ``VMEM-BUDGET`` fires before Mosaic would.
+
+Rules
+-----
+``VMEM-BUDGET``      program's static VMEM footprint exceeds the budget.
+``GRID-DIVISIBLE``   an operand's array shape is not divisible by its
+                     block shape (Pallas pads the tail block implicitly;
+                     every repo kernel is required to pad explicitly
+                     upstream so masking stays visible in the code).
+``FUSED-VS-ORACLE``  the fused solver's static footprint is not strictly
+                     below the materialized-Gram oracle's lane bytes —
+                     the PR 5 contract that makes the fused formulation
+                     worth having.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas
+
+from repro.analysis.report import Finding
+
+#: Per-core VMEM on the TPU generations the kernels target (v4/v5: 16 MiB).
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class PallasRecord:
+    """One intercepted ``pl.pallas_call`` launch (never executed)."""
+
+    name: str
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    out_shapes: list          # ShapeDtypeStruct per output
+    scratch_shapes: list
+    arg_shapes: list          # (shape, dtype) per positional operand
+
+
+def _kernel_name(fn) -> str:
+    while hasattr(fn, "func"):    # unwrap functools.partial chains
+        fn = fn.func
+    return getattr(fn, "__name__", repr(fn))
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+@contextlib.contextmanager
+def record_pallas_calls():
+    """Patch ``pallas.pallas_call`` to record launches and return zeros.
+
+    Kernel modules bind ``from jax.experimental import pallas as pl`` and
+    resolve ``pl.pallas_call`` at call time, so patching the module
+    attribute intercepts every launch.  The fake returns zeros matching
+    ``out_shape`` — downstream slicing/reshaping in the entry point still
+    typechecks, but no kernel body ever executes.
+    """
+    records: list[PallasRecord] = []
+    real = pallas.pallas_call
+
+    def fake(kernel, *, grid=None, in_specs=None, out_specs=None,
+             out_shape=None, scratch_shapes=(), interpret=False, **kw):
+        def launch(*args):
+            records.append(PallasRecord(
+                name=_kernel_name(kernel),
+                grid=tuple(grid) if grid is not None else (),
+                in_specs=_as_list(in_specs),
+                out_specs=_as_list(out_specs),
+                out_shapes=_as_list(out_shape),
+                scratch_shapes=_as_list(scratch_shapes),
+                arg_shapes=[(tuple(a.shape), jnp.asarray(a).dtype)
+                            for a in args],
+            ))
+            outs = [jnp.zeros(s.shape, s.dtype) for s in _as_list(out_shape)]
+            if isinstance(out_shape, (list, tuple)):
+                return type(out_shape)(outs)
+            return outs[0]
+        return launch
+
+    pallas.pallas_call = fake
+    try:
+        yield records
+    finally:
+        pallas.pallas_call = real
+
+
+# ---------------------------------------------------------------------------
+# Footprint model
+# ---------------------------------------------------------------------------
+
+
+def _is_any_space(spec) -> bool:
+    if spec is None:
+        return True
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return True   # whole-array operand, no VMEM tiling declared
+    return False
+
+
+def _block_bytes(spec, shape: tuple, dtype) -> int:
+    block = spec.block_shape
+    itemsize = jnp.dtype(dtype).itemsize
+    n = 1
+    for dim, b in zip(shape, block):
+        n *= dim if b is None else int(b)
+    return n * itemsize
+
+
+def analyze_record(rec: PallasRecord, *, path: str, symbol: str,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   ) -> tuple[dict, list[Finding]]:
+    """Static footprint + divisibility findings for one recorded launch."""
+    findings: list[Finding] = []
+    vmem = 0
+    any_bytes = 0
+    operands = []
+
+    out_pairs = [(tuple(s.shape), s.dtype) for s in rec.out_shapes]
+    specs = (list(zip(rec.in_specs, rec.arg_shapes, ["in"] * len(rec.in_specs)))
+             + list(zip(rec.out_specs, out_pairs,
+                        ["out"] * len(rec.out_specs))))
+    for idx, (spec, (shape, dtype), role) in enumerate(specs):
+        if _is_any_space(spec):
+            nbytes = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+            any_bytes += nbytes
+            operands.append({"role": role, "index": idx, "shape": shape,
+                             "space": "ANY", "bytes": nbytes})
+            continue
+        bb = _block_bytes(spec, shape, dtype)
+        vmem += 2 * bb   # pipeline double buffer
+        operands.append({"role": role, "index": idx, "shape": shape,
+                         "block": tuple(spec.block_shape), "space": "VMEM",
+                         "block_bytes": bb})
+        for d, (dim, blk) in enumerate(zip(shape, spec.block_shape)):
+            if blk is None:
+                continue
+            if dim % int(blk) != 0:
+                findings.append(Finding(
+                    rule="GRID-DIVISIBLE", path=path, symbol=symbol,
+                    message=(f"{rec.name}: {role}-operand {idx} dim {d} "
+                             f"({dim}) not divisible by block {blk} — pad "
+                             f"explicitly upstream; implicit tail blocks "
+                             f"hide masking")))
+
+    scratch_bytes = 0
+    for s in rec.scratch_shapes:
+        shape = tuple(getattr(s, "shape", ()))
+        dtype = getattr(s, "dtype", jnp.float32)
+        scratch_bytes += int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    vmem += scratch_bytes
+
+    if vmem > vmem_budget:
+        findings.append(Finding(
+            rule="VMEM-BUDGET", path=path, symbol=symbol,
+            message=(f"{rec.name}: static VMEM footprint {vmem:,} B "
+                     f"exceeds budget {vmem_budget:,} B "
+                     f"(blocks double-buffered + scratch)")))
+
+    info = {
+        "kernel": rec.name,
+        "grid": rec.grid,
+        "num_programs": int(math.prod(rec.grid)) if rec.grid else 1,
+        "vmem_bytes": vmem,
+        "scratch_bytes": scratch_bytes,
+        "any_bytes": any_bytes,
+        "operands": operands,
+    }
+    return info, findings
+
+
+# ---------------------------------------------------------------------------
+# Kernel program registry
+# ---------------------------------------------------------------------------
+
+#: PR 5 oracle-comparison configuration (benchmarks/svm_train.py):
+#: 2 OvO pairs x 3 gammas x 6 C/fold lanes over n_max=256, d=4.
+SOLVER_CONFIG = dict(p=2, g=3, l=6, n=256, d=4)
+
+
+def _trace_kernel_programs() -> list[tuple[str, str, PallasRecord]]:
+    """Launch every kernels/ entry point under the recorder.
+
+    Representative shapes are paper-scale; entry points pad internally, so
+    a divisibility finding here means a kernel stopped padding upstream.
+    Returns (path, symbol, record) triples.
+    """
+    from repro.kernels import flash_attention as fa_mod
+    from repro.kernels import rbf as rbf_mod
+    from repro.kernels import solver as solver_mod
+    from repro.kernels import ssd as ssd_mod
+
+    cfg = SOLVER_CONFIG
+    traces = []
+
+    def run(path, symbol, fn, *args, **kw):
+        with record_pallas_calls() as recs:
+            fn(*args, **kw)   # fake pallas_call: body never executes
+        for rec in recs:
+            traces.append((path, symbol, rec))
+
+    f32 = jnp.float32
+    run("src/repro/kernels/rbf.py", "kernel_matrix_pallas[rbf]",
+        rbf_mod.kernel_matrix_pallas.__wrapped__,
+        jnp.zeros((200, 8), f32), jnp.zeros((150, 8), f32), 0.5,
+        kind="rbf", interpret=True)
+    run("src/repro/kernels/rbf.py", "kernel_matrix_pallas[sech2]",
+        rbf_mod.kernel_matrix_pallas.__wrapped__,
+        jnp.zeros((200, 4), f32), jnp.zeros((150, 4), f32), 0.5,
+        kind="sech2", interpret=True)
+    run("src/repro/kernels/solver.py", "dual_ascent_lanes_pallas",
+        solver_mod.dual_ascent_lanes_pallas.__wrapped__,
+        jnp.zeros((cfg["p"], cfg["n"], cfg["d"]), f32),
+        jnp.ones((cfg["p"], cfg["n"]), f32),
+        jnp.ones((cfg["p"], cfg["l"], cfg["n"]), f32),
+        jnp.ones((cfg["p"], cfg["g"]), f32),
+        kind="rbf", n_epochs=2, interpret=True)
+    run("src/repro/kernels/flash_attention.py", "flash_attention",
+        fa_mod.flash_attention.__wrapped__,
+        jnp.zeros((1, 4, 200, 64), f32), jnp.zeros((1, 2, 200, 64), f32),
+        jnp.zeros((1, 2, 200, 64), f32), causal=True, window=None,
+        q_offset=0, interpret=True)
+    run("src/repro/kernels/ssd.py", "ssd_scan_pallas",
+        ssd_mod.ssd_scan_pallas.__wrapped__,
+        jnp.zeros((2, 256, 64), f32), jnp.zeros((2, 256), f32),
+        jnp.zeros((2, 256, 32), f32), jnp.zeros((2, 256, 32), f32),
+        chunk=128, interpret=True)
+    return traces
+
+
+def fused_vs_oracle(solver_info: dict,
+                    oracle_bytes: Optional[int] = None,
+                    ) -> tuple[dict, list[Finding]]:
+    """PR 5 contract: fused solver working set << materialized Gram.
+
+    The XLA oracle (``dual_coordinate_ascent_blocked`` vmapped over
+    lanes) materializes a (lanes, n_pad, n_pad) f32 Gram tensor; the
+    fused kernel recomputes row slabs and its static footprint must stay
+    *strictly* below those lane bytes or the fusion lost its reason to
+    exist.  ``oracle_bytes`` is overridable so tests can seed a
+    regression (acceptance criterion: the gate fails when seeded).
+    """
+    cfg = SOLVER_CONFIG
+    lanes = cfg["p"] * cfg["g"] * cfg["l"]
+    if oracle_bytes is None:
+        oracle_bytes = lanes * cfg["n"] * cfg["n"] * 4
+    fused = solver_info["vmem_bytes"]
+    findings = []
+    if not fused < oracle_bytes:
+        findings.append(Finding(
+            rule="FUSED-VS-ORACLE", path="src/repro/kernels/solver.py",
+            symbol="dual_ascent_lanes_pallas",
+            message=(f"fused solver static VMEM {fused:,} B is not "
+                     f"strictly below the materialized-Gram oracle "
+                     f"{oracle_bytes:,} B ({lanes} lanes x "
+                     f"{cfg['n']}^2 x f32) — the PR 5 memory contract "
+                     f"is broken")))
+    info = {
+        "config": cfg,
+        "lanes": lanes,
+        "fused_vmem_bytes": fused,
+        "oracle_gram_bytes": oracle_bytes,
+        "ratio": fused / oracle_bytes if oracle_bytes else None,
+        "holds": bool(fused < oracle_bytes),
+    }
+    return info, findings
+
+
+def check_kernels(vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  oracle_bytes: Optional[int] = None,
+                  ) -> tuple[list[Finding], dict]:
+    """Run the full Pass 3: trace, budget, divisibility, oracle contract."""
+    findings: list[Finding] = []
+    programs = []
+    solver_info = None
+    for path, symbol, rec in _trace_kernel_programs():
+        info, fnds = analyze_record(rec, path=path, symbol=symbol,
+                                    vmem_budget=vmem_budget)
+        info["path"] = path
+        info["symbol"] = symbol
+        programs.append(info)
+        findings.extend(fnds)
+        if symbol == "dual_ascent_lanes_pallas":
+            solver_info = info
+    contract = None
+    if solver_info is not None:
+        contract, fnds = fused_vs_oracle(solver_info,
+                                         oracle_bytes=oracle_bytes)
+        findings.extend(fnds)
+    info = {"vmem_budget": vmem_budget, "programs": programs,
+            "fused_vs_oracle": contract}
+    return findings, info

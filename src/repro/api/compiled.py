@@ -270,6 +270,51 @@ from repro.core.kernels import (  # noqa: E402  (re-export)
 )
 
 
+# The banks are genuine pytrees: array fields are leaves, everything that
+# selects a compiled program (kind, bit widths, grid geometry) is static
+# aux data.  Today the machines close over the banks as jit constants;
+# registration is what lets them cross a jit boundary as *arguments*
+# instead (the bank-donation refactor ROADMAP item 2 needs) without the
+# trace treating them as opaque objects.  pair_idx is host-side build
+# metadata — it rides in aux as a hashable tuple.
+
+def _linear_bank_flatten(b: _LinearBank):
+    return (b.w, b.b), (b.input_bits, tuple(b.pair_idx.tolist()))
+
+
+def _linear_bank_unflatten(aux, children) -> _LinearBank:
+    input_bits, pair_idx = aux
+    w, b = children
+    return _LinearBank(input_bits=input_bits,
+                       pair_idx=np.asarray(pair_idx), w=w, b=b)
+
+
+jax.tree_util.register_pytree_node(
+    _LinearBank, _linear_bank_flatten, _linear_bank_unflatten)
+
+_KERNEL_BANK_DATA = ("sv", "coef_pos", "coef_neg", "bias_pos", "bias_neg",
+                     "offset", "gamma", "scale", "shift", "grid", "curve")
+_KERNEL_BANK_AUX = ("kind", "input_bits", "left", "right", "uniform_grid",
+                    "inv_step")
+
+
+def _kernel_bank_flatten(b: _KernelBank):
+    aux = tuple(getattr(b, f) for f in _KERNEL_BANK_AUX) \
+        + (tuple(b.pair_idx.tolist()),)
+    return tuple(getattr(b, f) for f in _KERNEL_BANK_DATA), aux
+
+
+def _kernel_bank_unflatten(aux, children) -> _KernelBank:
+    kw = dict(zip(_KERNEL_BANK_DATA, children))
+    kw.update(zip(_KERNEL_BANK_AUX, aux))
+    kw["pair_idx"] = np.asarray(aux[-1])
+    return _KernelBank(**kw)
+
+
+jax.tree_util.register_pytree_node(
+    _KernelBank, _kernel_bank_flatten, _kernel_bank_unflatten)
+
+
 def _kernel_group_key(s: _KernelSpec):
     curve_key = None
     if s.grid is not None:
@@ -846,6 +891,15 @@ class _BankVariants:
     @property
     def n_variants(self) -> int:
         return int(self.shift.shape[0])
+
+
+# All-array dataclass: register with field order as the flatten order so
+# variant tensors cross jit boundaries as a plain pytree (see the
+# _LinearBank/_KernelBank registration note).
+jax.tree_util.register_dataclass(
+    _BankVariants,
+    data_fields=("shift", "gain", "coef_pos", "coef_neg", "offset"),
+    meta_fields=())
 
 
 def _key_data(key: jax.Array) -> np.ndarray:

@@ -16,7 +16,6 @@ tiled version and is validated against these functions.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 # Thermal voltage at 300 K (V) and typical IGZO subthreshold slope factor.

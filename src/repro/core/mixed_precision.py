@@ -26,7 +26,6 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -17,8 +17,6 @@ pjit path's collective-bytes accounting.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ shard their flat-block dims over fsdp only.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -158,7 +157,6 @@ def serve_state_specs(cfg: ModelConfig, state_shapes: dict,
         b_dim = 1
         if shape[b_dim] % dp_size == 0 and shape[b_dim] >= dp_size:
             axes[b_dim] = rules.dp
-            cap_ok_axis = None
         else:
             # B too small: shard the longest remaining dim over dp
             cand = max(range(2, len(shape)), key=lambda i: shape[i],

@@ -12,7 +12,6 @@ on 8 fake CPU devices in tests/test_distributed.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -104,7 +104,6 @@ def block_cost(arch: str, shape_name: str, multi_pod: bool, mesh,
     import dataclasses as dc
 
     from repro.models import transformer as tfm
-    from repro.models.common import ShardRules
     from repro.distributed import partition
     import jax.numpy as jnp
 

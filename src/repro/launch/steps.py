@@ -13,7 +13,6 @@ int8 weights for decode, scan-attention block size, MoE capacity.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

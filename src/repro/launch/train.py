@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro import configs

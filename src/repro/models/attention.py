@@ -15,7 +15,7 @@ All paths share the GQA grouping: q heads (b, hq, s, dh) fold to
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -166,7 +166,6 @@ def apply_moe_grouped(cfg: ModelConfig, rules: ShardRules, p: dict,
     def dispatch_one(eid_flat, wgt_flat):
         """Per-group sort dispatch: -> (tok (e,cap), wgt (e,cap))."""
         order = jnp.argsort(eid_flat, stable=True)
-        eid_s = eid_flat[order]
         tid_s = (order // k).astype(jnp.int32)
         wgt_s = wgt_flat[order]
         counts = jnp.zeros((e,), jnp.int32).at[eid_flat].add(1)

@@ -20,12 +20,10 @@ arrive as precomputed patch/frame embeddings of width d_model.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod

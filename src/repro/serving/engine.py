@@ -17,7 +17,6 @@ only the cfg.global_layers carry full-length caches (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

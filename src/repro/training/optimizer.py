@@ -8,7 +8,7 @@ not (EXPERIMENTS.md §Dry-run memory table).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

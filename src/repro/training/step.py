@@ -8,7 +8,6 @@ overlap trick recorded in DESIGN.md §6.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -1,5 +1,4 @@
 """Checkpoint fault-tolerance + data pipeline determinism tests."""
-import json
 import os
 
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.api import MixedKernelSVM, compile_candidates
+from repro.api import MixedKernelSVM
 from repro.core import dse, hwcost, trainer
 from repro.core.analog import AnalogBinaryClassifier
 from repro.core.ovo import DigitalLinearClassifier, MulticlassSVM

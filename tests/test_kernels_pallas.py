@@ -1,5 +1,4 @@
 """Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

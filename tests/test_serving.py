@@ -92,7 +92,7 @@ def test_whisper_decode_runs_and_is_consistent():
         state, logits = engine.decode_step(cfg, params, state,
                                            tokens[:, t:t + 1], RULES)
         outs.append(logits)
-    for o in outs:
+    for o in outs + [ref]:
         assert np.all(np.isfinite(np.asarray(o, np.float32)))
 
 

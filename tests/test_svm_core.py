@@ -1,8 +1,6 @@
 """Unit tests for the SVM solver and kernel math (paper Sec. II)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _compat import property_test
 
