@@ -1,0 +1,369 @@
+"""Serving benchmark: sustained throughput of the streaming SVM engine.
+
+Three comparisons at batch-4096-equivalent load (the PR's headline
+numbers, appended to the BENCH trajectory):
+
+  * **naive vs micro-batched** — 4096 single queries dispatched one
+    device program call at a time (the pre-engine serving story) vs the
+    same stream pushed through :class:`repro.serving.SVMEngine`
+    closed-loop.  The acceptance gate asserts the engine sustains
+    ``>= --assert-speedup`` x the naive queries/s.
+
+  * **open-loop Poisson** — the same engine under a paced arrival process
+    (``--rate`` queries/s), reporting achieved throughput, batch
+    occupancy and p50/p95/p99 latency from :class:`ServingStats`.
+
+  * **co-batched vs per-model-sequential** — identical mixed-tenant
+    micro-batches served either by ONE FleetMachine dispatch per batch or
+    by one per-member dispatch per model group (both bucket-padded, both
+    labels-only programs).  ``--assert-cobatch`` gates co-batched
+    throughput >= the sequential path.
+
+A compile-count gate runs alongside: the engine phases must compile at
+most ONE program per padding bucket (no per-request recompiles).
+
+  PYTHONPATH=src python benchmarks/serving.py --out runs/serving.json \
+      --assert-speedup 5 --assert-cobatch
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks._fit_cache import fitted                    # noqa: E402
+from benchmarks.svm_train import count_compiles             # noqa: E402
+
+N_QUERIES = 4096
+MIX_BATCH = 256
+
+#: Throughput phases run best-of-N: the shared container shows transient
+#: multi-x slowdown windows (noisy neighbors), and the benchmark measures
+#: the engine, not the neighbors.
+TRIALS = 3
+
+
+def _labels_only(machine):
+    """The member-machine serving hot path: labels, nothing else."""
+    import jax
+
+    return jax.jit(lambda x: machine._forward(x)[2])
+
+
+def _naive_per_request(machine, queries) -> dict:
+    """One ``machine.predict`` call per query — the pre-engine serving
+    story: the public compiled path dispatched request-by-request."""
+    machine.predict(queries[:1])                            # warmup
+    best, out = None, None
+    for _ in range(TRIALS):
+        t0 = time.perf_counter()
+        out = [int(machine.predict(q[None])[0]) for q in queries]
+        wall = time.perf_counter() - t0
+        best = wall if best is None else min(best, wall)
+    return {"wall_s": round(best, 4),
+            "queries_per_s": round(len(queries) / best, 1),
+            "trials": TRIALS,
+            "labels": out}
+
+
+def _engine_closed_loop(machine, queries, *, max_batch, max_wait_ms) -> dict:
+    """Submit every query as fast as possible; measure sustained q/s and
+    verify one compiled program per bucket.
+
+    The fleet is built ONCE and shared across trials, so the compile
+    gate spans all of them: later trials must be pure cache hits.
+    """
+    from repro.api import compile_fleet
+    from repro.serving import SVMEngine
+
+    with count_compiles() as cc:
+        fleet = compile_fleet({"default": machine})
+        best = None
+        for _ in range(TRIALS):
+            with SVMEngine(fleet, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms) as eng:
+                eng.warmup()
+                t0 = time.perf_counter()
+                futs = [eng.submit(q) for q in queries]
+                out = [f.result(timeout=120.0) for f in futs]
+                wall = time.perf_counter() - t0
+            if best is None or wall < best[0]:
+                best = (wall, eng.stats.summary(), out)
+        n_buckets = eng.n_buckets
+    wall, summary, out = best
+    # The gate counts compiles of the serving program itself (`_labels`);
+    # cc.count() alone also sees jnp.zeros/device-constant one-offs.
+    return {"wall_s": round(wall, 4),
+            "queries_per_s": round(len(queries) / wall, 1),
+            "trials": TRIALS,
+            "stats": summary,
+            "compiles": cc.count("_labels"),
+            "compiles_total": cc.count(),
+            "n_buckets": n_buckets,
+            "labels": out}
+
+
+def _engine_open_loop(machine, queries, *, rate, max_batch, max_wait_ms,
+                      seed) -> dict:
+    """Poisson arrivals at ``rate`` queries/s through the engine."""
+    from repro.serving import SVMEngine
+
+    rng = np.random.RandomState(seed)
+    with SVMEngine(machine, max_batch=max_batch,
+                   max_wait_ms=max_wait_ms) as eng:
+        eng.warmup()
+        futs = []
+        next_t = t0 = time.perf_counter()
+        for q in queries:
+            futs.append(eng.submit(q))
+            next_t += rng.exponential(1.0 / rate)
+            pause = next_t - time.perf_counter()
+            if pause > 0:
+                time.sleep(pause)
+        for f in futs:
+            f.result(timeout=120.0)
+        wall = time.perf_counter() - t0
+        summary = eng.stats.summary()
+    return {"offered_rate": rate,
+            "wall_s": round(wall, 4),
+            "achieved_queries_per_s": round(len(queries) / wall, 1),
+            "stats": summary}
+
+
+def _cobatch_vs_sequential(fleet, x, idx, *, seed) -> dict:
+    """Same mixed micro-batches: one fleet dispatch vs per-model dispatches.
+
+    Both paths are bucket-padded labels-only jitted programs, so the
+    measured gap is the co-batching question itself: M small dispatches
+    per mixed batch vs one fused dispatch doing every member's banks.
+    """
+    import jax.numpy as jnp
+
+    from repro.serving import BucketPolicy
+
+    policy = BucketPolicy(max_batch=MIX_BATCH)
+    n = x.shape[0]
+    member_lab = [_labels_only(m) for m in fleet._members]
+
+    def pad_rows(a, b):
+        return np.pad(a, ((0, b - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+
+    batches = [(x[o:o + MIX_BATCH], idx[o:o + MIX_BATCH])
+               for o in range(0, n, MIX_BATCH)]
+
+    # Warmup every shape either path will touch (group sizes vary per
+    # batch, so the sequential path can cross bucket boundaries mid-run).
+    fleet._labels_jit(jnp.asarray(batches[0][0]), jnp.asarray(batches[0][1]))
+    warmed = set()
+    for xb, ib in batches:
+        for i, m in enumerate(fleet._members):
+            g = xb[ib == i][:, : m.n_features]
+            if not len(g):
+                continue
+            gb = policy.bucket_for(len(g))
+            if (i, gb) not in warmed:
+                warmed.add((i, gb))
+                member_lab[i](jnp.asarray(pad_rows(g, gb)))
+
+    def run_co():
+        out = []
+        for xb, ib in batches:
+            out.append(np.asarray(
+                fleet._labels_jit(jnp.asarray(xb), jnp.asarray(ib))))
+        return out
+
+    def run_seq():
+        outs = []
+        for xb, ib in batches:
+            out = np.empty(len(ib), np.int32)
+            for i, m in enumerate(fleet._members):
+                sel = ib == i
+                g = xb[sel][:, : m.n_features]
+                if not len(g):
+                    continue
+                gb = policy.bucket_for(len(g))
+                lab = np.asarray(member_lab[i](jnp.asarray(pad_rows(g, gb))))
+                out[sel] = lab[: len(g)]
+            outs.append(out)
+        return outs
+
+    t_co = t_seq = None
+    for _ in range(TRIALS):
+        t0 = time.perf_counter()
+        co = run_co()
+        dt = time.perf_counter() - t0
+        t_co = dt if t_co is None else min(t_co, dt)
+        t0 = time.perf_counter()
+        seq = run_seq()
+        dt = time.perf_counter() - t0
+        t_seq = dt if t_seq is None else min(t_seq, dt)
+
+    co = np.concatenate(co)
+    seq = np.concatenate(seq)
+    np.testing.assert_array_equal(co, seq)   # routing correctness, bit-level
+    return {
+        "mix_batch": MIX_BATCH,
+        "co_batched": {"wall_s": round(t_co, 4),
+                       "queries_per_s": round(n / t_co, 1)},
+        "per_model_sequential": {"wall_s": round(t_seq, 4),
+                                 "queries_per_s": round(n / t_seq, 1)},
+        "cobatch_speedup": round(t_seq / t_co, 2),
+    }
+
+
+def run(n_queries: int = N_QUERIES, n_epochs: int = 120, seed: int = 0,
+        rate: float = 20000.0, max_batch: int = 256,
+        max_wait_ms: float = 2.0, assert_speedup: float | None = None,
+        assert_cobatch: bool = False, verbose: bool = True) -> dict:
+    from repro.api import compile_fleet
+    from repro.data import datasets
+    from repro.serving import SVMEngine
+
+    rng = np.random.RandomState(seed)
+
+    # -- single model: naive vs engine, closed and open loop -----------------
+    ds, est = fitted("balance", n_epochs=n_epochs, seed=seed)
+    machine = est.deploy("circuit")
+    pool = np.asarray(ds.x_test, np.float32)
+    queries = pool[rng.randint(0, len(pool), n_queries)]
+
+    naive = _naive_per_request(machine, queries)
+    closed = _engine_closed_loop(machine, queries, max_batch=max_batch,
+                                 max_wait_ms=max_wait_ms)
+    np.testing.assert_array_equal(closed.pop("labels"), naive.pop("labels"))
+    speedup = round(closed["queries_per_s"] / naive["queries_per_s"], 2)
+    open_loop = _engine_open_loop(machine, queries, rate=rate,
+                                  max_batch=max_batch,
+                                  max_wait_ms=max_wait_ms, seed=seed)
+
+    # -- fleet: mixed-tenant stream, co-batched vs per-model -----------------
+    members, pools = {}, {}
+    for name in datasets.DATASETS:
+        d, e = fitted(name, n_epochs=n_epochs, seed=seed)
+        members[name] = e.deploy("circuit")
+        pools[name] = np.asarray(d.x_test, np.float32)
+    fleet = compile_fleet(members)
+    names = list(members)
+    idx = rng.randint(0, len(names), n_queries).astype(np.int32)
+    xmix = np.zeros((n_queries, fleet.n_features), np.float32)
+    for i, name in enumerate(names):
+        sel = idx == i
+        p = pools[name]
+        xmix[sel, : p.shape[1]] = p[rng.randint(0, len(p), int(sel.sum()))]
+
+    cobatch = _cobatch_vs_sequential(fleet, xmix, idx, seed=seed)
+
+    models = [int(i) for i in idx]
+    with count_compiles() as cc_fleet:
+        best = None
+        for _ in range(TRIALS):
+            with SVMEngine(fleet, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms) as eng:
+                eng.warmup()
+                t0 = time.perf_counter()
+                futs = [eng.submit(xmix[i], models[i])
+                        for i in range(n_queries)]
+                for f in futs:
+                    f.result(timeout=120.0)
+                wall = time.perf_counter() - t0
+            if best is None or wall < best[0]:
+                best = (wall, eng.stats.summary())
+        fleet_stream = {"wall_s": round(best[0], 4),
+                        "queries_per_s": round(n_queries / best[0], 1),
+                        "trials": TRIALS,
+                        "stats": best[1],
+                        "compiles": cc_fleet.count("_labels"),
+                        "compiles_total": cc_fleet.count(),
+                        "n_buckets": eng.n_buckets}
+
+    result = {
+        "benchmark": "serving",
+        "n_queries": n_queries,
+        "max_batch": max_batch,
+        "max_wait_ms": max_wait_ms,
+        "single_model": {
+            "dataset": "balance",
+            "target": "circuit",
+            "naive_per_request": naive,
+            "engine_closed_loop": closed,
+            "engine_speedup_vs_naive": speedup,
+            "engine_open_loop": open_loop,
+        },
+        "fleet": {
+            "models": names,
+            "cobatch_vs_sequential": cobatch,
+            "engine_mixed_stream": fleet_stream,
+        },
+    }
+
+    if verbose:
+        print("scenario,queries_per_s,p50_ms,p99_ms,occupancy")
+        st = closed["stats"]
+        print(f"naive_per_request,{naive['queries_per_s']},,,")
+        print(f"engine_closed_loop,{closed['queries_per_s']},"
+              f"{st['latency_ms']['p50']},{st['latency_ms']['p99']},"
+              f"{st['batch_occupancy']}")
+        so = open_loop["stats"]
+        print(f"engine_open_loop@{rate:g},"
+              f"{open_loop['achieved_queries_per_s']},"
+              f"{so['latency_ms']['p50']},{so['latency_ms']['p99']},"
+              f"{so['batch_occupancy']}")
+        sf = fleet_stream["stats"]
+        print(f"fleet_mixed_stream,{fleet_stream['queries_per_s']},"
+              f"{sf['latency_ms']['p50']},{sf['latency_ms']['p99']},"
+              f"{sf['batch_occupancy']}")
+        print(f"cobatch_speedup_vs_sequential,"
+              f"{cobatch['cobatch_speedup']},,,")
+        print(f"engine_speedup_vs_naive,{speedup},,,")
+
+    # -- gates ---------------------------------------------------------------
+    for tag, rec in (("single", closed), ("fleet", fleet_stream)):
+        if rec["compiles"] > rec["n_buckets"]:
+            raise AssertionError(
+                f"compile-count gate [{tag}]: {rec['compiles']} compiles "
+                f"for {rec['n_buckets']} buckets (>1 program per bucket)")
+    if assert_speedup is not None and speedup < assert_speedup:
+        raise AssertionError(
+            f"engine throughput gate: {speedup}x < required "
+            f"{assert_speedup}x vs naive per-request dispatch")
+    if assert_cobatch and cobatch["cobatch_speedup"] < 1.0:
+        raise AssertionError(
+            f"co-batching gate: co-batched {cobatch['co_batched']} slower "
+            f"than per-model sequential {cobatch['per_model_sequential']}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="write JSON here as well")
+    ap.add_argument("--n-queries", type=int, default=N_QUERIES)
+    ap.add_argument("--n-epochs", type=int, default=120)
+    ap.add_argument("--rate", type=float, default=20000.0)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--assert-speedup", type=float, default=None,
+                    help="fail unless engine >= this x naive throughput")
+    ap.add_argument("--assert-cobatch", action="store_true",
+                    help="fail unless co-batched >= per-model sequential")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    result = run(n_queries=args.n_queries, n_epochs=args.n_epochs,
+                 seed=args.seed, rate=args.rate, max_batch=args.max_batch,
+                 max_wait_ms=args.max_wait_ms,
+                 assert_speedup=args.assert_speedup,
+                 assert_cobatch=args.assert_cobatch)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"JSON -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -93,6 +93,20 @@ def build_registry() -> list[EntryPoint]:
         path="src/repro/api/compiled.py",
         fn=mc_machine._forward, args=(x_in,)))
 
+    # -- fleet serving forward (jit + donate_argnums=(1,)) ------------------
+    # Two-member co-batched fleet; the serving hot path donates the
+    # model_idx buffer, reused for the i32 label output (DESIGN.md §9).
+    from repro.api import fleet as fleet_mod
+
+    machine_b = api.compile_machine([rbf, lin, hw_clf], n_classes=3)
+    fleet = fleet_mod.compile_fleet({"m0": machine, "m1": machine_b})
+    idx_in = jnp.zeros((8,), jnp.int32)
+    entries.append(EntryPoint(
+        symbol="FleetMachine._forward", path="src/repro/api/fleet.py",
+        fn=fleet._forward, args=(x_in, idx_in),
+        check_donation=True, jit_fn=fleet._labels_jit,
+        donation_args=(x_in, idx_in)))
+
     # -- trainer family program (jit + donate_argnames=('y',)) --------------
     p, n, dd, g, c, f = 2, 32, 3, 2, 2, 2
     fam_args = (

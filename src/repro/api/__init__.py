@@ -43,13 +43,15 @@ from repro.api.compiled import (
     compile_variants,
 )
 from repro.api.estimator import MixedKernelSVM, MonteCarloResult
+from repro.api.fleet import FleetMachine, compile_fleet
 from repro.core.analog import CircuitParams, VariantSet
 from repro.core.dse import DesignSpace, SweepResult
 from repro.core.trainer import PaddedPairs, PairResult, pad_pairs, train_pairs
 
 __all__ = [
     "CandidateMachine", "CircuitParams", "CompiledMachine", "DesignSpace",
-    "MixedKernelSVM", "MonteCarloMachine", "MonteCarloResult", "PaddedPairs",
-    "PairResult", "SweepResult", "VariantSet", "compile_candidates",
-    "compile_machine", "compile_variants", "pad_pairs", "train_pairs",
+    "FleetMachine", "MixedKernelSVM", "MonteCarloMachine", "MonteCarloResult",
+    "PaddedPairs", "PairResult", "SweepResult", "VariantSet",
+    "compile_candidates", "compile_fleet", "compile_machine",
+    "compile_variants", "pad_pairs", "train_pairs",
 ]

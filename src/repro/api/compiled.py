@@ -457,6 +457,61 @@ def _bank_feature_dim(linear_banks, kernel_banks) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Decision encoder: packed truth table or votes matmul
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Decider:
+    """Pair bits ``(..., P)`` -> class labels ``(...,)``.
+
+    The packed truth table of ``build_encoder_table`` in the FE regime
+    (``P <= MAX_TABLE_BITS``), the equivalent votes matmul + argmax
+    (lowest-index tiebreak) beyond it.  Shared by :class:`CompiledMachine`
+    and the multi-model :class:`~repro.api.fleet.FleetMachine`, so the
+    fleet's per-member decision subgraph is literally the member's own.
+    """
+
+    table: Optional[jnp.ndarray]        # (2^P,) packed labels, or None
+    bit_weights: Optional[jnp.ndarray]  # (P,) 1 << arange(P), or None
+    vote_a: Optional[jnp.ndarray]       # (P, K) votes for class i of pair
+    vote_b: Optional[jnp.ndarray]       # (P, K) votes for class j of pair
+
+    @classmethod
+    def build(cls, n_classes: int) -> "_Decider":
+        pairs = class_pairs(n_classes)
+        n_pairs = len(pairs)
+        if n_pairs <= MAX_TABLE_BITS:
+            return cls(
+                table=jnp.asarray(build_encoder_table(n_classes)),
+                bit_weights=jnp.asarray(
+                    (1 << np.arange(n_pairs)).astype(np.int32)),
+                vote_a=None, vote_b=None)
+        a = np.zeros((n_pairs, n_classes), np.int32)
+        b = np.zeros((n_pairs, n_classes), np.int32)
+        for p, (i, j) in enumerate(pairs):
+            a[p, i] = 1
+            b[p, j] = 1
+        return cls(table=None, bit_weights=None,
+                   vote_a=jnp.asarray(a), vote_b=jnp.asarray(b))
+
+    def __call__(self, bits: jnp.ndarray) -> jnp.ndarray:
+        if self.table is not None:
+            return jnp.take(self.table, bits @ self.bit_weights)
+        votes = bits @ self.vote_a + (1 - bits) @ self.vote_b
+        return jnp.argmax(votes, axis=-1)
+
+
+# Registered so a decider can cross jit boundaries as an argument (None
+# fields are empty subtrees); which of the two paths runs is decided at
+# trace time by the table's presence.
+jax.tree_util.register_dataclass(
+    _Decider,
+    data_fields=("table", "bit_weights", "vote_a", "vote_b"),
+    meta_fields=())
+
+
+# ---------------------------------------------------------------------------
 # The compiled machine
 # ---------------------------------------------------------------------------
 
@@ -503,21 +558,7 @@ class CompiledMachine:
 
         # Decision encoder: packed truth table in the FE regime, votes
         # matmul beyond it (identical semantics, see ovo.decide_votes).
-        pairs = class_pairs(self.n_classes)
-        if self.n_pairs <= MAX_TABLE_BITS:
-            self._table = jnp.asarray(build_encoder_table(self.n_classes))
-            self._bit_weights = jnp.asarray(
-                (1 << np.arange(self.n_pairs)).astype(np.int32))
-            self._vote_a = self._vote_b = None
-        else:
-            a = np.zeros((self.n_pairs, self.n_classes), np.int32)
-            b = np.zeros((self.n_pairs, self.n_classes), np.int32)
-            for p, (i, j) in enumerate(pairs):
-                a[p, i] = 1
-                b[p, j] = 1
-            self._table = self._bit_weights = None
-            self._vote_a = jnp.asarray(a)
-            self._vote_b = jnp.asarray(b)
+        self._decider = _Decider.build(self.n_classes)
 
         self._forward_jit = jax.jit(self._forward)
 
@@ -550,12 +591,7 @@ class CompiledMachine:
                              self._inv_perm, self.use_pallas,
                              interpret=self.interpret)
         bits = (scores >= 0.0).astype(jnp.int32)
-        if self._table is not None:
-            labels = jnp.take(self._table, bits @ self._bit_weights)
-        else:
-            votes = bits @ self._vote_a + (1 - bits) @ self._vote_b
-            labels = jnp.argmax(votes, axis=-1)
-        return scores, bits, labels
+        return scores, bits, self._decider(bits)
 
     # -- host API ------------------------------------------------------------
 
@@ -588,26 +624,8 @@ class CompiledMachine:
     def save(self, path: str) -> None:
         """Write ``<path>.npz`` (arrays) + ``<path>.json`` (structure)."""
         path = _strip_ext(path)
-        arrays: dict[str, np.ndarray] = {}
-        meta_banks = []
-        for i, b in enumerate(self._linear_banks):
-            arrays[f"lin{i}.w"] = np.asarray(b.w)
-            arrays[f"lin{i}.b"] = np.asarray(b.b)
-            arrays[f"lin{i}.pair_idx"] = b.pair_idx
-            meta_banks.append({"type": "linear", "id": f"lin{i}",
-                               "input_bits": b.input_bits})
-        for i, b in enumerate(self._kernel_banks):
-            for name in ("sv", "coef_pos", "coef_neg", "bias_pos", "bias_neg",
-                         "offset", "gamma", "scale", "shift"):
-                arrays[f"ker{i}.{name}"] = np.asarray(getattr(b, name))
-            arrays[f"ker{i}.pair_idx"] = b.pair_idx
-            entry = {"type": "kernel", "id": f"ker{i}", "kind": b.kind,
-                     "input_bits": b.input_bits, "left": b.left,
-                     "right": b.right}
-            if b.grid is not None:
-                arrays[f"ker{i}.grid"] = np.asarray(b.grid)
-                arrays[f"ker{i}.curve"] = np.asarray(b.curve)
-            meta_banks.append(entry)
+        arrays, meta_banks = _bank_arrays(
+            self._linear_banks, self._kernel_banks)
         meta = {
             "format": "repro.api.CompiledMachine",
             "version": _FORMAT_VERSION,
@@ -628,34 +646,7 @@ class CompiledMachine:
         if meta.get("format") != "repro.api.CompiledMachine":
             raise ValueError(f"{path}.json is not a CompiledMachine save")
         npz = np.load(path + ".npz")
-        linear_banks, kernel_banks = [], []
-        for entry in meta["banks"]:
-            bid = entry["id"]
-            if entry["type"] == "linear":
-                linear_banks.append(_LinearBank(
-                    input_bits=int(entry["input_bits"]),
-                    pair_idx=npz[f"{bid}.pair_idx"],
-                    w=jnp.asarray(npz[f"{bid}.w"]),
-                    b=jnp.asarray(npz[f"{bid}.b"])))
-            else:
-                has_grid = f"{bid}.grid" in npz
-                kernel_banks.append(_KernelBank(
-                    kind=entry["kind"], input_bits=int(entry["input_bits"]),
-                    pair_idx=npz[f"{bid}.pair_idx"],
-                    sv=jnp.asarray(npz[f"{bid}.sv"]),
-                    coef_pos=jnp.asarray(npz[f"{bid}.coef_pos"]),
-                    coef_neg=jnp.asarray(npz[f"{bid}.coef_neg"]),
-                    bias_pos=jnp.asarray(npz[f"{bid}.bias_pos"]),
-                    bias_neg=jnp.asarray(npz[f"{bid}.bias_neg"]),
-                    offset=jnp.asarray(npz[f"{bid}.offset"]),
-                    gamma=jnp.asarray(npz[f"{bid}.gamma"]),
-                    scale=jnp.asarray(npz[f"{bid}.scale"]),
-                    shift=jnp.asarray(npz[f"{bid}.shift"]),
-                    grid=jnp.asarray(npz[f"{bid}.grid"]) if has_grid else None,
-                    curve=jnp.asarray(npz[f"{bid}.curve"]) if has_grid else None,
-                    left=float(entry["left"]), right=float(entry["right"]),
-                    **_grid_fast_path(
-                        npz[f"{bid}.grid"] if has_grid else None)))
+        linear_banks, kernel_banks = _banks_from_entries(meta["banks"], npz)
         return cls(meta["n_classes"], linear_banks, kernel_banks,
                    kernel_map=meta.get("kernel_map"), use_pallas=use_pallas,
                    interpret=interpret)
@@ -666,6 +657,72 @@ def _strip_ext(path: str) -> str:
         if path.endswith(ext):
             return path[: -len(ext)]
     return path
+
+
+def _bank_arrays(linear_banks, kernel_banks, prefix: str = ""
+                 ) -> tuple[dict[str, np.ndarray], list[dict]]:
+    """Serialize banks to ``{npz key: array}`` + JSON bank entries.
+
+    ``prefix`` namespaces the npz keys so multiple machines (the fleet
+    save format, DESIGN.md §9) pack into one archive without collisions.
+    """
+    arrays: dict[str, np.ndarray] = {}
+    meta_banks: list[dict] = []
+    for i, b in enumerate(linear_banks):
+        bid = f"{prefix}lin{i}"
+        arrays[f"{bid}.w"] = np.asarray(b.w)
+        arrays[f"{bid}.b"] = np.asarray(b.b)
+        arrays[f"{bid}.pair_idx"] = b.pair_idx
+        meta_banks.append({"type": "linear", "id": bid,
+                           "input_bits": b.input_bits})
+    for i, b in enumerate(kernel_banks):
+        bid = f"{prefix}ker{i}"
+        for name in ("sv", "coef_pos", "coef_neg", "bias_pos", "bias_neg",
+                     "offset", "gamma", "scale", "shift"):
+            arrays[f"{bid}.{name}"] = np.asarray(getattr(b, name))
+        arrays[f"{bid}.pair_idx"] = b.pair_idx
+        entry = {"type": "kernel", "id": bid, "kind": b.kind,
+                 "input_bits": b.input_bits, "left": b.left,
+                 "right": b.right}
+        if b.grid is not None:
+            arrays[f"{bid}.grid"] = np.asarray(b.grid)
+            arrays[f"{bid}.curve"] = np.asarray(b.curve)
+        meta_banks.append(entry)
+    return arrays, meta_banks
+
+
+def _banks_from_entries(entries: list[dict], npz
+                        ) -> tuple[list[_LinearBank], list[_KernelBank]]:
+    """Rebuild bank lists from JSON bank entries + an open npz archive."""
+    linear_banks, kernel_banks = [], []
+    for entry in entries:
+        bid = entry["id"]
+        if entry["type"] == "linear":
+            linear_banks.append(_LinearBank(
+                input_bits=int(entry["input_bits"]),
+                pair_idx=npz[f"{bid}.pair_idx"],
+                w=jnp.asarray(npz[f"{bid}.w"]),
+                b=jnp.asarray(npz[f"{bid}.b"])))
+        else:
+            has_grid = f"{bid}.grid" in npz
+            kernel_banks.append(_KernelBank(
+                kind=entry["kind"], input_bits=int(entry["input_bits"]),
+                pair_idx=npz[f"{bid}.pair_idx"],
+                sv=jnp.asarray(npz[f"{bid}.sv"]),
+                coef_pos=jnp.asarray(npz[f"{bid}.coef_pos"]),
+                coef_neg=jnp.asarray(npz[f"{bid}.coef_neg"]),
+                bias_pos=jnp.asarray(npz[f"{bid}.bias_pos"]),
+                bias_neg=jnp.asarray(npz[f"{bid}.bias_neg"]),
+                offset=jnp.asarray(npz[f"{bid}.offset"]),
+                gamma=jnp.asarray(npz[f"{bid}.gamma"]),
+                scale=jnp.asarray(npz[f"{bid}.scale"]),
+                shift=jnp.asarray(npz[f"{bid}.shift"]),
+                grid=jnp.asarray(npz[f"{bid}.grid"]) if has_grid else None,
+                curve=jnp.asarray(npz[f"{bid}.curve"]) if has_grid else None,
+                left=float(entry["left"]), right=float(entry["right"]),
+                **_grid_fast_path(
+                    npz[f"{bid}.grid"] if has_grid else None)))
+    return linear_banks, kernel_banks
 
 
 # ---------------------------------------------------------------------------

@@ -49,17 +49,25 @@ def main(argv=None):
     print(f"prefill {args.batch}x{args.prompt_len} in "
           f"{time.time() - t0:.2f}s")
 
-    decode = jax.jit(
-        lambda p, s, t: engine.decode_step(cfg, p, s, t, rules))
+    # Decode step with sampling fused in-graph.  The state pytree is
+    # DONATED: without it the jit holds input and output caches alive
+    # simultaneously — two full KV-cache copies per step.  The per-token
+    # key is folded from the decode position inside the graph, replacing
+    # the host-side jax.random.split that synced the stream every step.
+    def _decode_sample(p, s, t, key):
+        s, logits = engine.decode_step(cfg, p, s, t, rules)
+        sub = jax.random.fold_in(key, s["pos"])
+        t = jax.random.categorical(
+            sub, logits / args.temperature, -1)[:, None]
+        return s, t
+
+    decode = jax.jit(_decode_sample, donate_argnums=(1,))
     key = jax.random.PRNGKey(args.seed + 1)
     tok = jnp.argmax(logits, -1)[:, None]
     outs = [tok]
     t0 = time.time()
     for i in range(args.gen - 1):
-        state, logits = decode(params, state, tok)
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(
-            sub, logits / args.temperature, -1)[:, None]
+        state, tok = decode(params, state, tok, key)
         outs.append(tok)
     dt = time.time() - t0
     gen = jnp.concatenate(outs, axis=1)

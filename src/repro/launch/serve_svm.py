@@ -1,0 +1,86 @@
+"""SVM fleet serving driver: stream near-sensor queries through the engine.
+
+Fits one machine per dataset (Algorithm 1), co-batches them into a
+:class:`~repro.api.FleetMachine`, and drives an open-loop Poisson query
+stream through :class:`~repro.serving.SVMEngine` — the deployed-fleet
+picture of ROADMAP item 2: many tenants, continuous small queries, one
+device program per padded bucket.
+
+  PYTHONPATH=src python -m repro.launch.serve_svm \
+      --datasets balance,seeds --rate 5000 --n-queries 4000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="balance,seeds",
+                    help="comma-separated fleet tenants")
+    ap.add_argument("--target", default="circuit")
+    ap.add_argument("--n-epochs", type=int, default=60)
+    ap.add_argument("--n-queries", type=int, default=4000)
+    ap.add_argument("--rate", type=float, default=5000.0,
+                    help="open-loop Poisson arrival rate (queries/s)")
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.api import MixedKernelSVM, compile_fleet
+    from repro.data import datasets
+    from repro.serving import SVMEngine
+
+    names = [n.strip() for n in args.datasets.split(",") if n.strip()]
+    members, pools = {}, {}
+    for name in names:
+        ds = datasets.load(name)
+        t0 = time.time()
+        est = MixedKernelSVM(n_epochs=args.n_epochs, seed=args.seed).fit(
+            ds.x_train, ds.y_train)
+        members[name] = est.deploy(args.target)
+        pools[name] = np.asarray(ds.x_test, np.float32)
+        print(f"fit+deploy [{name}] in {time.time() - t0:.1f}s "
+              f"(K={members[name].n_classes}, d={members[name].n_features})")
+    fleet = compile_fleet(members)
+    print(fleet.describe())
+
+    rng = np.random.RandomState(args.seed)
+    with SVMEngine(fleet, max_batch=args.max_batch,
+                   max_wait_ms=args.max_wait_ms) as eng:
+        eng.warmup()
+        futures = []
+        next_t = time.perf_counter()
+        t0 = next_t
+        for i in range(args.n_queries):
+            name = names[rng.randint(len(names))]
+            pool = pools[name]
+            x = pool[rng.randint(len(pool))]
+            futures.append((name, x, eng.submit(x, name)))
+            next_t += rng.exponential(1.0 / args.rate)
+            pause = next_t - time.perf_counter()
+            if pause > 0:
+                time.sleep(pause)
+        labels = [f.result(timeout=60.0) for _, _, f in futures]
+        wall = time.perf_counter() - t0
+
+    # Spot-check routing against the member machines' direct predictions.
+    for (name, x, _), lab in list(zip(futures, labels))[:: max(
+            1, args.n_queries // 64)]:
+        want = int(fleet.member(name).predict(x[None])[0])
+        assert lab == want, f"routing mismatch for {name}: {lab} != {want}"
+
+    summary = eng.stats.summary()
+    summary["wall_s"] = round(wall, 3)
+    summary["offered_rate"] = args.rate
+    print(json.dumps(summary, indent=2))
+    return summary
+
+
+if __name__ == "__main__":
+    main()

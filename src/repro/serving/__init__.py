@@ -1,2 +1,13 @@
-"""Serving substrate: KV caches, prefill/decode steps, batching engine."""
+"""Serving substrate.
+
+Two engines live here: the LLM prefill/decode substrate (``engine``, the
+seed's shape template) and the SVM fleet streaming engine
+(``svm_engine``): micro-batched, padding-bucketed, multi-model co-batched
+serving for compiled SVM fleets (DESIGN.md §9).
+"""
 from repro.serving import engine  # noqa: F401
+from repro.serving.svm_engine import (  # noqa: F401
+    BucketPolicy,
+    ServingStats,
+    SVMEngine,
+)

@@ -1,0 +1,382 @@
+"""Streaming inference engine for compiled SVM fleets.
+
+The compiled predict path (``repro.api``) is fast but batch-synchronous:
+one caller, one batch, one dispatch.  A deployed fleet instead sees a
+continuous stream of small queries from many tenants.  This engine turns
+that stream back into efficient device batches:
+
+* **Micro-batching** — requests accumulate in an async queue under a
+  max-wait / max-batch policy: a batch dispatches as soon as it is full
+  OR the oldest request has waited ``max_wait_ms``, trading a bounded
+  latency floor for device efficiency.
+
+* **Padding buckets** — every dispatch is padded up to a power-of-two
+  batch size (:class:`BucketPolicy`), so the engine touches at most
+  ``log2(max_batch / min_bucket) + 1`` distinct shapes and each bucket
+  hits ONE pre-compiled XLA program (``warmup()`` compiles them all
+  eagerly; the benchmark gates ``<= 1`` compile per bucket).  Padded rows
+  carry zeros and model 0 — their labels are computed and discarded.
+
+* **Co-batching** — the engine serves a :class:`~repro.api.FleetMachine`,
+  so one dispatch carries rows for ANY mix of member models, routed by
+  model index in-graph and un-padded/re-split per request on return.  A
+  bare :class:`~repro.api.CompiledMachine` is wrapped into a one-member
+  fleet.
+
+* **Double-buffered donated staging** — each bucket owns TWO pinned host
+  staging buffers used alternately, and the jitted forward donates the
+  ``model_idx`` device buffer (reused for the label output, the alias the
+  static analyzer verifies).  Dispatch is asynchronous: after launching
+  batch *t* the batcher immediately stages batch *t+1* while the device
+  computes, and only blocks on batch *t*'s result when the pipeline is
+  ``pipeline_depth`` deep (default 1 = classic double buffering).
+
+* **Observability** — per-request enqueue -> dispatch -> complete
+  timestamps feed a :class:`ServingStats` accumulator: queries/s, batch
+  occupancy and p50/p95/p99 latency (``benchmarks/serving.py`` turns
+  these into the BENCH trajectory numbers).
+
+Usage::
+
+    from repro.serving import SVMEngine
+    with SVMEngine(fleet, max_batch=256, max_wait_ms=2.0) as eng:
+        fut = eng.submit(x_row, model="balance")   # returns a Future
+        label = fut.result()
+        print(eng.stats.summary())
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.compiled import CompiledMachine
+from repro.api.fleet import FleetMachine, compile_fleet
+
+DEFAULT_MAX_BATCH = 256
+DEFAULT_MIN_BUCKET = 8
+DEFAULT_MAX_WAIT_MS = 2.0
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+class BucketPolicy:
+    """Powers-of-two padding buckets between ``min_bucket`` and ``max_batch``.
+
+    ``bucket_for(n)`` returns the smallest bucket holding ``n`` rows; the
+    bucket set IS the engine's compiled-program set, so its size bounds
+    compile count and warm-up cost.
+    """
+
+    def __init__(self, max_batch: int = DEFAULT_MAX_BATCH,
+                 min_bucket: int = DEFAULT_MIN_BUCKET):
+        if not (_is_pow2(max_batch) and _is_pow2(min_bucket)):
+            raise ValueError(
+                f"buckets must be powers of two, got min={min_bucket} "
+                f"max={max_batch}")
+        if min_bucket > max_batch:
+            raise ValueError(f"min_bucket {min_bucket} > max_batch {max_batch}")
+        self.max_batch = int(max_batch)
+        self.min_bucket = int(min_bucket)
+        buckets, b = [], min_bucket
+        while b <= max_batch:
+            buckets.append(b)
+            b <<= 1
+        self.buckets: tuple[int, ...] = tuple(buckets)
+
+    def bucket_for(self, n_rows: int) -> int:
+        if not 0 < n_rows <= self.max_batch:
+            raise ValueError(
+                f"{n_rows} rows outside (0, {self.max_batch}]")
+        for b in self.buckets:
+            if n_rows <= b:
+                return b
+        raise AssertionError("unreachable")  # pragma: no cover
+
+
+class ServingStats:
+    """Per-request latency + per-batch occupancy accumulator.
+
+    Timestamps (``time.perf_counter`` seconds) are recorded by the engine:
+    ``t_enqueue`` at ``submit``, ``t_dispatch`` when the batch launches on
+    device, ``t_complete`` when the request's future resolves.  Queries
+    are counted in ROWS (a k-row request is k queries).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        with self._lock:
+            self._req: list[tuple[float, float, float, int]] = []
+            self._batch: list[tuple[int, int]] = []   # (rows, bucket)
+
+    def observe_batch(self, rows: int, bucket: int,
+                      requests) -> None:
+        with self._lock:
+            self._batch.append((rows, bucket))
+            for r in requests:
+                self._req.append(
+                    (r.t_enqueue, r.t_dispatch, r.t_complete, r.n_rows))
+
+    @property
+    def n_requests(self) -> int:
+        with self._lock:
+            return len(self._req)
+
+    def summary(self) -> dict:
+        with self._lock:
+            req = list(self._req)
+            bat = list(self._batch)
+        if not req:
+            return {"n_requests": 0, "n_queries": 0, "n_batches": 0}
+        lat_ms = np.asarray([(done - enq) * 1e3
+                             for enq, _, done, _ in req])
+        wait_ms = np.asarray([(disp - enq) * 1e3
+                              for enq, disp, _, _ in req])
+        rows = sum(r[3] for r in req)
+        span = max(r[2] for r in req) - min(r[0] for r in req)
+        occ = np.asarray([r / b for r, b in bat])
+        return {
+            "n_requests": len(req),
+            "n_queries": int(rows),
+            "n_batches": len(bat),
+            "queries_per_s": round(rows / span, 1) if span > 0 else None,
+            "batch_occupancy": round(float(occ.mean()), 4),
+            "mean_batch_rows": round(rows / len(bat), 2),
+            "latency_ms": {
+                "p50": round(float(np.percentile(lat_ms, 50)), 3),
+                "p95": round(float(np.percentile(lat_ms, 95)), 3),
+                "p99": round(float(np.percentile(lat_ms, 99)), 3),
+                "mean": round(float(lat_ms.mean()), 3),
+                "max": round(float(lat_ms.max()), 3),
+            },
+            "queue_wait_ms_p50": round(float(np.percentile(wait_ms, 50)), 3),
+        }
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray            # (k, d) f32, d <= fleet.n_features
+    model_idx: int
+    n_rows: int
+    scalar: bool             # 1-D submit -> scalar label result
+    future: Future
+    t_enqueue: float
+    t_dispatch: float = 0.0
+    t_complete: float = 0.0
+
+
+class SVMEngine:
+    """Micro-batched, padding-bucketed, multi-model co-batched serving.
+
+    See the module docstring for the design.  The engine owns ONE batcher
+    thread; ``submit`` is thread-safe and non-blocking, returning a
+    :class:`concurrent.futures.Future` that resolves to the request's
+    label(s).  Use as a context manager, or ``start()``/``stop()``.
+    """
+
+    def __init__(self, machine: Union[FleetMachine, CompiledMachine], *,
+                 max_batch: int = DEFAULT_MAX_BATCH,
+                 max_wait_ms: float = DEFAULT_MAX_WAIT_MS,
+                 min_bucket: int = DEFAULT_MIN_BUCKET,
+                 pipeline_depth: int = 1,
+                 stats: Optional[ServingStats] = None):
+        if isinstance(machine, CompiledMachine):
+            machine = compile_fleet({"default": machine})
+        if not isinstance(machine, FleetMachine):
+            raise TypeError(f"cannot serve a {type(machine).__name__}")
+        self.fleet = machine
+        self.policy = BucketPolicy(max_batch=max_batch, min_bucket=min_bucket)
+        self.max_wait_s = float(max_wait_ms) * 1e-3
+        self.pipeline_depth = int(pipeline_depth)
+        self.stats = stats if stats is not None else ServingStats()
+
+        d = self.fleet.n_features
+        # Two pinned host staging buffers per bucket, used alternately:
+        # buffer A is refilled for batch t+1 while batch t (staged from
+        # buffer B) is still in flight on device.
+        self._staging = {
+            b: [(np.zeros((b, d), np.float32), np.zeros((b,), np.int32))
+                for _ in range(2)]
+            for b in self.policy.buckets
+        }
+        self._flip = {b: 0 for b in self.policy.buckets}
+
+        self._queue: queue.Queue[_Request] = queue.Queue()
+        self._inflight: deque = deque()
+        self._carry: Optional[_Request] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "SVMEngine":
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="svm-engine-batcher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, resolve every future, join the batcher."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SVMEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def warmup(self) -> None:
+        """Compile every bucket's program eagerly (blocking)."""
+        d = self.fleet.n_features
+        for b in self.policy.buckets:
+            out = self.fleet._labels_jit(
+                jnp.zeros((b, d), jnp.float32), jnp.zeros((b,), jnp.int32))
+            out.block_until_ready()
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.policy.buckets)
+
+    # -- request ingress -----------------------------------------------------
+
+    def submit(self, x: np.ndarray, model: Union[str, int] = 0) -> Future:
+        """Enqueue one request (``(d,)`` row or ``(k, d)`` mini-batch).
+
+        The returned future resolves to a scalar ``int`` label for a 1-D
+        input, else an ``(k,)`` int32 array.  ``model`` is a fleet member
+        id or index.
+        """
+        if self._thread is None:
+            raise RuntimeError("engine not started (use `with SVMEngine(...)`)")
+        if self._stop.is_set():
+            raise RuntimeError("engine is stopping")
+        x = np.asarray(x, np.float32)
+        scalar = x.ndim == 1
+        if scalar:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] > self.fleet.n_features:
+            raise ValueError(
+                f"expected (k, <= {self.fleet.n_features}) features, "
+                f"got {x.shape}")
+        if not 0 < x.shape[0] <= self.policy.max_batch:
+            raise ValueError(
+                f"request rows {x.shape[0]} outside "
+                f"(0, {self.policy.max_batch}]")
+        req = _Request(x=x, model_idx=self.fleet.model_index(model),
+                       n_rows=x.shape[0], scalar=scalar, future=Future(),
+                       t_enqueue=time.perf_counter())
+        self._queue.put(req)
+        return req.future
+
+    def predict(self, x: np.ndarray, model: Union[str, int] = 0):
+        """Synchronous convenience wrapper: ``submit(...).result()``."""
+        return self.submit(x, model).result()
+
+    # -- batcher thread ------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            batch: list[_Request] = []
+            rows = 0
+            if self._carry is not None:
+                batch.append(self._carry)
+                rows = self._carry.n_rows
+                self._carry = None
+            if not batch:
+                try:
+                    r = self._queue.get(timeout=0.005)
+                    batch.append(r)
+                    rows = r.n_rows
+                except queue.Empty:
+                    # Idle: complete any in-flight batch, then exit once
+                    # stopped and fully drained.
+                    self._resolve(all_pending=True)
+                    if self._stop.is_set() and self._queue.empty() \
+                            and self._carry is None:
+                        return
+                    continue
+            deadline = batch[0].t_enqueue + self.max_wait_s
+            while rows < self.policy.max_batch:
+                timeout = deadline - time.perf_counter()
+                try:
+                    # Past the deadline we stop *waiting* but still drain
+                    # the immediately-available backlog — a burst that
+                    # outruns the batcher forms full batches instead of
+                    # degrading to per-request dispatch.
+                    r = self._queue.get(timeout=timeout) if timeout > 0 \
+                        else self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if rows + r.n_rows > self.policy.max_batch:
+                    self._carry = r       # held for the next batch
+                    break
+                batch.append(r)
+                rows += r.n_rows
+            self._dispatch(batch, rows)
+
+    def _dispatch(self, batch: list[_Request], rows: int) -> None:
+        bucket = self.policy.bucket_for(rows)
+        xbuf, ibuf = self._staging[bucket][self._flip[bucket]]
+        self._flip[bucket] ^= 1
+        off = 0
+        for r in batch:
+            k, d = r.x.shape
+            xbuf[off:off + k, :d] = r.x
+            if d < xbuf.shape[1]:
+                xbuf[off:off + k, d:] = 0.0
+            ibuf[off:off + k] = r.model_idx
+            off += k
+        if off < bucket:                   # padded rows: zeros, model 0
+            xbuf[off:] = 0.0
+            ibuf[off:] = 0
+        t_disp = time.perf_counter()
+        for r in batch:
+            r.t_dispatch = t_disp
+        try:
+            labels = self.fleet._labels_jit(
+                jnp.asarray(xbuf), jnp.asarray(ibuf))   # async dispatch
+        except Exception as e:             # pragma: no cover - defensive
+            for r in batch:
+                r.future.set_exception(e)
+            return
+        self._inflight.append((labels, batch, rows, bucket))
+        # Double buffering: block on the OLDEST batch only once the
+        # pipeline is full, so staging batch t+1 overlapped device compute
+        # of batch t.
+        while len(self._inflight) > self.pipeline_depth:
+            self._resolve()
+
+    def _resolve(self, all_pending: bool = False) -> None:
+        while self._inflight:
+            labels, batch, rows, bucket = self._inflight.popleft()
+            out = np.asarray(labels)       # blocks until device completes
+            t_done = time.perf_counter()
+            off = 0
+            for r in batch:
+                lab = out[off:off + r.n_rows]
+                off += r.n_rows
+                r.t_complete = t_done
+                r.future.set_result(int(lab[0]) if r.scalar else lab.copy())
+            self.stats.observe_batch(rows, bucket, batch)
+            if not all_pending:
+                return

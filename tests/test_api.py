@@ -216,7 +216,7 @@ def test_votes_fallback_matches_table():
         m = svm_mod.train_binary(x[mask], yy, "linear", c=1.0, n_epochs=40)
         clfs.append(ovo.FloatBitClassifier(m))
     machine = compile_machine(clfs, n_classes=k)
-    assert machine._table is None  # votes path engaged
+    assert machine._decider.table is None  # votes path engaged
     bits = machine.predict_bits(x)
     np.testing.assert_array_equal(machine.predict(x),
                                   ovo.decide_votes(bits, k))

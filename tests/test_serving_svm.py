@@ -1,0 +1,286 @@
+"""Tests for the SVM serving stack: FleetMachine co-batching + SVMEngine.
+
+Covers the PR's correctness contracts:
+
+  * FleetMachine outputs are BIT-IDENTICAL to each member CompiledMachine
+    (scores compared as raw f32 bit patterns) across ragged model mixes —
+    different K, d, bank counts, analog members;
+  * per-row routing matches per-member prediction for arbitrary tenant
+    mixes;
+  * fleet save/load round-trips one npz+json for the whole fleet;
+  * the engine's bucket policy and batch assembly at the edges (1 row,
+    max_batch rows, max_batch + 1 rows across requests);
+  * one compiled program per padding bucket — no per-request recompiles;
+  * ServingStats accounting (requests vs queries, occupancy, latency).
+
+All machines are hand-built at tiny shapes (no training), mirroring the
+analysis registry's ``_tiny_models`` so the suite stays fast.
+"""
+import numpy as np
+import pytest
+
+from repro.api import FleetMachine, compile_fleet, compile_machine
+from repro.core.svm import SVMModel
+from repro.serving import BucketPolicy, ServingStats, SVMEngine
+
+
+def _pair_model(gen, d, m, kind):
+    sx = gen.normal(size=(m, d)).astype(np.float32)
+    sy = np.where(np.arange(m) % 2 == 0, 1.0, -1.0).astype(np.float32)
+    alpha = (np.abs(gen.normal(size=m)) + 0.1).astype(np.float32)
+    kw = {}
+    if kind == "linear":
+        kw["w"] = ((alpha * sy) @ sx).astype(np.float32)
+    return SVMModel(kind=kind, support_x=sx, support_y=sy, alpha=alpha,
+                    bias=float(gen.normal() * 0.1), gamma=0.7, c=1.0, **kw)
+
+
+def tiny_machine(seed, d=3, m=6, n_classes=3, analog_pairs=()):
+    """Hand-built machine: alternating linear/rbf pairs, optional analog."""
+    from repro.core import trainer
+    from repro.core.analog import AnalogBinaryClassifier
+
+    gen = np.random.default_rng(seed)
+    n_pairs = n_classes * (n_classes - 1) // 2
+    clfs = []
+    for p in range(n_pairs):
+        kind = "linear" if p % 2 == 0 else "rbf"
+        model = _pair_model(gen, d, m, kind)
+        if p in analog_pairs:
+            model = _pair_model(gen, d, m, "rbf")
+            model = AnalogBinaryClassifier.deploy(model, trainer.default_hw(0))
+        clfs.append(model)
+    return compile_machine(clfs, n_classes=n_classes)
+
+
+@pytest.fixture(scope="module")
+def ragged_fleet():
+    """Three members with different K, d, m and one analog member."""
+    members = {
+        "tiny": tiny_machine(0, d=3, m=6, n_classes=3),
+        "wide": tiny_machine(1, d=5, m=8, n_classes=4),
+        "analog": tiny_machine(2, d=4, m=6, n_classes=3, analog_pairs=(1,)),
+    }
+    return compile_fleet(members), members
+
+
+def _queries(gen, n, d):
+    return gen.normal(size=(n, d)).astype(np.float32)
+
+
+# -- FleetMachine ------------------------------------------------------------
+
+
+def test_fleet_layout(ragged_fleet):
+    fleet, members = ragged_fleet
+    assert fleet.model_ids == ["tiny", "wide", "analog"]
+    assert fleet.n_features == 5            # d_max over members
+    assert fleet.n_pairs_total == 3 + 6 + 3
+    assert fleet.pair_slice("tiny") == (0, 3)
+    assert fleet.pair_slice("wide") == (3, 9)
+    assert fleet.pair_slice("analog") == (9, 12)
+    assert fleet.member("wide") is members["wide"]
+    assert "FleetMachine(3 models" in fleet.describe()
+
+
+def test_fleet_bit_identical_to_members(ragged_fleet):
+    """Scores, bits AND labels from the co-batched forward match each
+    member machine bit-for-bit — the contract that lets one fleet program
+    replace per-model dispatches without any numeric drift."""
+    fleet, members = ragged_fleet
+    gen = np.random.default_rng(7)
+    for mid, machine in members.items():
+        x = _queries(gen, 17, machine.n_features)
+        want = machine.decision_scores(x)
+        got = fleet.decision_scores(x, mid)
+        # Raw f32 bit patterns: stricter than allclose, catches reordered
+        # reductions that happen to round the same way most of the time.
+        np.testing.assert_array_equal(got.view(np.int32),
+                                      want.view(np.int32))
+        np.testing.assert_array_equal(fleet.predict_bits(x, mid),
+                                      machine.predict_bits(x))
+        np.testing.assert_array_equal(fleet.predict(x, mid),
+                                      machine.predict(x))
+
+
+def test_fleet_per_row_routing(ragged_fleet):
+    """A mixed batch routed per row gives each row its own member's label."""
+    fleet, members = ragged_fleet
+    gen = np.random.default_rng(11)
+    ids = [fleet.model_ids[i] for i in gen.integers(0, 3, size=29)]
+    x = _queries(gen, 29, fleet.n_features)
+    got = fleet.predict(x, ids)
+    for r, mid in enumerate(ids):
+        m = members[mid]
+        want = m.predict(x[r:r + 1, : m.n_features])[0]
+        assert got[r] == want, f"row {r} ({mid}): {got[r]} != {want}"
+
+
+def test_fleet_single_member_wraps_machine():
+    machine = tiny_machine(3)
+    fleet = compile_fleet([machine])           # bare sequence, default ids
+    assert fleet.model_ids == ["model0"]
+    gen = np.random.default_rng(0)
+    x = _queries(gen, 9, machine.n_features)
+    np.testing.assert_array_equal(fleet.predict(x, 0), machine.predict(x))
+
+
+def test_fleet_input_forms_and_errors():
+    a, b = tiny_machine(4), tiny_machine(5)
+    by_pairs = compile_fleet([("a", a), ("b", b)])
+    assert by_pairs.model_ids == ["a", "b"]
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetMachine(["a", "a"], [a, b])
+    with pytest.raises(TypeError, match="CompiledMachine"):
+        compile_fleet({"a": a, "bad": object()})
+    fleet = compile_fleet({"a": a, "b": b})
+    with pytest.raises(KeyError, match="unknown model id"):
+        fleet.model_index("missing")
+    with pytest.raises(IndexError):
+        fleet.model_index(2)
+    with pytest.raises(ValueError, match="expected"):
+        fleet.predict(np.zeros((4, fleet.n_features + 1), np.float32), "a")
+
+
+def test_fleet_save_load_round_trip(tmp_path, ragged_fleet):
+    fleet, members = ragged_fleet
+    path = str(tmp_path / "fleet")
+    fleet.save(path)
+    back = FleetMachine.load(path)
+    assert back.model_ids == fleet.model_ids
+    assert back._pair_slices == fleet._pair_slices
+    gen = np.random.default_rng(13)
+    for mid, machine in members.items():
+        x = _queries(gen, 11, machine.n_features)
+        np.testing.assert_array_equal(
+            back.decision_scores(x, mid).view(np.int32),
+            fleet.decision_scores(x, mid).view(np.int32))
+        np.testing.assert_array_equal(back.predict(x, mid),
+                                      machine.predict(x))
+
+
+# -- BucketPolicy ------------------------------------------------------------
+
+
+def test_bucket_policy_edges():
+    p = BucketPolicy(max_batch=64, min_bucket=8)
+    assert p.buckets == (8, 16, 32, 64)
+    assert p.bucket_for(1) == 8
+    assert p.bucket_for(8) == 8
+    assert p.bucket_for(9) == 16
+    assert p.bucket_for(64) == 64
+    with pytest.raises(ValueError):
+        p.bucket_for(0)
+    with pytest.raises(ValueError):
+        p.bucket_for(65)
+    with pytest.raises(ValueError, match="powers of two"):
+        BucketPolicy(max_batch=48)
+    with pytest.raises(ValueError, match="min_bucket"):
+        BucketPolicy(max_batch=8, min_bucket=16)
+
+
+# -- SVMEngine ---------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_fleet():
+    return compile_fleet({
+        "a": tiny_machine(20, d=3, m=6, n_classes=3),
+        "b": tiny_machine(21, d=4, m=8, n_classes=3),
+    })
+
+
+def test_engine_routing_matches_members(engine_fleet):
+    fleet = engine_fleet
+    gen = np.random.default_rng(0)
+    with SVMEngine(fleet, max_batch=32, max_wait_ms=1.0) as eng:
+        eng.warmup()
+        futs = []
+        for i in range(100):
+            mid = fleet.model_ids[int(gen.integers(0, 2))]
+            m = fleet.member(mid)
+            x = _queries(gen, 1, m.n_features)[0]     # 1-D -> scalar label
+            futs.append((mid, x, eng.submit(x, mid)))
+        for mid, x, f in futs:
+            want = int(fleet.member(mid).predict(x[None])[0])
+            assert f.result(timeout=30.0) == want
+
+
+def test_engine_bucket_edge_batches(engine_fleet):
+    """1 row, exactly max_batch rows, and max_batch + 1 rows (carry into a
+    second batch) all produce correct labels."""
+    fleet = engine_fleet
+    m = fleet.member("a")
+    gen = np.random.default_rng(1)
+    with SVMEngine(fleet, max_batch=32, max_wait_ms=1.0) as eng:
+        eng.warmup()
+        for n in (1, 32, 33):
+            x = _queries(gen, n, m.n_features)
+            want = m.predict(x)
+            if n <= 32:                     # one multi-row request
+                got = eng.predict(x, "a")
+                np.testing.assert_array_equal(np.atleast_1d(got), want)
+            # same rows as single-row requests (n=33 spans two batches)
+            futs = [eng.submit(x[i], "a") for i in range(n)]
+            got = np.asarray([f.result(timeout=30.0) for f in futs])
+            np.testing.assert_array_equal(got, want)
+        with pytest.raises(ValueError, match="rows"):
+            eng.submit(_queries(gen, 33, m.n_features), "a")
+
+
+def test_engine_one_program_per_bucket(engine_fleet):
+    """The padded-bucket contract: after warmup + mixed traffic the jitted
+    serving program has exactly one compiled entry per bucket shape."""
+    fleet = compile_fleet({"a": tiny_machine(30), "b": tiny_machine(31)})
+    gen = np.random.default_rng(2)
+    with SVMEngine(fleet, max_batch=32, min_bucket=8,
+                   max_wait_ms=0.5) as eng:
+        eng.warmup()
+        assert eng.n_buckets == 3           # 8, 16, 32
+        assert fleet._labels_jit._cache_size() == eng.n_buckets
+        futs = [eng.submit(_queries(gen, int(k), 3), "a")
+                for k in gen.integers(1, 33, size=40)]
+        for f in futs:
+            f.result(timeout=30.0)
+    assert fleet._labels_jit._cache_size() == eng.n_buckets
+
+
+def test_engine_stats_accounting(engine_fleet):
+    fleet = engine_fleet
+    gen = np.random.default_rng(3)
+    stats = ServingStats()
+    assert stats.summary() == {"n_requests": 0, "n_queries": 0,
+                               "n_batches": 0}
+    with SVMEngine(fleet, max_batch=16, max_wait_ms=1.0,
+                   stats=stats) as eng:
+        eng.warmup()
+        futs = [eng.submit(_queries(gen, 3, 3), "a") for _ in range(20)]
+        for f in futs:
+            f.result(timeout=30.0)
+    s = stats.summary()
+    assert s["n_requests"] == 20
+    assert s["n_queries"] == 60             # rows, not requests
+    assert 1 <= s["n_batches"] <= 20
+    assert 0.0 < s["batch_occupancy"] <= 1.0
+    assert s["latency_ms"]["p50"] <= s["latency_ms"]["p99"] \
+        <= s["latency_ms"]["max"]
+    assert s["queue_wait_ms_p50"] >= 0.0
+    stats.reset()
+    assert stats.n_requests == 0
+
+
+def test_engine_lifecycle_and_bare_machine():
+    machine = tiny_machine(40)
+    eng = SVMEngine(machine, max_batch=8)   # bare machine -> 1-member fleet
+    assert eng.fleet.model_ids == ["default"]
+    with pytest.raises(RuntimeError, match="not started"):
+        eng.submit(np.zeros(3, np.float32))
+    with eng:
+        with pytest.raises(RuntimeError, match="already started"):
+            eng.start()
+        lab = eng.predict(np.zeros(3, np.float32))
+        assert lab == int(machine.predict(np.zeros((1, 3), np.float32))[0])
+    with pytest.raises(RuntimeError):
+        eng.submit(np.zeros(3, np.float32))
+    with pytest.raises(TypeError, match="cannot serve"):
+        SVMEngine(object())
