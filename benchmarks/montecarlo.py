@@ -25,6 +25,14 @@ All mismatch is drawn from explicit jax PRNG keys derived from
   PYTHONPATH=src python benchmarks/montecarlo.py [--out montecarlo.json]
                                                  [--assert-nominal]
                                                  [--assert-compiles]
+
+The streaming scaling leg (``--scaling``; DESIGN.md §10) sweeps the
+flat-memory engine from V = 64 to ``--v-max`` (default 10^6) on one
+dataset and records variants/s, the streamed yield + its confidence
+interval, and the XLA ``memory_analysis`` of the one compiled chunk
+step.  ``--assert-flat-memory`` gates that every ladder point ran
+through that SAME program (zero extra compiles, identical peak temp
+bytes); ``--assert-ci-width`` gates the final yield CI width.
 """
 from __future__ import annotations
 
@@ -50,6 +58,12 @@ MAX_MC_COMPILES = 2
 
 #: Yield floors the robust deployment rule is probed at.
 YIELD_FLOORS = (0.5, 0.9)
+
+#: Streaming scaling-ladder defaults: V multiplies by 16 from 64 up to
+#: --v-max; the chunk step is compiled ONCE for every ladder point.
+SCALING_DATASET = "balance"
+SCALING_CHUNK = 2048
+SCALING_X = 64
 
 
 def run(n_epochs: int = 120, seed: int = 0, mc_seed: int = 0,
@@ -212,6 +226,142 @@ def assert_compiles(result: dict,
             f"programs: {bad} — the variant axis is leaking shapes")
 
 
+def run_scaling(n_epochs: int = 120, seed: int = 0, mc_seed: int = 0,
+                v_max: int = 1_000_000, method: str = "sobol",
+                mc_chunk: int = SCALING_CHUNK, n_x: int = SCALING_X,
+                dataset: str = SCALING_DATASET,
+                verbose: bool = True) -> dict:
+    """Variants/s scaling curve of the streaming engine, V = 64 -> v_max.
+
+    One donated fixed-shape chunk program serves every ladder point, so
+    peak temp memory is V-independent; the record carries the compile
+    count across the ladder and the step's XLA memory analysis so
+    ``assert_flat_memory`` can gate both.
+    """
+    import jax
+
+    from repro.core import dse
+
+    ds, est = _fit_cache.fitted(dataset, n_epochs=n_epochs, seed=seed)
+    x = np.asarray(ds.x_test[:n_x])
+    y = np.asarray(ds.y_test[:n_x])
+    key = jax.random.PRNGKey(mc_seed)
+    floor = round(est.score(x, y, target="circuit") - 0.02, 6)
+    a = dse.assignment_from_kernel_map(est.kernel_map_)[None, :]
+
+    sm = est.stream_machine(key, method=method, mc_chunk=mc_chunk)
+    ladder = [64]
+    while ladder[-1] * 16 < v_max:
+        ladder.append(ladder[-1] * 16)
+    if ladder[-1] != v_max:
+        ladder.append(int(v_max))
+
+    # Streamed-vs-dense parity oracle at V = 64: the SAME 64 variants
+    # through the dense bit tensor + batched recombination.
+    bits64 = sm.pair_bits_dense(x, np.arange(64))
+    acc64 = dse.assignment_accuracies_mc(bits64, a, y, est.n_classes_)
+    warm = sm.stream(x, y, a, n_variants=64, accuracy_floor=floor)
+    parity = {
+        "mean_abs_err": float(abs(warm["mean"][0] - acc64.mean())),
+        "std_abs_err": float(abs(warm["std"][0] - acc64.std())),
+        "worst_exact": bool(warm["worst"][0] == acc64.min()),
+        "yield_exact": bool(
+            warm["yield"][0] == (acc64 >= floor).mean()),
+    }
+
+    mem = sm.step_memory_analysis(n_x, 1)
+    mem_rec = None if mem is None else {
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+    }
+    dense_temp = None
+    try:  # dense V=64 forward, for contrast with the flat streamed step
+        m64 = est.monte_carlo_machine(64, jax.random.fold_in(key, 1))
+        dm = jax.jit(m64._forward).lower(x).compile().memory_analysis()
+        if dm is not None:
+            dense_temp = int(dm.temp_size_in_bytes)
+    except Exception:
+        pass
+
+    points = []
+    with count_compiles() as cc:
+        for v in ladder:
+            t0 = time.perf_counter()
+            out = sm.stream(x, y, a, n_variants=v, accuracy_floor=floor)
+            dt = time.perf_counter() - t0
+            points.append({
+                "n_variants": int(v),
+                "seconds": round(dt, 4),
+                "variants_per_s": round(v / dt, 1),
+                "acc_mean": round(float(out["mean"][0]), 6),
+                "acc_worst": round(float(out["worst"][0]), 6),
+                "yield_frac": round(float(out["yield"][0]), 6),
+                "yield_lo": round(float(out["yield_lo"][0]), 6),
+                "yield_hi": round(float(out["yield_hi"][0]), 6),
+                "ci_width": round(float(out["yield_hi"][0]
+                                        - out["yield_lo"][0]), 6),
+                "step_temp_bytes": (None if mem_rec is None
+                                    else mem_rec["temp_bytes"]),
+            })
+    result = {
+        "dataset": dataset, "method": method, "mc_chunk": int(mc_chunk),
+        "n_x": int(n_x), "mc_seed": int(mc_seed),
+        "accuracy_floor": floor,
+        "parity_vs_dense64": parity,
+        "step_memory": mem_rec,
+        "dense_v64_temp_bytes": dense_temp,
+        "ladder_extra_compiles": cc.count(),
+        "ladder_compile_names": cc.names,
+        "points": points,
+    }
+    if verbose:
+        print(f"-- streaming scaling ({dataset}, {method}, "
+              f"chunk {mc_chunk}, floor {floor}):")
+        print("V,seconds,variants_per_s,yield,ci_width")
+        for p in points:
+            print(f"{p['n_variants']},{p['seconds']},"
+                  f"{p['variants_per_s']},{p['yield_frac']:.4f},"
+                  f"{p['ci_width']:.5f}")
+        print(f"   step temp bytes: "
+              f"{None if mem_rec is None else mem_rec['temp_bytes']}"
+              f" (dense V=64 forward: {dense_temp}); "
+              f"extra compiles across ladder: {cc.count()}")
+    return result
+
+
+def assert_flat_memory(scaling: dict) -> None:
+    """Hard CI gate: V = 64 -> v_max reuses ONE fixed-shape chunk step.
+
+    Two checks: the ladder added zero jit compiles after the warm-up
+    stream (no V-dependent shapes leak into the step), and every ladder
+    point records the same peak temp bytes as the first.
+    """
+    extra = scaling["ladder_extra_compiles"]
+    temps = {p["step_temp_bytes"] for p in scaling["points"]}
+    ok = extra == 0 and len(temps) == 1
+    print(f"flat-memory assertion: {'OK' if ok else 'FAIL'} "
+          f"(extra compiles {extra}, temp bytes {sorted(temps)})")
+    if not ok:
+        raise AssertionError(
+            f"streaming scaling is not flat: {extra} extra compiles "
+            f"across the V ladder, temp bytes {sorted(temps)} — the "
+            "chunk step's shapes depend on n_variants")
+
+
+def assert_ci_width(scaling: dict, max_width: float) -> None:
+    """Hard CI gate: the final ladder point's yield CI is tight enough."""
+    p = scaling["points"][-1]
+    ok = p["ci_width"] <= max_width
+    print(f"ci-width assertion (<= {max_width} at V={p['n_variants']}): "
+          f"{'OK' if ok else 'FAIL'} ({p['ci_width']})")
+    if not ok:
+        raise AssertionError(
+            f"yield CI width {p['ci_width']} at V={p['n_variants']} "
+            f"exceeds {max_width} — the streamed exceedance counts (or "
+            "the IS effective sample size) regressed")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=None, help="write JSON here as well")
@@ -224,9 +374,30 @@ def main() -> None:
     ap.add_argument("--assert-compiles", action="store_true",
                     help="fail if the variant axis costs more than "
                          f"{MAX_MC_COMPILES} extra jit compiles")
+    ap.add_argument("--scaling", action="store_true",
+                    help="also run the streaming V=64..--v-max scaling "
+                         "curve (DESIGN.md §10)")
+    ap.add_argument("--v-max", type=int, default=1_000_000)
+    ap.add_argument("--method", default="sobol",
+                    help="streaming sampler: iid | sobol | stratified | is")
+    ap.add_argument("--mc-chunk", type=int, default=SCALING_CHUNK)
+    ap.add_argument("--assert-flat-memory", action="store_true",
+                    help="fail unless the whole V ladder reuses one "
+                         "fixed-shape chunk step (implies --scaling)")
+    ap.add_argument("--assert-ci-width", type=float, default=None,
+                    metavar="W",
+                    help="fail if the final yield CI is wider than W "
+                         "(implies --scaling)")
     args = ap.parse_args()
     result = run(n_epochs=args.n_epochs, mc_seed=args.mc_seed,
                  n_variants=args.n_variants)
+    scaling = None
+    if args.scaling or args.assert_flat_memory \
+            or args.assert_ci_width is not None:
+        scaling = run_scaling(n_epochs=args.n_epochs, mc_seed=args.mc_seed,
+                              v_max=args.v_max, method=args.method,
+                              mc_chunk=args.mc_chunk)
+        result["scaling"] = scaling
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=2)
@@ -234,6 +405,10 @@ def main() -> None:
         assert_nominal(result)
     if args.assert_compiles:
         assert_compiles(result)
+    if args.assert_flat_memory:
+        assert_flat_memory(scaling)
+    if args.assert_ci_width is not None:
+        assert_ci_width(scaling, args.assert_ci_width)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,9 @@
 roofline.  Prints ``name,us_per_call,derived`` style CSV blocks.
 
 ``--json PATH`` additionally aggregates every machine-readable sub-result
-(currently fig4, svm_infer, svm_train, serving, pareto and montecarlo;
-more as benchmarks grow JSON output) into one file suitable for
-BENCH_*.json trajectory tracking.
+(currently fig4, svm_infer, svm_train, serving, pareto and montecarlo —
+including the streaming V=64..1e6 scaling curve; more as benchmarks grow
+JSON output) into one file suitable for BENCH_*.json trajectory tracking.
 
 Table2 / fig5 / pareto share per-dataset Algorithm-1 fits through
 ``benchmarks._fit_cache`` — each dataset is fitted once per process.
@@ -51,6 +51,11 @@ def main() -> None:
     print("\n== Monte-Carlo: variation-aware yield sweep ==")
     from benchmarks import montecarlo
     results["montecarlo"] = montecarlo.run()
+    if args.json:
+        # Trajectory files record the full streaming signoff curve
+        # (DESIGN.md §10); interactive runs skip the ~15 min V=1e6 leg.
+        print("\n== Monte-Carlo: streaming scaling curve V=64..1e6 ==")
+        results["montecarlo"]["scaling"] = montecarlo.run_scaling()
 
     print("\n== SVM inference: object path vs compiled machine ==")
     from benchmarks import svm_infer

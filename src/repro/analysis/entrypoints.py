@@ -93,6 +93,30 @@ def build_registry() -> list[EntryPoint]:
         path="src/repro/api/compiled.py",
         fn=mc_machine._forward, args=(x_in,)))
 
+    # -- streaming MC chunk step (jit + donate_argnums=(0,)) ----------------
+    # The flat-memory variant pipeline (DESIGN.md §10): one fixed-shape
+    # donated step folds a generated chunk into the StreamStats pytree.
+    from repro.core import mcstream
+
+    sm = api.compile_mc_stream(
+        cands, n_classes=3, key=jax.random.PRNGKey(0), mc_chunk=4)
+    step_args = (
+        mcstream.init_stream(1, mcstream.hist_bins(8)),  # state (donated)
+        x_in,
+        jnp.arange(4, dtype=jnp.int32),                  # v_idx
+        jnp.ones((4,), jnp.float32),                     # valid
+        jnp.float32(0.5),                                # floor
+        jnp.ones((1, 3), bool),                          # assignments
+        jnp.zeros((8,), jnp.int32),                      # y
+        jnp.zeros((4, 0), jnp.float32),                  # u (iid: unused)
+    )
+    entries.append(EntryPoint(
+        symbol="StreamingMCMachine._step",
+        path="src/repro/api/compiled.py",
+        fn=sm._step, args=step_args,
+        check_donation=True, jit_fn=sm._step_jit,
+        donation_args=step_args))
+
     # -- fleet serving forward (jit + donate_argnums=(1,)) ------------------
     # Two-member co-batched fleet; the serving hot path donates the
     # model_idx buffer, reused for the i32 label output (DESIGN.md §9).

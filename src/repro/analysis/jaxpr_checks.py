@@ -87,11 +87,17 @@ def check_jaxpr(closed, *, path: str, symbol: str,
     f64_seen: set[str] = set()
     host_seen: set[str] = set()
 
+    def _is_f64(dtype) -> bool:
+        # Extended dtypes (typed PRNG keys, `key<fry>`) are not numpy
+        # dtypes; they are never float64.
+        if dtype is None or jax.dtypes.issubdtype(dtype, jax.dtypes.extended):
+            return False
+        return np.dtype(dtype) == np.float64
+
     for jaxpr in _iter_jaxprs(closed.jaxpr):
         for var in list(jaxpr.invars) + list(jaxpr.constvars):
             aval = getattr(var, "aval", None)
-            dtype = getattr(aval, "dtype", None)
-            if dtype is not None and np.dtype(dtype) == np.float64:
+            if _is_f64(getattr(aval, "dtype", None)):
                 f64_seen.add(f"argument/const {aval.str_short()}")
         for eqn in jaxpr.eqns:
             n_eqns += 1
@@ -100,8 +106,7 @@ def check_jaxpr(closed, *, path: str, symbol: str,
                 host_seen.add(prim)
             for var in eqn.outvars:
                 aval = getattr(var, "aval", None)
-                dtype = getattr(aval, "dtype", None)
-                if dtype is not None and np.dtype(dtype) == np.float64:
+                if _is_f64(getattr(aval, "dtype", None)):
                     f64_seen.add(f"{prim} -> {aval.str_short()}")
 
     for detail in sorted(f64_seen):

@@ -54,8 +54,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kernels as kern
-from repro.core import quant
-from repro.core.analog import AnalogBinaryClassifier, variant_transfer_params
+from repro.core import mcstream, quant
+from repro.core.analog import (
+    N_ALPHA_OFFSETS,
+    N_GAUSS_OFFSETS,
+    AnalogBinaryClassifier,
+    VariantSet,
+    variant_dim,
+    variant_set_from_flat,
+    variant_transfer_params,
+)
 from repro.core.ovo import (
     DigitalLinearClassifier,
     DigitalRBFClassifier,
@@ -1175,3 +1183,600 @@ def compile_variants(
         n_variants=n_variants, include_nominal=include_nominal,
         sigma_scale=sigma_scale, key_data=_key_data(key),
         use_pallas=use_pallas, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Streaming Monte-Carlo machine: flat-memory variant pipelining (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+#: Default variant chunk of the streaming engine.  A config knob like
+#: ``dse.MC_CHUNK``: larger chunks amortize dispatch overhead, smaller
+#: ones shrink the peak temp footprint; either way ONE program compiles
+#: regardless of the total variant count.
+MC_STREAM_CHUNK = 256
+
+#: In-graph assignment-axis chunk of the streamed recombination (bounds
+#: the ``(B, n, CHUNK)`` codes tensor exactly as ``dse.MC_CHUNK`` bounds
+#: the dense sweep's).
+_RECOMBINE_CHUNK = 512
+
+STREAM_METHODS = ("iid", "sobol", "stratified", "is")
+
+
+@dataclasses.dataclass
+class _StreamBankConst:
+    """Per-analog-bank constants for on-the-fly variant generation.
+
+    Everything the chunk step needs to draw + lower a variant IN-GRAPH,
+    on the bank's padded ``(Pb, M)`` slot grid: per-pair mismatch keys,
+    the frozen alpha control voltages, rail/validity masks (padded slots
+    have both rail masks 0, so their coefficients are exact zeros — the
+    same inertness argument as the dense ``_BankVariants`` padding), and
+    the per-pair measured alpha sweeps for the in-graph realised-alpha
+    interpolation.  Static aux: the shared ``CircuitParams``, the bank's
+    slice of the flat QMC block (``u_offset``/``u_width``, padded grid)
+    and its TRUE mismatch dimension (unpadded — the ``D`` that enters
+    importance-sampling log-weights).
+    """
+
+    pair_keys: jax.Array      # (Pb,) typed mismatch keys (fold_in per variant)
+    dva: jnp.ndarray          # (Pb, M) alpha control voltages, 0 on pads
+    pos_mask: jnp.ndarray     # (Pb, M) f32: valid slot on the + rail
+    neg_mask: jnp.ndarray     # (Pb, M) f32: valid slot on the - rail
+    slot_valid: jnp.ndarray   # (Pb, M) f32: any valid slot
+    alpha_grid: jnp.ndarray   # (Pb, Ga) ascending measured alpha abscissa
+    alpha_curve: jnp.ndarray  # (Pb, Ga) measured alpha multiplier
+    alpha_left: jnp.ndarray   # (Pb,) clamp below the sweep
+    alpha_right: jnp.ndarray  # (Pb,) clamp above the sweep
+    params: object = None     # shared CircuitParams (static)
+    u_offset: int = 0         # flat QMC block slice start (padded dims)
+    u_width: int = 0          # flat QMC block slice width (padded dims)
+    true_dim: int = 0         # unpadded mismatch dims across the bank
+
+
+jax.tree_util.register_dataclass(
+    _StreamBankConst,
+    data_fields=["pair_keys", "dva", "pos_mask", "neg_mask", "slot_valid",
+                 "alpha_grid", "alpha_curve", "alpha_left", "alpha_right"],
+    meta_fields=["params", "u_offset", "u_width", "true_dim"])
+
+
+def _recombine_acc(bits4, assignments, y, table, weights,
+                   s_chunk: int = _RECOMBINE_CHUNK):
+    """Streamed bit-recombination: ``bits4 (B, n, P, 2) -> acc (B, S)`` f32.
+
+    The chunk-axis sibling of ``dse._encoder_accuracy``: the packed
+    encoder table scores every assignment for every variant of the chunk.
+    Beyond ``s_chunk`` assignments the assignment axis runs under an
+    in-graph ``lax.map`` (loop-carried buffer, codes tensor bounded at
+    ``(B, n, s_chunk)``) — no host round-trips, one compiled program.
+    """
+    lin = bits4[..., 0]                                    # (B, n, P)
+    diff = (bits4[..., 1] - lin) * weights[None, None, :]
+    base = lin @ weights                                   # (B, n)
+    yy = y[None, :, None]
+    s = assignments.shape[0]
+
+    def score(a_block):
+        codes = base[..., None] + diff @ a_block.T         # (B, n, C)
+        labels = jnp.take(table, codes)
+        return jnp.mean((labels == yy).astype(jnp.float32), axis=1)
+
+    if s <= s_chunk:
+        return score(assignments)
+    pad = -s % s_chunk
+    a = assignments
+    if pad:
+        a = jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+    chunks = a.reshape(-1, s_chunk, a.shape[1])
+    acc = jax.lax.map(score, chunks)                       # (n_chunks, B, C)
+    return jnp.moveaxis(acc, 0, 1).reshape(bits4.shape[0], -1)[:, :s]
+
+
+class StreamingMCMachine:
+    """Tail-yield Monte-Carlo at production signoff scale (DESIGN.md §10).
+
+    Where :class:`MonteCarloMachine` materializes all ``V`` variants —
+    banks ``(V, P, M, d)``, bits ``(V, n, P, 2)`` — this machine never
+    holds more than ONE fixed-size chunk of ``mc_chunk`` variants:
+
+    1. **Generate**: variant ``v``'s mismatch is drawn in-graph from
+       ``fold_in(pair_key, v)`` (``method='iid'``/``'is'``) or from
+       coordinate ``v`` of a scrambled-Sobol/Latin-hypercube point set
+       (``'sobol'``/``'stratified'``, inverse-CDF transformed in-graph) —
+       a pure function of the global index, never of the chunking.
+    2. **Score**: the chunk's banks run through the SAME
+       ``_all_scores_mc`` lanes as the dense machine (digital lanes
+       broadcast), then the packed-encoder recombination scores every
+       assignment (``_recombine_acc``).
+    3. **Fold**: the ``(B, S)`` chunk accuracies collapse into the
+       donated :class:`~repro.core.mcstream.StreamStats` accumulator —
+       weighted Welford mean/M2, floor exceedance, extrema, histogram
+       sketch — and the chunk's buffers are reused.
+
+    One compiled program serves every ``V`` (the step's shapes depend on
+    ``mc_chunk``, never on ``V``), so peak memory is flat from V=64 to
+    V=10^6 — the property ``benchmarks/montecarlo.py
+    --assert-flat-memory`` gates via XLA ``memory_analysis``.  With
+    ``method='is'``, draws are widened by ``is_scale`` and carry
+    self-normalized importance weights through the accumulators
+    (rare-event tail sharpening; ``finalize`` reports the effective
+    sample size the confidence bounds use).  ``stream(mesh=)`` shards
+    the chunk's variant axis across a ``launch.mesh.make_variant_mesh``
+    with one psum/pmin/pmax merge per chunk.
+    """
+
+    def __init__(self, n_classes: int, linear_banks, kernel_banks,
+                 stream_consts, method: str, mc_chunk: int,
+                 sigma_scale: float, is_scale: float,
+                 key_data: Optional[np.ndarray] = None,
+                 use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        self.n_classes = int(n_classes)
+        self.n_pairs = len(class_pairs(self.n_classes))
+        if self.n_pairs > MAX_TABLE_BITS:
+            raise ValueError(
+                f"streaming MC covers the packed-encoder regime (P <= "
+                f"{MAX_TABLE_BITS}); got P={self.n_pairs}.  The votes-"
+                f"matmul fallback is not streamed yet (ROADMAP item 4).")
+        if method not in STREAM_METHODS:
+            raise ValueError(
+                f"unknown sampling method {method!r}; one of "
+                f"{STREAM_METHODS}")
+        if mc_chunk < 1:
+            raise ValueError(f"mc_chunk must be >= 1, got {mc_chunk}")
+        self.method = method
+        self.mc_chunk = int(mc_chunk)
+        self.sigma_scale = float(sigma_scale)
+        self.is_scale = float(is_scale)
+        self.key_data = None if key_data is None else np.asarray(key_data)
+        self._linear_banks = linear_banks
+        self._kernel_banks = kernel_banks
+        self._stream_consts = stream_consts   # aligned with kernel_banks
+        self.n_features = _bank_feature_dim(linear_banks, kernel_banks)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+        self.interpret = interpret
+        self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
+                                       2 * self.n_pairs)
+        self._table = jnp.asarray(build_encoder_table(self.n_classes))
+        self._weights = jnp.asarray(
+            (1 << np.arange(self.n_pairs)).astype(np.int32))
+        #: Flat mismatch dims over the padded slot grids (the QMC block
+        #: width) and over the true circuits (the IS log-weight D).
+        self.mismatch_dim = sum(
+            c.u_width for c in stream_consts if c is not None)
+        self.true_dim = sum(
+            c.true_dim for c in stream_consts if c is not None)
+        self._sampler = None
+        if method in ("sobol", "stratified"):
+            self._sampler = mcstream.QMCSampler(
+                method, self.mismatch_dim, self.key_data)
+        self._step_jit = jax.jit(self._step, donate_argnums=(0,))
+        self._bits_jit = jax.jit(self._bits)
+        self._sharded_steps: dict = {}
+
+    # -- in-graph chunk generation ------------------------------------------
+
+    def _bank_chunk(self, bc: _StreamBankConst, bank: _KernelBank,
+                    v_idx: jnp.ndarray, u: jnp.ndarray):
+        """Lower ONE analog bank's variant chunk: draws -> _BankVariants.
+
+        Returns ``(chunk, raw_sumsq (B,))`` where ``raw_sumsq`` is the
+        masked squared norm of the UNSCALED standard-normal draws (what
+        importance-sampling log-weights integrate; padded slots excluded).
+        """
+        m_max = int(bc.dva.shape[1])
+        d = int(bank.sv.shape[2])
+        if self.method in ("iid", "is"):
+            def draw(k, idx):
+                kg, ka, kc = jax.random.split(jax.random.fold_in(k, idx), 3)
+                return (jax.random.normal(kg, (m_max, d, N_GAUSS_OFFSETS)),
+                        jax.random.normal(ka, (m_max, N_ALPHA_OFFSETS)),
+                        jax.random.normal(kc, ()))
+
+            gz, az, cz = jax.vmap(jax.vmap(draw, in_axes=(0, None)),
+                                  in_axes=(None, 0))(bc.pair_keys, v_idx)
+        else:
+            ub = u[:, bc.u_offset: bc.u_offset + bc.u_width]
+            z = mcstream.uniform_to_normal(ub).reshape(
+                v_idx.shape[0], len(bc.pair_keys), variant_dim(m_max, d))
+            raw = variant_set_from_flat(z, m_max, d, 1.0)
+            gz, az, cz = raw.gauss, raw.alpha, raw.comparator
+        sumsq = (
+            jnp.sum(gz * gz * bc.slot_valid[None, :, :, None, None],
+                    axis=(1, 2, 3, 4))
+            + jnp.sum(az * az * bc.slot_valid[None, :, :, None],
+                      axis=(1, 2, 3))
+            + jnp.sum(cz * cz, axis=1))
+        scale = self.sigma_scale * (
+            self.is_scale if self.method == "is" else 1.0)
+        s = jnp.float32(scale)
+        vs = VariantSet(gauss=s * gz, alpha=s * az, comparator=s * cz)
+        t = variant_transfer_params(vs, bc.params)    # leading (B, Pb)
+        # In-graph realised alpha: the SAME frozen-alpha arithmetic as
+        # `_lower_analog_variants`, per pair against its measured sweep.
+        query = (bc.dva[None] - t.alpha_shift) / t.alpha_slope  # (B, Pb, M)
+
+        def interp_pair(q, g, c, lo, hi):
+            return jnp.interp(q, g, c, left=lo, right=hi)
+
+        a = jax.vmap(interp_pair, in_axes=(1, 0, 0, 0, 0), out_axes=1)(
+            query, bc.alpha_grid, bc.alpha_curve,
+            bc.alpha_left, bc.alpha_right)                      # (B, Pb, M)
+        # Padded slots: both rail masks are 0, so their coefficients are
+        # exact zeros and the rail GEMM ignores whatever the padded draws
+        # did to shift/gain — the dense path's zero-padding, streamed.
+        chunk = _BankVariants(
+            shift=t.shift, gain=t.gain,
+            coef_pos=a * bc.pos_mask[None],
+            coef_neg=a * bc.neg_mask[None],
+            offset=t.comp_offset)
+        return chunk, sumsq
+
+    def _chunk_banks(self, v_idx: jnp.ndarray, u: jnp.ndarray):
+        """All banks' variant chunks + the chunk's sampling weights (B,)."""
+        bank_variants, sumsq = [], jnp.zeros(v_idx.shape[0], jnp.float32)
+        for bank, bc in zip(self._kernel_banks, self._stream_consts):
+            if bc is None:
+                bank_variants.append(None)
+                continue
+            chunk, ss = self._bank_chunk(bc, bank, v_idx, u)
+            bank_variants.append(chunk)
+            sumsq = sumsq + ss
+        if self.method == "is":
+            s = self.is_scale
+            # Log-weight CENTERED at its analytic mean under the proposal
+            # (E[sumsq] = D): logw - D(log s - (s^2-1)/2) = (s^2-1)/2 *
+            # (D - sumsq).  Raw log-weights sit hundreds of nats below
+            # zero in realistic mismatch spaces (D in the hundreds), so
+            # weights are materialized RELATIVE to the chunk max — always
+            # in (0, 1] — and the accumulators carry the scale in
+            # StreamStats.log_ref (streaming logsumexp; a fixed clip
+            # either zeroes the stream or ties a macroscopic fraction of
+            # draws at the clip, silently inflating n_eff).  Padded tail
+            # rows have finite log-weights too, so the max needs no
+            # validity mask — any consistent scale works, and the
+            # weighted sums drop invalid rows downstream.
+            logw = (jnp.float32((s * s - 1.0) / 2.0)
+                    * (jnp.float32(self.true_dim) - sumsq))
+            log_ref = jnp.max(logw)
+            w = jnp.exp(logw - log_ref)
+        else:
+            w = jnp.ones(v_idx.shape[0], jnp.float32)
+            log_ref = jnp.zeros((), jnp.float32)
+        return bank_variants, w, log_ref
+
+    def _chunk_acc(self, x, v_idx, assignments, y, u):
+        """One chunk end to end: draws -> scores -> bits -> acc (B, S)."""
+        bank_variants, w, log_ref = self._chunk_banks(v_idx, u)
+        flat = _all_scores_mc(
+            x, self._linear_banks, self._kernel_banks, bank_variants,
+            self._inv_perm, int(v_idx.shape[0]), False, self.use_pallas,
+            interpret=self.interpret)                       # (B, n, 2P)
+        scores = jnp.stack(
+            [flat[..., : self.n_pairs], flat[..., self.n_pairs:]], axis=-1)
+        bits = (scores >= 0.0).astype(jnp.int32)            # (B, n, P, 2)
+        acc = _recombine_acc(bits, assignments, y, self._table,
+                             self._weights)
+        return acc, w, log_ref, bits
+
+    def _step(self, state, x, v_idx, valid, floor, assignments, y, u):
+        """THE streamed chunk program: state is donated, shapes depend on
+        ``mc_chunk`` and the assignment matrix only — one compile per
+        machine regardless of the total variant count."""
+        acc, w, log_ref, _ = self._chunk_acc(x, v_idx, assignments, y, u)
+        return mcstream.update_stream(state, acc, w, valid, floor,
+                                      log_ref=log_ref)
+
+    def _bits(self, x, v_idx, u):
+        """Chunk bits oracle (un-donated): ``(B, n, P, 2)`` + weights
+        relative to the chunk's own log-scale (also returned)."""
+        bank_variants, w, log_ref = self._chunk_banks(v_idx, u)
+        flat = _all_scores_mc(
+            x, self._linear_banks, self._kernel_banks, bank_variants,
+            self._inv_perm, int(v_idx.shape[0]), False, self.use_pallas,
+            interpret=self.interpret)
+        scores = jnp.stack(
+            [flat[..., : self.n_pairs], flat[..., self.n_pairs:]], axis=-1)
+        return (scores >= 0.0).astype(jnp.int32), w, log_ref
+
+    # -- sharded step (variant axis over a mesh) -----------------------------
+
+    def _make_sharded_step(self, mesh):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import VARIANTS_AXIS
+
+        if VARIANTS_AXIS not in mesh.axis_names:
+            raise ValueError(
+                f"mesh axes {mesh.axis_names} lack '{VARIANTS_AXIS}'; "
+                f"build one with launch.mesh.make_variant_mesh()")
+        rep, shd = P(), P(VARIANTS_AXIS)
+
+        def local_step(state, x, v_idx, valid, floor, assignments, y, u):
+            # Each device draws + scores its slice of the chunk; the
+            # LINEAR aggregates (centered on the replicated running mean)
+            # merge with one psum, the extrema with pmin/pmax, and every
+            # device applies the identical merge — the state stays
+            # replicated without a broadcast.  Per-device log-scales are
+            # aligned to their pmax before the psum (factor is the
+            # literal 1.0 on every device whenever the scales agree —
+            # always, for non-IS methods — so those sums stay bit-exact).
+            acc, w, log_ref, _ = self._chunk_acc(x, v_idx, assignments, y, u)
+            agg = mcstream.chunk_aggregates(
+                state.mean, acc, w, valid, floor, state.hist.shape[1],
+                log_ref=log_ref)
+            ax = VARIANTS_AXIS
+            ref = jax.lax.pmax(agg.log_ref, ax)
+            f = jnp.where(agg.log_ref == ref, jnp.float32(1.0),
+                          jnp.exp(agg.log_ref - ref))
+            agg = mcstream.ChunkAgg(
+                n_c=jax.lax.psum(agg.n_c, ax),
+                w_c=jax.lax.psum(f * agg.w_c, ax),
+                w2_c=jax.lax.psum(f * f * agg.w2_c, ax),
+                s1=jax.lax.psum(f * agg.s1, ax),
+                s2=jax.lax.psum(f * agg.s2, ax),
+                exceed=jax.lax.psum(f * agg.exceed, ax),
+                amin=jax.lax.pmin(agg.amin, ax),
+                amax=jax.lax.pmax(agg.amax, ax),
+                hist=jax.lax.psum(f * agg.hist, ax),
+                log_ref=ref)
+            return mcstream.merge_stream(state, agg)
+
+        fn = shard_map(
+            local_step, mesh=mesh,
+            in_specs=(rep, rep, shd, shd, rep, rep, rep, shd),
+            out_specs=rep, check_rep=False)
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def _sharded_step(self, mesh):
+        if mesh not in self._sharded_steps:
+            self._sharded_steps[mesh] = self._make_sharded_step(mesh)
+        return self._sharded_steps[mesh]
+
+    # -- host driver ---------------------------------------------------------
+
+    def _chunk_size(self, mesh=None) -> int:
+        b = self.mc_chunk
+        if mesh is not None:
+            nd = int(np.prod(list(mesh.shape.values())))
+            b = -(-b // nd) * nd      # round up to a whole per-device slice
+        return b
+
+    def _chunk_inputs(self, start: int, b: int, n_variants: int):
+        # Host numpy on purpose: eager jnp ops bake `start` in as a
+        # constant and would compile one tiny program per distinct chunk
+        # start; numpy arrays cross the jit boundary with zero compiles.
+        v_idx = np.arange(start, start + b, dtype=np.int32)
+        valid = (np.arange(start, start + b) < n_variants).astype(np.float32)
+        if self._sampler is not None:
+            u = self._sampler.chunk(start, b)
+        else:
+            u = np.zeros((b, 0), np.float32)
+        return v_idx, valid, u
+
+    def _prep(self, x, y, assignments):
+        x = jnp.asarray(np.asarray(x), jnp.float32)
+        if x.ndim != 2 or (self.n_features and x.shape[1] != self.n_features):
+            raise ValueError(
+                f"expected (n, {self.n_features}) inputs, got shape {x.shape}")
+        y = jnp.asarray(np.asarray(y), jnp.int32)
+        a = np.atleast_2d(np.asarray(assignments)).astype(np.int32)
+        if a.shape[1] != self.n_pairs:
+            raise ValueError(
+                f"assignments have {a.shape[1]} pairs, machine has "
+                f"{self.n_pairs}")
+        return x, y, jnp.asarray(a)
+
+    def stream(self, x, y, assignments, n_variants: int,
+               accuracy_floor: float, mesh=None,
+               confidence: float = mcstream.DEFAULT_CONFIDENCE,
+               ci: str = "wilson") -> dict:
+        """Stream ``n_variants`` mismatch instances through the donated
+        chunk step and return ``mcstream.finalize``'s statistics dict
+        (per-assignment mean/std/worst/yield + binomial bounds + the raw
+        histogram sketch under ``"hist"``).
+
+        ``mesh``: a ``make_variant_mesh`` shards each chunk's variant
+        axis across devices (chunk size rounds up to a whole per-device
+        slice; the validity mask keeps the padded tail inert).
+        """
+        if n_variants < 1:
+            raise ValueError(f"n_variants must be >= 1, got {n_variants}")
+        x, y, a = self._prep(x, y, assignments)
+        b = self._chunk_size(mesh)
+        step = self._step_jit if mesh is None else self._sharded_step(mesh)
+        floor = jnp.float32(accuracy_floor)
+        state = mcstream.init_stream(
+            int(a.shape[0]), mcstream.hist_bins(int(x.shape[0])))
+        for start in range(0, n_variants, b):
+            v_idx, valid, u = self._chunk_inputs(start, b, n_variants)
+            state = step(state, x, v_idx, valid, floor, a, y, u)
+        out = mcstream.finalize(state, confidence, ci)
+        out["hist"] = np.asarray(state.hist, np.float64)
+        out["n_variants"] = int(n_variants)
+        out["method"] = self.method
+        out["accuracy_floor"] = float(accuracy_floor)
+        return out
+
+    def pair_bits_dense(self, x, v_idx) -> np.ndarray:
+        """Dense oracle: the bit tensor ``(B, n, P, 2)`` of the GLOBAL
+        variant indices ``v_idx`` — the exact bits the streamed chunks
+        fold away.  Small-V parity tests recombine these through the
+        dense ``dse.assignment_accuracies_mc`` path and compare against
+        the streamed accumulators."""
+        x = jnp.asarray(np.asarray(x), jnp.float32)
+        v_idx = np.asarray(v_idx, np.int32)
+        if self._sampler is not None:
+            if not np.array_equal(
+                    v_idx, np.arange(v_idx[0], v_idx[0] + len(v_idx))):
+                raise ValueError(
+                    "QMC methods need a contiguous v_idx range (the "
+                    "low-discrepancy stream is indexed, not keyed)")
+            u = jnp.asarray(self._sampler.chunk(int(v_idx[0]), len(v_idx)))
+        else:
+            u = jnp.zeros((len(v_idx), 0), jnp.float32)
+        bits, _, _ = self._bits_jit(x, jnp.asarray(v_idx), u)
+        return np.asarray(bits)
+
+    def chunk_weights(self, v_idx) -> np.ndarray:
+        """ABSOLUTE (mean-centered) sampling weights of the given global
+        variants (1 unless ``method='is'``) — the IS-estimator tests'
+        hook.  The in-graph weights are chunk-relative; folding the
+        chunk's log-scale back in happens here in host f64, so weights
+        from different chunks of one stream are mutually comparable
+        (introspection only — huge banks can overflow even f64)."""
+        d = self.n_features
+        x = jnp.zeros((1, d), jnp.float32)
+        v_idx = np.asarray(v_idx, np.int32)
+        if self._sampler is not None:
+            u = jnp.asarray(self._sampler.chunk(int(v_idx[0]), len(v_idx)))
+        else:
+            u = jnp.zeros((len(v_idx), 0), jnp.float32)
+        _, w, log_ref = self._bits_jit(x, jnp.asarray(v_idx), u)
+        return np.asarray(w, np.float64) * np.exp(float(log_ref))
+
+    def step_memory_analysis(self, n_val: int, n_assignments: int = 1,
+                             mesh=None):
+        """XLA ``memory_analysis`` of the compiled chunk step at the given
+        validation/assignment shapes — the object the flat-memory CI gate
+        inspects.  Returns None when the backend does not report one."""
+        b = self._chunk_size(mesh)
+        x = jnp.zeros((int(n_val), self.n_features), jnp.float32)
+        y = jnp.zeros((int(n_val),), jnp.int32)
+        a = jnp.zeros((int(n_assignments), self.n_pairs), jnp.int32)
+        state = mcstream.init_stream(
+            int(n_assignments), mcstream.hist_bins(int(n_val)))
+        v_idx, valid, u = self._chunk_inputs(0, b, b)
+        step = self._step_jit if mesh is None else self._sharded_step(mesh)
+        lowered = step.lower(state, x, v_idx, valid,
+                             jnp.float32(0.5), a, y, u)
+        return lowered.compile().memory_analysis()
+
+
+def compile_mc_stream(
+    candidates: Sequence,
+    n_classes: int,
+    key: jax.Array,
+    method: str = "iid",
+    mc_chunk: int = MC_STREAM_CHUNK,
+    sigma_scale: float = 1.0,
+    is_scale: float = 2.0,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> StreamingMCMachine:
+    """Lower per-pair candidates to a flat-memory streaming MC machine.
+
+    ``candidates``/``n_classes``/``key`` as :func:`compile_variants` —
+    the key is split once per pair exactly the same way, and variant
+    ``v`` of pair ``p`` derives from ``fold_in(keys[p], v)``, so the
+    stream is a pure function of ``(key, v)``: chunk-size invariant,
+    restartable, and shardable.  (The *sequence* of draws differs from
+    :func:`compile_variants`'s one-shot ``(V, ...)`` sampling — the
+    streamed engine's dense oracle is its own
+    :meth:`StreamingMCMachine.pair_bits_dense`, not the old machine.)
+
+    ``method``: ``'iid'`` Gaussian draws, ``'sobol'`` scrambled Sobol' /
+    ``'stratified'`` Latin-hypercube over the reduced mismatch space
+    (inverse-CDF to normals in-graph), or ``'is'`` importance sampling
+    with draws widened by ``is_scale`` and self-normalized weights
+    (DESIGN.md §10.3).  Streaming always samples WITHOUT the nominal
+    row — parity with the nominal machine is a tolerance contract via
+    the accumulators, not a bit-identity row (the dense machines keep
+    that contract).
+    """
+    pairs = class_pairs(n_classes)
+    if len(candidates) != len(pairs):
+        raise ValueError(
+            f"{len(candidates)} candidate pairs for {n_classes} classes "
+            f"(expected {len(pairs)})")
+    p = len(pairs)
+    keys = jax.random.split(key, p)
+    specs = []
+    analog_clfs: dict[int, AnalogBinaryClassifier] = {}
+    analog_rows: dict[int, int] = {}
+    for i, (lin_clf, rbf_clf) in enumerate(candidates):
+        specs.append(_lower_classifier(i, lin_clf))
+        specs.append(_lower_classifier(p + i, rbf_clf))
+        if isinstance(rbf_clf, AnalogBinaryClassifier):
+            analog_clfs[p + i] = rbf_clf
+            analog_rows[p + i] = i
+    # Row i of the one split table belongs to analog pair p+i (the
+    # compile_variants convention).  Gather each pair's key here, ONCE,
+    # so the per-bank constant builder never re-reads the table.
+    analog_keys = {q: keys[i] for q, i in analog_rows.items()}
+    linear_groups, kernel_groups = _group_specs(specs)
+    linear_banks = [_LinearBank.build(g) for g in linear_groups]
+    kernel_banks, stream_consts = [], []
+    u_offset = 0
+    for g in kernel_groups:
+        bank = _KernelBank.build(g)
+        kernel_banks.append(bank)
+        in_group = [s.pair in analog_clfs for s in g]
+        if not any(in_group):
+            stream_consts.append(None)
+            continue
+        if not all(in_group):  # cannot happen: 'hw' curves group apart
+            raise ValueError(
+                "bank mixes variant and variant-free lanes; grouping bug")
+        bc = _stream_bank_const(
+            g, analog_clfs, analog_keys, int(bank.sv.shape[1]),
+            int(bank.sv.shape[2]), u_offset)
+        u_offset += bc.u_width
+        stream_consts.append(bc)
+    return StreamingMCMachine(
+        n_classes, linear_banks, kernel_banks, stream_consts,
+        method=method, mc_chunk=mc_chunk, sigma_scale=sigma_scale,
+        is_scale=is_scale, key_data=_key_data(key),
+        use_pallas=use_pallas, interpret=interpret)
+
+
+def _stream_bank_const(group, analog_clfs, analog_keys, m_max: int, d: int,
+                       u_offset: int) -> _StreamBankConst:
+    """Build one bank's generation constants from its lowered specs."""
+    n_pairs_bank = len(group)
+    dva = np.zeros((n_pairs_bank, m_max), np.float32)
+    pos = np.zeros((n_pairs_bank, m_max), np.float32)
+    neg = np.zeros((n_pairs_bank, m_max), np.float32)
+    valid = np.zeros((n_pairs_bank, m_max), np.float32)
+    grids, curves, lefts, rights, pair_key_list = [], [], [], [], []
+    params = None
+    true_dim = 0
+    for j, spec in enumerate(group):
+        clf = analog_clfs[spec.pair]
+        if params is None:
+            params = clf.hw.params
+        elif clf.hw.params != params:
+            raise ValueError(
+                "analog candidates in one bank carry different "
+                "CircuitParams; the streaming generator assumes one "
+                "process corner per bank")
+        m = clf.n_support
+        dva[j, :m] = np.asarray(clf.hw.alpha_control_voltage(
+            jnp.asarray(clf.alpha_hw, jnp.float32)), np.float32)
+        pos[j, :m] = (clf.support_y > 0).astype(np.float32)
+        neg[j, :m] = (clf.support_y <= 0).astype(np.float32)
+        valid[j, :m] = 1.0
+        order = np.argsort(clf.hw.dva_grid)
+        grids.append(np.asarray(clf.hw.dva_grid, np.float32)[order])
+        curves.append(np.asarray(clf.hw.alpha_curve, np.float32)[order])
+        lefts.append(curves[-1][0])
+        rights.append(curves[-1][-1])
+        pair_key_list.append(analog_keys[spec.pair])
+        true_dim += variant_dim(m, clf.n_features)
+    if len({g.shape[0] for g in grids}) != 1:
+        raise ValueError("analog alpha sweeps in one bank differ in length")
+    return _StreamBankConst(
+        pair_keys=jnp.stack(pair_key_list),
+        dva=jnp.asarray(dva), pos_mask=jnp.asarray(pos),
+        neg_mask=jnp.asarray(neg), slot_valid=jnp.asarray(valid),
+        alpha_grid=jnp.asarray(np.stack(grids)),
+        alpha_curve=jnp.asarray(np.stack(curves)),
+        alpha_left=jnp.asarray(np.asarray(lefts, np.float32)),
+        alpha_right=jnp.asarray(np.asarray(rights, np.float32)),
+        params=params, u_offset=u_offset,
+        u_width=n_pairs_bank * variant_dim(m_max, d), true_dim=true_dim)

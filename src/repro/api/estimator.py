@@ -58,16 +58,19 @@ import jax
 import numpy as np
 
 from repro.api.compiled import (
+    MC_STREAM_CHUNK,
     CompiledMachine,
     MonteCarloMachine,
+    StreamingMCMachine,
     _key_data,
     _strip_ext,
     compile_candidates,
     compile_machine,
+    compile_mc_stream,
     compile_variants,
 )
 from repro.core import dse as dse_mod
-from repro.core import hwcost, selection
+from repro.core import hwcost, mcstream, selection
 from repro.core.analog import (
     AnalogBinaryClassifier,
     AnalogRBFModel,
@@ -121,6 +124,51 @@ class MonteCarloResult:
     def yield_at(self, accuracy_floor: float) -> float:
         """Fraction of instances at or above the accuracy floor."""
         return float(np.mean(self.accuracy >= accuracy_floor))
+
+
+#: Dense Monte-Carlo above this many variants silently switches to the
+#: flat-memory streaming engine (DESIGN.md §10): the dense ``(V, n, P, 2)``
+#: bit tensor it would otherwise materialize stops fitting long before 10^6.
+STREAM_AUTO_VARIANTS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingMCResult:
+    """Streamed tail-yield statistics of one assignment (DESIGN.md §10).
+
+    Produced by :meth:`MixedKernelSVM.monte_carlo` when the streaming
+    engine runs (``method=`` given, or ``n_variants`` above
+    :data:`STREAM_AUTO_VARIANTS`).  Unlike :class:`MonteCarloResult` the
+    per-variant accuracies are never materialized: ``mean``/``std`` are
+    streamed Welford moments, ``yield_`` carries a ``(yield_lo,
+    yield_hi)`` confidence interval, and quantiles come from a fixed-grid
+    histogram sketch (exact to the accuracy grid of the validation set).
+    """
+
+    mean: float
+    std: float
+    worst: float              # streamed min over sampled variants
+    best: float
+    yield_: float             # point estimate (IS: self-normalized)
+    yield_lo: float           # lower/upper confidence bound at `confidence`
+    yield_hi: float
+    n_eff: float              # effective sample size (== V unless IS)
+    accuracy_floor: float
+    confidence: float
+    ci: str                   # "wilson" | "clopper-pearson"
+    n_variants: int
+    method: str               # "iid" | "sobol" | "stratified" | "is"
+    sigma_scale: float
+    is_scale: float
+    assignment: list
+    key_data: list
+    hist: np.ndarray          # (n_bins,) weighted accuracy histogram
+
+    def quantile(self, q) -> np.ndarray:
+        """Accuracy quantile(s) from the streamed histogram sketch."""
+        qs = np.atleast_1d(np.asarray(q, np.float64))
+        out = mcstream.hist_quantiles(self.hist[None, :], qs)[:, 0]
+        return out if np.ndim(q) else out[0]
 
 
 class MixedKernelSVM:
@@ -191,6 +239,7 @@ class MixedKernelSVM:
         # sampling config (cached per fit), plus the serialized MC config
         # of the last variation-aware sweep (key data, n_variants, ...).
         self._mc_machines: dict[tuple, MonteCarloMachine] = {}
+        self._stream_machines: dict[tuple, StreamingMCMachine] = {}
         self.mc_state_: Optional[dict] = None
 
     # -- fitting --------------------------------------------------------------
@@ -236,6 +285,7 @@ class MixedKernelSVM:
         self._candidate_cache = None
         self._candidate_machine = None
         self._mc_machines = {}
+        self._stream_machines = {}
 
     def _check_fitted(self) -> None:
         if self._banks is None:
@@ -273,6 +323,7 @@ class MixedKernelSVM:
         area_budget: Optional[float] = None,
         power_budget: Optional[float] = None,
         yield_floor: Optional[float] = None,
+        yield_confidence: Optional[float] = 0.95,
     ) -> CompiledMachine:
         """Lower ``target``'s bank to one batched jit inference path.
 
@@ -288,7 +339,12 @@ class MixedKernelSVM:
         sweep, ``n_variants=...``) switches to the robust rule: the
         CHEAPEST budget-feasible design whose yield — fraction of sampled
         fabricated instances at or above the sweep's accuracy floor —
-        meets the floor (``SweepResult.select``).
+        meets the floor (``SweepResult.select``).  The gate is the
+        Wilson LOWER confidence bound of the sampled yield at
+        ``yield_confidence`` (default 95%), so a design only deploys when
+        the evidence — not just the point estimate — supports the floor;
+        ``yield_confidence=None`` restores the historical point-estimate
+        rule.
         """
         if area_budget is None and power_budget is None \
                 and yield_floor is None:
@@ -307,10 +363,13 @@ class MixedKernelSVM:
                 "before deploying against a budget")
         i = self.pareto_.select(area_budget=area_budget,
                                 power_budget=power_budget,
-                                yield_floor=yield_floor)
+                                yield_floor=yield_floor,
+                                confidence=yield_confidence)
         self.assignment_ = self.pareto_.kernel_map(i)
         if yield_floor is not None and self.mc_state_ is not None:
             self.mc_state_["yield_floor"] = float(yield_floor)
+            self.mc_state_["yield_confidence"] = (
+                None if yield_confidence is None else float(yield_confidence))
         return self.deploy_assignment(self.assignment_)
 
     # -- kernel-assignment design space (DESIGN.md §5) -------------------------
@@ -440,6 +499,29 @@ class MixedKernelSVM:
                 use_pallas=self.use_pallas, interpret=self.interpret)
         return self._mc_machines[cache_key]
 
+    def stream_machine(
+        self,
+        key: jax.Array,
+        method: str = "iid",
+        mc_chunk: int = MC_STREAM_CHUNK,
+        sigma_scale: float = 1.0,
+        is_scale: float = 2.0,
+    ) -> StreamingMCMachine:
+        """The flat-memory streaming MC engine for this estimator's
+        candidates (DESIGN.md §10): one compiled donated step regardless
+        of the variant count.  Cached per sampling config so repeated
+        calls with one config compile once."""
+        self._check_fitted()
+        cache_key = (_key_data(key).tobytes(), str(method), int(mc_chunk),
+                     float(sigma_scale), float(is_scale))
+        if cache_key not in self._stream_machines:
+            self._stream_machines[cache_key] = compile_mc_stream(
+                self._candidates(), self.n_classes_, key=key,
+                method=method, mc_chunk=mc_chunk, sigma_scale=sigma_scale,
+                is_scale=is_scale, use_pallas=self.use_pallas,
+                interpret=self.interpret)
+        return self._stream_machines[cache_key]
+
     def monte_carlo(
         self,
         x: np.ndarray,
@@ -448,15 +530,40 @@ class MixedKernelSVM:
         key: Optional[jax.Array] = None,
         sigma_scale: float = 1.0,
         assignment: Optional[list] = None,
-    ) -> "MonteCarloResult":
-        """Per-variant accuracy of ONE deployed assignment under sampled
-        process variation.
+        method: Optional[str] = None,
+        mc_chunk: Optional[int] = None,
+        accuracy_floor: Optional[float] = None,
+        is_scale: float = 2.0,
+        confidence: float = 0.95,
+        ci: str = "wilson",
+        mesh=None,
+    ) -> object:
+        """Accuracy of ONE deployed assignment under sampled process
+        variation.
 
         ``assignment`` defaults to the estimator's current circuit
         assignment (``assignment_`` from a budgeted/yield deploy if set,
         else the Algorithm-1 kernel map).  ``key`` is the explicit
         mismatch key (default ``PRNGKey(self.seed)``); the key data is
         recorded in the result for reproducibility.
+
+        Two engines sit behind this call (DESIGN.md §10):
+
+        * **dense** (default for small ``n_variants``): one jitted
+          forward materializes every variant's pair bits and returns a
+          :class:`MonteCarloResult` with the raw ``(V,)`` accuracy
+          vector (variant 0 nominal).
+        * **streaming** (``method="iid" | "sobol" | "stratified" |
+          "is"``, or any ``n_variants`` above
+          :data:`STREAM_AUTO_VARIANTS`): fixed-shape chunks of
+          ``mc_chunk`` variants are generated on the fly and folded into
+          constant-size accumulators, so ``n_variants=10**6`` runs in
+          the same device memory as 64.  Returns a
+          :class:`StreamingMCResult` with Wilson/Clopper-Pearson yield
+          bounds against ``accuracy_floor`` (default: two points below
+          the nominal circuit accuracy on ``(x, y)``).  ``mesh`` (from
+          :func:`repro.launch.mesh.make_variant_mesh`) shards each chunk
+          over a 1-D ``"variants"`` device axis.
         """
         self._check_fitted()
         if key is None:
@@ -465,16 +572,46 @@ class MixedKernelSVM:
             assignment = self.assignment_ or self.kernel_map_
         kmap = [k if isinstance(k, str) else ("rbf" if k else "linear")
                 for k in list(assignment)]
-        machine = self.monte_carlo_machine(n_variants, key,
-                                           sigma_scale=sigma_scale)
-        bits3 = machine.pair_bits(np.asarray(x))
+        streaming = (method is not None or mc_chunk is not None
+                     or mesh is not None
+                     or int(n_variants) > STREAM_AUTO_VARIANTS)
+        if not streaming:
+            machine = self.monte_carlo_machine(n_variants, key,
+                                               sigma_scale=sigma_scale)
+            bits3 = machine.pair_bits(np.asarray(x))
+            a = dse_mod.assignment_from_kernel_map(kmap)
+            acc = dse_mod.assignment_accuracies_mc(
+                bits3, a[None, :], np.asarray(y), self.n_classes_)[:, 0]
+            return MonteCarloResult(
+                accuracy=acc, assignment=kmap, n_variants=int(n_variants),
+                sigma_scale=float(sigma_scale),
+                key_data=np.asarray(machine.key_data).tolist())
+        else:
+            if accuracy_floor is None:
+                accuracy_floor = self.score(x, y, target="circuit") - 0.02
+            sm = self.stream_machine(
+                key, method=method or "iid",
+                mc_chunk=MC_STREAM_CHUNK if mc_chunk is None else mc_chunk,
+                sigma_scale=sigma_scale, is_scale=is_scale)
         a = dse_mod.assignment_from_kernel_map(kmap)
-        acc = dse_mod.assignment_accuracies_mc(
-            bits3, a[None, :], np.asarray(y), self.n_classes_)[:, 0]
-        return MonteCarloResult(
-            accuracy=acc, assignment=kmap, n_variants=int(n_variants),
-            sigma_scale=float(sigma_scale),
-            key_data=np.asarray(machine.key_data).tolist())
+        out = sm.stream(np.asarray(x), np.asarray(y), a[None, :],
+                        n_variants=int(n_variants),
+                        accuracy_floor=float(accuracy_floor),
+                        mesh=mesh, confidence=confidence, ci=ci)
+        return StreamingMCResult(
+            mean=float(out["mean"][0]), std=float(out["std"][0]),
+            worst=float(out["worst"][0]), best=float(out["best"][0]),
+            yield_=float(out["yield"][0]),
+            yield_lo=float(out["yield_lo"][0]),
+            yield_hi=float(out["yield_hi"][0]),
+            n_eff=float(out["n_eff"]),
+            accuracy_floor=float(accuracy_floor),
+            confidence=float(confidence), ci=str(out["ci"]),
+            n_variants=int(n_variants), method=sm.method,
+            sigma_scale=float(sigma_scale), is_scale=float(is_scale),
+            assignment=kmap,
+            key_data=np.asarray(sm.key_data).tolist(),
+            hist=np.asarray(out["hist"][0]))
 
     def deploy_assignment(
         self, assignment: Optional[list] = None

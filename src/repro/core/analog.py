@@ -164,9 +164,95 @@ class VariantSet:
     def n_features(self) -> int:
         return int(self.gauss.shape[2])
 
+    def iter_chunks(self, chunk_size: int):
+        """Yield ``(start, VariantSet)`` slices of at most ``chunk_size``
+        variants — the host-side streaming view of a materialized set.
+
+        The tail chunk keeps its natural (smaller) length; callers that
+        need one compiled shape pad it themselves (the streaming machine
+        never materializes a ``VariantSet`` this large in the first place
+        — it draws chunks on the fly with :func:`sample_variant_chunk`).
+        """
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        for start in range(0, self.n_variants, chunk_size):
+            sl = slice(start, start + chunk_size)
+            yield start, VariantSet(gauss=self.gauss[sl],
+                                    alpha=self.alpha[sl],
+                                    comparator=self.comparator[sl])
+
 
 jax.tree_util.register_dataclass(
     VariantSet, data_fields=["gauss", "alpha", "comparator"], meta_fields=[])
+
+
+def variant_dim(n_support: int, n_features: int) -> int:
+    """Flat mismatch dimension of ONE classifier circuit instance:
+    ``m*d`` Gaussian cells x 4 offsets + ``m`` alpha multipliers x 2
+    offsets + 1 comparator offset.  The per-pair slice width of the
+    QMC/importance-sampling uniform block (DESIGN.md §10)."""
+    return (n_support * n_features * N_GAUSS_OFFSETS
+            + n_support * N_ALPHA_OFFSETS + 1)
+
+
+def variant_set_from_flat(
+    z: jnp.ndarray, n_support: int, n_features: int,
+    sigma_scale: float = 1.0,
+) -> VariantSet:
+    """Reshape flat standard-normal draws ``z (..., D)`` into a
+    :class:`VariantSet` with the same leading dims.
+
+    ``D = variant_dim(n_support, n_features)``; the layout is
+    ``[gauss (m*d*4) | alpha (m*2) | comparator (1)]``.  This is how the
+    QMC path turns one scrambled-Sobol row into a variant: every mismatch
+    dimension owns a fixed coordinate of the low-discrepancy point set.
+    """
+    m, d = int(n_support), int(n_features)
+    ng = m * d * N_GAUSS_OFFSETS
+    na = m * N_ALPHA_OFFSETS
+    if z.shape[-1] != ng + na + 1:
+        raise ValueError(
+            f"flat mismatch block has {z.shape[-1]} dims, expected "
+            f"{ng + na + 1} for m={m}, d={d}")
+    lead = z.shape[:-1]
+    s = jnp.float32(sigma_scale)
+    return VariantSet(
+        gauss=s * z[..., :ng].reshape(lead + (m, d, N_GAUSS_OFFSETS)),
+        alpha=s * z[..., ng:ng + na].reshape(lead + (m, N_ALPHA_OFFSETS)),
+        comparator=s * z[..., ng + na])
+
+
+def sample_variant_chunk(
+    key: jax.Array,
+    v_idx: jnp.ndarray,
+    n_support: int,
+    n_features: int,
+    sigma_scale: float = 1.0,
+) -> VariantSet:
+    """Draw mismatch for the *global* variant indices ``v_idx (B,)`` only.
+
+    The streaming generation contract (DESIGN.md §10): variant ``v``'s
+    offsets are a pure function of ``(key, v)`` via
+    ``fold_in(key, v) -> split(3)`` — never of the chunk size or position —
+    so a V=10^6 run never materializes more than one chunk of draws and
+    re-chunking the same key reproduces the identical stream.  ``fold_in``
+    derives a fresh key per index (it does not consume ``key``); the
+    3-way split mirrors :func:`sample_variant_offsets`'s independent
+    gauss/alpha/comparator streams.  Traceable: ``v_idx`` may be a traced
+    int array inside the streaming machine's jitted chunk step.
+    """
+    s = jnp.float32(sigma_scale)
+
+    def draw(idx):
+        kg, ka, kc = jax.random.split(jax.random.fold_in(key, idx), 3)
+        return VariantSet(
+            gauss=s * jax.random.normal(
+                kg, (n_support, n_features, N_GAUSS_OFFSETS)),
+            alpha=s * jax.random.normal(
+                ka, (n_support, N_ALPHA_OFFSETS)),
+            comparator=s * jax.random.normal(kc, ()))
+
+    return jax.vmap(draw)(jnp.asarray(v_idx))
 
 
 def sample_variant_offsets(

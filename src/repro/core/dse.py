@@ -42,6 +42,7 @@ design meeting the yield spec (the rule behind
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional, Sequence
 
@@ -49,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hwcost
+from repro.core import hwcost, mcstream
 from repro.core.ovo import build_encoder_table, class_pairs
 
 #: Exhaustive enumeration bound: 2^12 = 4096 assignments, matching the
@@ -179,10 +180,42 @@ def assignment_accuracies(
     return out
 
 
-#: Assignment chunk of the Monte-Carlo encoder sweep: bounds the
+#: Default assignment chunk of the Monte-Carlo encoder sweep: bounds the
 #: ``(V, n, CHUNK)`` codes tensor when the variant axis multiplies the
-#: exhaustive space (64 x 400 x 512 int32 ~ 50 MB).
+#: exhaustive space (64 x 400 x 512 int32 ~ 50 MB).  A config knob, not a
+#: law: callers pass ``mc_chunk=`` to ``assignment_accuracies_mc`` (and
+#: through ``MixedKernelSVM.monte_carlo(mc_chunk=)``) to trade the
+#: in-graph codes-tensor footprint against per-chunk launch overhead.
 MC_CHUNK = 512
+
+
+@functools.partial(jax.jit, static_argnames=("mc_chunk",))
+def _sweep_encoder_mc_chunked(bits3, a, y, table, weights, *, mc_chunk):
+    """The MC encoder sweep with the assignment axis chunked IN-GRAPH.
+
+    Replaces the old host-side chunk loop (per-chunk ``np.concatenate``
+    padding + one device dispatch per chunk): the pad-to-multiple copy and
+    the chunk iteration now live inside ONE jitted program.  ``lax.map``
+    runs the chunks sequentially with a loop-carried output buffer, so the
+    live codes tensor stays ``(V, n, mc_chunk)`` — the same memory bound
+    as before, minus S/mc_chunk host round-trips.  (Donating ``a`` here
+    would be dropped by XLA — no output shares its shape/dtype — so the
+    buffer-reuse story is the ``lax.map`` carry, not argument donation.)
+    """
+    s = a.shape[0]
+    pad = -s % mc_chunk
+    if pad:
+        a = jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])])
+    chunks = a.reshape(-1, mc_chunk, a.shape[1])      # (n_chunks, C, P)
+
+    def one(chunk):
+        return jax.vmap(_encoder_accuracy,
+                        in_axes=(0, None, None, None, None))(
+            bits3, chunk, y, table, weights)          # (V, C)
+
+    acc = jax.lax.map(one, chunks)                    # (n_chunks, V, C)
+    return jnp.moveaxis(acc, 1, 0).reshape(bits3.shape[0], -1)[:, :s]
 
 
 def assignment_accuracies_mc(
@@ -191,14 +224,16 @@ def assignment_accuracies_mc(
     y: np.ndarray,
     n_classes: int,
     max_table_bits: int = MAX_EXHAUSTIVE_PAIRS,
+    mc_chunk: Optional[int] = None,
 ) -> np.ndarray:
     """Validation accuracy of every (variant, assignment): ``(V, S)`` f64.
 
     ``bits3`` is the ``(V, n, P, 2)`` per-variant candidate-bit tensor of
     ``MonteCarloMachine.pair_bits``.  The bit-recombination GEMM is batched
     over the leading variant axis — ONE jitted program scores the whole
-    ``V x S`` grid (chunked over assignments beyond ``MC_CHUNK`` to bound
-    the codes tensor; chunks are padded to one compiled shape).
+    ``V x S`` grid.  Beyond ``mc_chunk`` assignments (default
+    :data:`MC_CHUNK`) the assignment axis is chunked *inside* the program
+    (``_sweep_encoder_mc_chunked``) to bound the codes tensor.
     """
     bits3 = np.asarray(bits3, np.int32)
     if bits3.ndim != 4:
@@ -209,22 +244,19 @@ def assignment_accuracies_mc(
     if a.shape[1] != n_pairs:
         raise ValueError(
             f"assignments have {a.shape[1]} pairs, bits tensor has {n_pairs}")
+    if mc_chunk is None:
+        mc_chunk = MC_CHUNK
+    if mc_chunk < 1:
+        raise ValueError(f"mc_chunk must be >= 1, got {mc_chunk}")
     if n_pairs <= max_table_bits:
         table = jnp.asarray(build_encoder_table(n_classes))
         weights = jnp.asarray((1 << np.arange(n_pairs)).astype(np.int32))
-        if a.shape[0] <= MC_CHUNK:
+        if a.shape[0] <= mc_chunk:
             return np.asarray(
                 _sweep_encoder_mc(bits3, a, y, table, weights), np.float64)
-        out = np.empty((bits3.shape[0], a.shape[0]), np.float64)
-        for lo in range(0, a.shape[0], MC_CHUNK):
-            chunk = a[lo: lo + MC_CHUNK]
-            pad = MC_CHUNK - chunk.shape[0]
-            if pad:
-                chunk = np.concatenate([chunk, np.repeat(a[:1], pad, 0)])
-            acc = np.asarray(_sweep_encoder_mc(bits3, chunk, y, table,
-                                               weights))
-            out[:, lo: lo + MC_CHUNK] = acc[:, : MC_CHUNK - pad or None]
-        return out
+        return np.asarray(
+            _sweep_encoder_mc_chunked(bits3, a, y, table, weights,
+                                      mc_chunk=mc_chunk), np.float64)
     va, vb = _vote_matrices(n_classes)
     va, vb = jnp.asarray(va), jnp.asarray(vb)
     # The vmapped votes program materializes a (V, n, CHUNK, P) selected-
@@ -242,19 +274,38 @@ def assignment_accuracies_mc(
     return out
 
 
-def mc_statistics(acc_vs: np.ndarray, accuracy_floor: float) -> dict:
+def mc_statistics(
+    acc_vs: np.ndarray,
+    accuracy_floor: float,
+    confidence: float = mcstream.DEFAULT_CONFIDENCE,
+    ci: str = "wilson",
+) -> dict:
     """Per-assignment robustness statistics over the variant axis.
 
     ``acc_vs (V, S)`` -> dict of ``(S,)`` arrays: ``mean``, ``std``
-    (population), ``worst`` (min over variants) and ``yield`` — the
-    fraction of variants whose accuracy meets ``accuracy_floor``.
+    (population), ``worst`` (min over variants), ``yield`` — the fraction
+    of variants whose accuracy meets ``accuracy_floor`` — and
+    ``yield_lo``/``yield_hi``, the two-sided binomial bounds on that
+    fraction at ``confidence`` (``ci``: ``'wilson'`` score interval or the
+    exact ``'clopper-pearson'``).  The bounds are what keep a V=64 run
+    honest: a point-estimate yield of 1.0 over 64 draws is compatible with
+    a true yield of ~0.94, and the interval says so.
     """
     acc_vs = np.asarray(acc_vs, np.float64)
+    p = (acc_vs >= accuracy_floor).mean(axis=0)
+    n = acc_vs.shape[0]
+    if ci == "clopper-pearson":
+        lo, hi = mcstream.clopper_pearson_bounds(p, n, confidence)
+    else:
+        lo, hi = mcstream.wilson_bounds(p, n, confidence)
     return {
         "mean": acc_vs.mean(axis=0),
         "std": acc_vs.std(axis=0),
         "worst": acc_vs.min(axis=0),
-        "yield": (acc_vs >= accuracy_floor).mean(axis=0),
+        "yield": p,
+        "yield_lo": lo,
+        "yield_hi": hi,
+        "confidence": float(confidence),
     }
 
 
@@ -331,6 +382,9 @@ class SweepResult:
     acc_std: Optional[np.ndarray] = None       # (S,)
     acc_worst: Optional[np.ndarray] = None     # (S,)
     yield_: Optional[np.ndarray] = None        # (S,) frac >= accuracy_floor
+    yield_lo_: Optional[np.ndarray] = None     # (S,) binomial LCB on yield
+    yield_hi_: Optional[np.ndarray] = None     # (S,) binomial UCB on yield
+    confidence: Optional[float] = None         # two-sided CI level
     accuracy_floor: Optional[float] = None
     n_variants: Optional[int] = None
     sigma_scale: Optional[float] = None
@@ -381,6 +435,7 @@ class SweepResult:
         area_budget: Optional[float] = None,
         power_budget: Optional[float] = None,
         yield_floor: Optional[float] = None,
+        confidence: Optional[float] = None,
     ) -> int:
         """Deployment rule.
 
@@ -394,6 +449,12 @@ class SweepResult:
         power then higher mean accuracy.  The different objective order is
         deliberate: once the yield spec is met, a flexible-electronics
         deployment is cost-driven.
+
+        ``confidence``: None (default) gates on the point-estimate yield —
+        the historical rule.  A float (e.g. 0.95) gates on the Wilson
+        *lower confidence bound* at that level instead, so a small-V sweep
+        cannot clear a floor its sample size does not statistically
+        support (``MixedKernelSVM.deploy`` passes this by default).
         """
         if yield_floor is None:
             idx = self.front
@@ -418,18 +479,26 @@ class SweepResult:
                 "DesignSpace.sweep(mc_machine=...) / "
                 "est.pareto(..., n_variants=...) first")
         idx = self.robust_front
-        ok = self.yield_[idx] >= yield_floor
+        if confidence is None:
+            gate = self.yield_
+        else:
+            gate, _ = mcstream.wilson_bounds(
+                self.yield_, int(self.n_variants), confidence)
+        ok = gate[idx] >= yield_floor
         if area_budget is not None:
             ok &= self.area[idx] <= area_budget
         if power_budget is not None:
             ok &= self.power[idx] <= power_budget
         if not ok.any():
-            best = idx[np.argmax(self.yield_[idx])]
+            best = idx[np.argmax(gate[idx])]
+            bound = ("yield" if confidence is None
+                     else f"yield {confidence:.0%}-LCB")
             raise ValueError(
-                f"no robust-front point meets yield >= {yield_floor} "
-                f"within budget (best available yield "
-                f"{self.yield_[best]:.3f} at accuracy floor "
-                f"{self.accuracy_floor}, area {self.area[best]:.4f} mm^2)")
+                f"no robust-front point meets {bound} >= {yield_floor} "
+                f"within budget (best available {bound} "
+                f"{gate[best]:.3f} from {self.n_variants} variants at "
+                f"accuracy floor {self.accuracy_floor}, area "
+                f"{self.area[best]:.4f} mm^2)")
         cand = idx[ok]
         order = np.lexsort((-self.acc_mean[cand], self.power[cand],
                             self.area[cand]))
@@ -456,6 +525,9 @@ class SweepResult:
                     acc_worst=float(self.acc_worst[i]),
                     yield_frac=float(self.yield_[i]),
                 )
+                if self.yield_lo_ is not None:
+                    entry.update(yield_lo=float(self.yield_lo_[i]),
+                                 yield_hi=float(self.yield_hi_[i]))
             out.append(entry)
         return out
 
@@ -653,6 +725,9 @@ class DesignSpace:
             result.acc_std = stats["std"]
             result.acc_worst = stats["worst"]
             result.yield_ = stats["yield"]
+            result.yield_lo_ = stats["yield_lo"]
+            result.yield_hi_ = stats["yield_hi"]
+            result.confidence = stats["confidence"]
             result.accuracy_floor = float(accuracy_floor)
             result.n_variants = int(mc_machine.n_variants)
             result.sigma_scale = float(mc_machine.sigma_scale)

@@ -44,5 +44,22 @@ def make_trainer_mesh(n_devices: int | None = None):
     return jax.make_mesh((n,), ("pairgrid",), **_axis_kwargs(1))
 
 
+#: Mesh axis the streaming Monte-Carlo chunk shards over (DESIGN.md §10).
+VARIANTS_AXIS = "variants"
+
+
+def make_variant_mesh(n_devices: int | None = None):
+    """1-D mesh for the streaming Monte-Carlo engine's shard_map leg.
+
+    The single axis is named ``"variants"`` (:data:`VARIANTS_AXIS`): each
+    device generates and scores its slice of a variant chunk, the
+    psum-able accumulator sums merge with one collective per chunk, and
+    the running :class:`~repro.core.mcstream.StreamStats` state stays
+    replicated (DESIGN.md §10.4).
+    """
+    n = int(n_devices) if n_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), (VARIANTS_AXIS,), **_axis_kwargs(1))
+
+
 def dp_axes(multi_pod: bool) -> tuple:
     return ("pod", "data") if multi_pod else ("data",)

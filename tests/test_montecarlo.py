@@ -29,7 +29,7 @@ from repro.api import (
     compile_candidates,
     compile_variants,
 )
-from repro.core import dse
+from repro.core import dse, mcstream
 from repro.data import datasets
 
 N_VARIANTS = 64  # the acceptance setting
@@ -256,12 +256,26 @@ def test_monte_carlo_result(balance):
 def test_yield_deploy_and_roundtrip(balance, mc_sweep, tmp_path):
     ds, est = balance
     sw = mc_sweep
-    floor = float(sw.yield_[sw.robust_front].max())
+    # historical point-estimate rule, explicitly requested
+    pt_floor = float(sw.yield_[sw.robust_front].max())
+    est.deploy("circuit", yield_floor=pt_floor, yield_confidence=None)
+    i = sw.find(dse.assignment_from_kernel_map(est.assignment_))
+    assert sw.yield_[i] >= pt_floor
+    assert est.mc_state_["yield_confidence"] is None
+    # default rule: the Wilson LOWER bound at 95% must clear the floor —
+    # a point estimate alone no longer deploys (evidence-backed yield)
+    lcbs = [mcstream.wilson_bounds(float(sw.yield_[j]), N_VARIANTS)[0]
+            for j in sw.robust_front]
+    floor = float(max(lcbs))
+    with pytest.raises(ValueError, match="LCB"):
+        est.deploy("circuit", yield_floor=pt_floor)  # LCB < point est.
     machine = est.deploy("circuit", yield_floor=floor)
     assert est.assignment_ is not None
     i = sw.find(dse.assignment_from_kernel_map(est.assignment_))
-    assert sw.yield_[i] >= floor
+    assert mcstream.wilson_bounds(
+        float(sw.yield_[i]), N_VARIANTS)[0] >= floor - 1e-12
     assert est.mc_state_["yield_floor"] == pytest.approx(floor)
+    assert est.mc_state_["yield_confidence"] == pytest.approx(0.95)
     # chosen assignment + MC seed/config survive save/load
     path = os.path.join(tmp_path, "m")
     est.save(path)
