@@ -2,9 +2,10 @@
 roofline.  Prints ``name,us_per_call,derived`` style CSV blocks.
 
 ``--json PATH`` additionally aggregates every machine-readable sub-result
-(currently fig4, svm_infer, svm_train, serving, pareto and montecarlo —
-including the streaming V=64..1e6 scaling curve; more as benchmarks grow
-JSON output) into one file suitable for BENCH_*.json trajectory tracking.
+(currently fig4, svm_infer, svm_train, serving, scale, pareto and
+montecarlo — including the streaming V=64..1e6 scaling curve; more as
+benchmarks grow JSON output) into one file suitable for BENCH_*.json
+trajectory tracking.
 
 Table2 / fig5 / pareto share per-dataset Algorithm-1 fits through
 ``benchmarks._fit_cache`` — each dataset is fitted once per process.
@@ -68,6 +69,10 @@ def main() -> None:
     print("\n== Serving: streaming engine vs naive per-request dispatch ==")
     from benchmarks import serving
     results["serving"] = serving.run()
+
+    print("\n== Scale-out: K=12 DAG front, lane ladder, portfolio DSE ==")
+    from benchmarks import scale
+    results["scale"] = scale.run()
 
     print("\n== Kernel micro-bench (Pallas interpret vs jnp oracle) ==")
     from benchmarks import kernelbench

@@ -131,6 +131,33 @@ def build_registry() -> list[EntryPoint]:
         check_donation=True, jit_fn=fleet._labels_jit,
         donation_args=(x_in, idx_in)))
 
+    # -- DAG decision front (O(K) pair evaluations; DESIGN.md §11) ----------
+    machine_dag = api.compile_machine([lin, rbf, hw_clf], n_classes=3,
+                                      decider="dag")
+    entries.append(EntryPoint(
+        symbol="CompiledMachine._labels_dag",
+        path="src/repro/api/compiled.py",
+        fn=machine_dag._labels_dag, args=(x_in,)))
+
+    # -- portfolio / streaming votes scoring (P > MAX_TABLE_BITS) -----------
+    # The pair-chunked recombination every large-P scorer shares: the DSE
+    # portfolio search, assignment_accuracies past the table limit, and
+    # the streaming MC engine's votes path.
+    from repro.core import dse
+
+    k6, p15 = 6, 15
+    va6, vb6 = dse._vote_matrices(k6)
+    rngb = np.random.default_rng(3)
+    votes_args = (
+        jnp.asarray(rngb.integers(0, 2, size=(2, 8, p15, 2)), jnp.int32),
+        jnp.asarray(rngb.integers(0, 2, size=(3, p15)), jnp.int32),
+        jnp.zeros((8,), jnp.int32),
+        jnp.asarray(va6), jnp.asarray(vb6),
+    )
+    entries.append(EntryPoint(
+        symbol="dse._votes_accuracy_paired", path="src/repro/core/dse.py",
+        fn=dse._votes_accuracy_paired, args=votes_args))
+
     # -- trainer family program (jit + donate_argnames=('y',)) --------------
     p, n, dd, g, c, f = 2, 32, 3, 2, 2, 2
     fam_args = (

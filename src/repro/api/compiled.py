@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dse
 from repro.core import kernels as kern
 from repro.core import mcstream, quant
 from repro.core.analog import (
@@ -65,19 +66,21 @@ from repro.core.analog import (
     variant_transfer_params,
 )
 from repro.core.ovo import (
+    MAX_TABLE_BITS,
     DigitalLinearClassifier,
     DigitalRBFClassifier,
     MulticlassSVM,
     build_encoder_table,
     class_pairs,
+    pair_index_matrix,
 )
 from repro.core.svm import SVMModel
 
 _FORMAT_VERSION = 1
 
-#: Encoder truth tables are materialised up to this many pair bits
-#: (2^12 = 4096 entries); beyond that the votes matmul is used.
-MAX_TABLE_BITS = 12
+# MAX_TABLE_BITS (re-exported above from repro.core.ovo): encoder truth
+# tables are materialised up to that many pair bits (2^12 = 4096 entries);
+# beyond it the votes matmul — or the O(K) DAG front — is used.
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +523,181 @@ jax.tree_util.register_dataclass(
 
 
 # ---------------------------------------------------------------------------
+# DAG decision front: O(K) pair evaluations per sample (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+#: Decision fronts a machine can be compiled with.  ``"votes"`` is the
+#: seed semantics (every pair evaluated, encoder table / votes argmax);
+#: ``"dag"`` is the DDAG elimination front — K-1 pair evaluations per
+#: sample, exactly equal to votes wherever a Condorcet winner exists
+#: (``repro.core.ovo.decide_dag`` states and proves the contract).
+DECIDERS = ("votes", "dag")
+
+
+def _dag_row_maps(linear_banks, kernel_banks, n_pairs: int):
+    """Host-built global-pair -> bank-row gather maps, one per bank.
+
+    For each bank (linear banks first, then kernel banks — the DAG front
+    iterates them in the same order) returns ``(rows, mask)``: ``rows
+    (P,)`` int32 maps a global pair index to the bank row holding it
+    (clamped to 0 where the bank does not own the pair) and ``mask (P,)``
+    f32 is 1.0 exactly on the owned pairs.  A sample's per-step score is
+    the masked sum over banks, so every pair is scored by precisely the
+    datapath that owns it.
+    """
+    maps = []
+    for b in list(linear_banks) + list(kernel_banks):
+        rows = np.zeros(n_pairs, np.int32)
+        mask = np.zeros(n_pairs, np.float32)
+        for r, g in enumerate(np.asarray(b.pair_idx)):
+            rows[int(g)] = r
+            mask[int(g)] = 1.0
+        maps.append((jnp.asarray(rows), jnp.asarray(mask)))
+    return maps
+
+
+def _dag_step_plans(linear_banks, kernel_banks, n_classes: int):
+    """Static per-step work plans for the DAG gather front.
+
+    At step ``t`` the carried interval satisfies ``hi - lo == K-1-t``, so
+    the only pairs a sample can visit are ``{(j, j + K-1-t) : j <= t}`` —
+    a set known at trace time.  For every bank and step this precomputes:
+
+    * ``None`` — the bank owns no reachable pair: skip it entirely (its
+      masked contribution would be an exact ``0.0`` for every sample);
+    * ``-1`` (linear banks) — participate, nothing to slice;
+    * ``m_t > 0`` (kernel banks) — participate, and statically slice the
+      support axis to the max TRUE support count over the reachable owned
+      pairs.  Padded slots carry zero coefficients, so dropping them
+      removes exact ``+0.0`` terms from the score sum — bit-identical
+      labels, ``sum_t m_t`` kernel evaluations per sample instead of
+      ``(K-1) * M``.
+
+    On mixed Algorithm-1 designs this is a large static win: far-apart
+    class pairs (the early, large-gap steps) are typically linear, so
+    whole kernel banks drop out of the first steps, and the hard
+    small-gap pairs that stay analog rarely all share the bank-wide
+    padded ``M``.
+    """
+    pairs = class_pairs(n_classes)
+    idx = {p: i for i, p in enumerate(pairs)}
+    n_lin = len(linear_banks)
+    owned = []
+    for bi, b in enumerate(list(linear_banks) + list(kernel_banks)):
+        if bi < n_lin:
+            owned.append({int(g): 0 for g in np.asarray(b.pair_idx)})
+        else:
+            coef = np.abs(np.asarray(b.coef_pos)) \
+                + np.abs(np.asarray(b.coef_neg))           # (P, M)
+            true_m = (coef != 0.0).sum(axis=1)
+            owned.append({int(g): int(mm)
+                          for g, mm in zip(np.asarray(b.pair_idx), true_m)})
+    plans = []
+    for t in range(n_classes - 1):
+        gap = n_classes - 1 - t
+        reach = [idx[(j, j + gap)] for j in range(t + 1)]
+        plan = []
+        for bi, o in enumerate(owned):
+            ms = [o[p] for p in reach if p in o]
+            if not ms:
+                plan.append(None)
+            elif bi < n_lin:
+                plan.append(-1)
+            else:
+                plan.append(max(max(ms), 1))
+        plans.append(tuple(plan))
+    return plans
+
+
+def _gather_pair_scores(p, linear_banks, kernel_banks, row_maps, xq_cache,
+                        plan=None):
+    """Decision scores of ONE (per-sample dynamic) pair: ``p (n,) -> (n,)``.
+
+    The gather sibling of ``_all_scores``: instead of evaluating every
+    bank column, each sample gathers the parameters of the single pair
+    ``p[i]`` from the bank that owns it and evaluates just that one
+    classifier.  Kernel banks run the per-sample kernel through the SAME
+    ``_pair_kernel`` arithmetic as the dense path (``use_pallas=False``
+    deliberately: the Pallas tile kernels are per-pair-column programs and
+    would degenerate under the per-sample vmap; the jnp lowering is
+    bit-identical math).
+
+    ``plan`` (one entry of :func:`_dag_step_plans`) statically skips
+    banks that own no reachable pair this step and slices kernel-bank
+    gathers to the reachable true support count — both exact.
+    """
+    total = jnp.zeros(p.shape[0], jnp.float32)
+    mi = 0
+    for bank in linear_banks:
+        rows, mask = row_maps[mi]
+        step = None if plan is None else plan[mi]
+        mi += 1
+        if plan is not None and step is None:
+            continue
+        r = rows[p]                                        # (n,)
+        xv = xq_cache[bank.input_bits]
+        s = jnp.sum(xv * bank.w[r], axis=-1) + bank.b[r]
+        total = total + mask[p] * s
+    for bank in kernel_banks:
+        rows, mask = row_maps[mi]
+        step = None if plan is None else plan[mi]
+        mi += 1
+        if plan is not None and step is None:
+            continue
+        m_t = bank.sv.shape[1] if (plan is None or step == -1) else int(step)
+        r = rows[p]
+
+        def one(xi, sv, gamma, scale, shift, cpos, cneg, bpos, bneg, off):
+            k = _pair_kernel(bank, xi[None, :], sv, gamma, scale, shift,
+                             False)[0]                     # (m_t,)
+            return (jnp.dot(k, cpos) + bpos) \
+                - (jnp.dot(k, cneg) + bneg) + off
+
+        s = jax.vmap(one)(
+            xq_cache[bank.input_bits], bank.sv[:, :m_t][r], bank.gamma[r],
+            bank.scale[r], bank.shift[r], bank.coef_pos[:, :m_t][r],
+            bank.coef_neg[:, :m_t][r], bank.bias_pos[r], bank.bias_neg[r],
+            bank.offset[r])
+        total = total + mask[p] * s
+    return total
+
+
+def _dag_labels(x, n_classes: int, pair_matrix, linear_banks, kernel_banks,
+                row_maps, step_plans=None):
+    """DDAG elimination front: ``x (n, d) -> labels (n,)`` in O(n*K).
+
+    An unrolled loop of K-1 steps carries the per-sample candidate
+    interval ``(lo, hi)``; each step evaluates pair ``(lo, hi)`` through
+    the gather front and eliminates one endpoint (bit 1 = the lower class
+    wins, matching the ``class_pairs`` bit convention and the numpy
+    reference ``repro.core.ovo.decide_dag``).  The loop is a trace-time
+    Python loop (not ``lax.scan``) because each step runs a DIFFERENT
+    static plan from :func:`_dag_step_plans` — banks with no reachable
+    pair drop out of the step, kernel gathers slice to the reachable true
+    support count.  Total pair evaluations: ``n * (K-1)`` instead of the
+    dense path's ``n * K(K-1)/2``, and the kernel-bank work shrinks
+    further to ``n * sum_t m_t``.
+    """
+    xq_cache: dict[int, jnp.ndarray] = {}
+    for bank in list(linear_banks) + list(kernel_banks):
+        bits = bank.input_bits
+        if bits not in xq_cache:
+            xq_cache[bits] = x if bits == 0 else quant.quantize_unit(x, bits)
+    n = x.shape[0]
+    lo = jnp.zeros(n, jnp.int32)
+    hi = jnp.full(n, n_classes - 1, jnp.int32)
+    for t in range(n_classes - 1):
+        p = pair_matrix[lo, hi]                            # (n,)
+        plan = None if step_plans is None else step_plans[t]
+        s = _gather_pair_scores(p, linear_banks, kernel_banks, row_maps,
+                                xq_cache, plan)
+        win = s >= 0.0                                     # lower class wins
+        lo = jnp.where(win, lo, lo + 1)
+        hi = jnp.where(win, hi - 1, hi)
+    return lo
+
+
+# ---------------------------------------------------------------------------
 # The compiled machine
 # ---------------------------------------------------------------------------
 
@@ -539,6 +717,7 @@ class CompiledMachine:
         kernel_map: Optional[list[str]] = None,
         use_pallas: Optional[bool] = None,
         interpret: Optional[bool] = None,
+        decider: str = "votes",
     ):
         self.n_classes = int(n_classes)
         self._linear_banks = linear_banks
@@ -567,6 +746,27 @@ class CompiledMachine:
         # Decision encoder: packed truth table in the FE regime, votes
         # matmul beyond it (identical semantics, see ovo.decide_votes).
         self._decider = _Decider.build(self.n_classes)
+
+        # Decision front for `predict`: the dense votes path (seed
+        # semantics, always compiled — it stays the oracle behind
+        # `predict_votes`/`decision_scores`/`predict_bits`), optionally
+        # shadowed by the O(K) DAG elimination front.
+        if decider not in DECIDERS:
+            raise ValueError(
+                f"unknown decider {decider!r}; one of {DECIDERS}")
+        self.decider = decider
+        self._pair_matrix = None
+        self._row_maps = None
+        self._step_plans = None
+        self._labels_dag_jit = None
+        if decider == "dag":
+            self._pair_matrix = jnp.asarray(
+                pair_index_matrix(self.n_classes))
+            self._row_maps = _dag_row_maps(linear_banks, kernel_banks,
+                                           self.n_pairs)
+            self._step_plans = _dag_step_plans(linear_banks, kernel_banks,
+                                               self.n_classes)
+            self._labels_dag_jit = jax.jit(self._labels_dag)
 
         self._forward_jit = jax.jit(self._forward)
 
@@ -601,14 +801,23 @@ class CompiledMachine:
         bits = (scores >= 0.0).astype(jnp.int32)
         return scores, bits, self._decider(bits)
 
+    def _labels_dag(self, x: jnp.ndarray):
+        """x (n, d) f32 -> labels (n,) via the O(K) DAG front."""
+        return _dag_labels(x, self.n_classes, self._pair_matrix,
+                           self._linear_banks, self._kernel_banks,
+                           self._row_maps, self._step_plans)
+
     # -- host API ------------------------------------------------------------
 
-    def _run(self, x: np.ndarray):
+    def _as_input(self, x: np.ndarray) -> jnp.ndarray:
         x = jnp.asarray(np.asarray(x), jnp.float32)
         if x.ndim != 2 or (self.n_features and x.shape[1] != self.n_features):
             raise ValueError(
                 f"expected (n, {self.n_features}) inputs, got shape {x.shape}")
-        return self._forward_jit(x)
+        return x
+
+    def _run(self, x: np.ndarray):
+        return self._forward_jit(self._as_input(x))
 
     def decision_scores(self, x: np.ndarray) -> np.ndarray:
         """Raw per-pair decision scores (n, P) — pre-comparator."""
@@ -619,8 +828,31 @@ class CompiledMachine:
         return np.asarray(self._run(x)[1])
 
     def predict(self, x: np.ndarray) -> np.ndarray:
-        """Class labels (n,) via the packed decision encoder."""
+        """Class labels (n,) via the compiled decision front.
+
+        ``decider="votes"`` (default): every pair is evaluated and the
+        packed encoder table / votes argmax decides — bit-identical to the
+        seed.  ``decider="dag"``: the DDAG elimination front evaluates
+        K-1 pairs per sample; equal to the votes labels wherever the vote
+        winner is unambiguous (Condorcet), measured via
+        :meth:`dag_votes_agreement` elsewhere.
+        """
+        if self.decider == "dag":
+            return np.asarray(self._labels_dag_jit(self._as_input(x)))
         return np.asarray(self._run(x)[2])
+
+    def predict_votes(self, x: np.ndarray) -> np.ndarray:
+        """Class labels (n,) via the dense votes path, regardless of the
+        compiled ``decider`` — the oracle the DAG front is checked
+        against."""
+        return np.asarray(self._run(x)[2])
+
+    def dag_votes_agreement(self, x: np.ndarray) -> float:
+        """Fraction of samples where the DAG front and the votes oracle
+        agree (requires ``decider="dag"``)."""
+        if self.decider != "dag":
+            raise ValueError("machine was compiled with decider='votes'")
+        return float(np.mean(self.predict(x) == self.predict_votes(x)))
 
     def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
         return float(np.mean(self.predict(x) == np.asarray(y)))
@@ -639,6 +871,7 @@ class CompiledMachine:
             "version": _FORMAT_VERSION,
             "n_classes": self.n_classes,
             "kernel_map": self.kernel_map,
+            "decider": self.decider,
             "banks": meta_banks,
         }
         np.savez(path + ".npz", **arrays)
@@ -647,7 +880,8 @@ class CompiledMachine:
 
     @classmethod
     def load(cls, path: str, use_pallas: Optional[bool] = None,
-             interpret: Optional[bool] = None) -> "CompiledMachine":
+             interpret: Optional[bool] = None,
+             decider: Optional[str] = None) -> "CompiledMachine":
         path = _strip_ext(path)
         with open(path + ".json") as f:
             meta = json.load(f)
@@ -655,9 +889,11 @@ class CompiledMachine:
             raise ValueError(f"{path}.json is not a CompiledMachine save")
         npz = np.load(path + ".npz")
         linear_banks, kernel_banks = _banks_from_entries(meta["banks"], npz)
+        if decider is None:
+            decider = meta.get("decider", "votes")
         return cls(meta["n_classes"], linear_banks, kernel_banks,
                    kernel_map=meta.get("kernel_map"), use_pallas=use_pallas,
-                   interpret=interpret)
+                   interpret=interpret, decider=decider)
 
 
 def _strip_ext(path: str) -> str:
@@ -744,6 +980,7 @@ def compile_machine(
     kernel_map: Optional[list[str]] = None,
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    decider: str = "votes",
 ) -> CompiledMachine:
     """Lower a bank of bit-classifiers to a single batched inference path.
 
@@ -770,7 +1007,7 @@ def compile_machine(
     linear_banks, kernel_banks = _build_banks(specs)
     return CompiledMachine(n_classes, linear_banks, kernel_banks,
                            kernel_map=kernel_map, use_pallas=use_pallas,
-                           interpret=interpret)
+                           interpret=interpret, decider=decider)
 
 
 # ---------------------------------------------------------------------------
@@ -1288,7 +1525,8 @@ class StreamingMCMachine:
        a pure function of the global index, never of the chunking.
     2. **Score**: the chunk's banks run through the SAME
        ``_all_scores_mc`` lanes as the dense machine (digital lanes
-       broadcast), then the packed-encoder recombination scores every
+       broadcast), then the packed-encoder (or, past ``MAX_TABLE_BITS``,
+       the pair-chunked votes) recombination scores every
        assignment (``_recombine_acc``).
     3. **Fold**: the ``(B, S)`` chunk accuracies collapse into the
        donated :class:`~repro.core.mcstream.StreamStats` accumulator —
@@ -1315,11 +1553,6 @@ class StreamingMCMachine:
                  interpret: Optional[bool] = None):
         self.n_classes = int(n_classes)
         self.n_pairs = len(class_pairs(self.n_classes))
-        if self.n_pairs > MAX_TABLE_BITS:
-            raise ValueError(
-                f"streaming MC covers the packed-encoder regime (P <= "
-                f"{MAX_TABLE_BITS}); got P={self.n_pairs}.  The votes-"
-                f"matmul fallback is not streamed yet (ROADMAP item 4).")
         if method not in STREAM_METHODS:
             raise ValueError(
                 f"unknown sampling method {method!r}; one of "
@@ -1341,9 +1574,12 @@ class StreamingMCMachine:
         self.interpret = interpret
         self._inv_perm = _inverse_perm(linear_banks, kernel_banks,
                                        2 * self.n_pairs)
-        self._table = jnp.asarray(build_encoder_table(self.n_classes))
-        self._weights = jnp.asarray(
-            (1 << np.arange(self.n_pairs)).astype(np.int32))
+        # Recombination constants: packed encoder table in the FE regime,
+        # the pair-chunked votes matmul (dse._votes_accuracy_paired)
+        # beyond it — same flat-memory contract either way.
+        dec = _Decider.build(self.n_classes)
+        self._table, self._weights = dec.table, dec.bit_weights
+        self._vote_a, self._vote_b = dec.vote_a, dec.vote_b
         #: Flat mismatch dims over the padded slot grids (the QMC block
         #: width) and over the true circuits (the IS log-weight D).
         self.mismatch_dim = sum(
@@ -1459,8 +1695,12 @@ class StreamingMCMachine:
         scores = jnp.stack(
             [flat[..., : self.n_pairs], flat[..., self.n_pairs:]], axis=-1)
         bits = (scores >= 0.0).astype(jnp.int32)            # (B, n, P, 2)
-        acc = _recombine_acc(bits, assignments, y, self._table,
-                             self._weights)
+        if self._table is not None:
+            acc = _recombine_acc(bits, assignments, y, self._table,
+                                 self._weights)
+        else:
+            acc = dse._votes_accuracy_paired(
+                bits, assignments, y, self._vote_a, self._vote_b)
         return acc, w, log_ref, bits
 
     def _step(self, state, x, v_idx, valid, floor, assignments, y, u):

@@ -324,8 +324,13 @@ class MixedKernelSVM:
         power_budget: Optional[float] = None,
         yield_floor: Optional[float] = None,
         yield_confidence: Optional[float] = 0.95,
+        decider: str = "votes",
     ) -> CompiledMachine:
         """Lower ``target``'s bank to one batched jit inference path.
+
+        ``decider="dag"`` compiles the O(K) DDAG decision front instead of
+        the dense votes path (DESIGN.md §11) — same banks, K-1 pair
+        evaluations per sample at predict time.
 
         With an ``area_budget`` (mm^2) and/or ``power_budget`` (mW) —
         ``'circuit'`` target only — the deployment instead picks the
@@ -348,11 +353,12 @@ class MixedKernelSVM:
         """
         if area_budget is None and power_budget is None \
                 and yield_floor is None:
-            if target not in self._compiled:
-                self._compiled[target] = compile_machine(
+            key = target if decider == "votes" else f"{target}@{decider}"
+            if key not in self._compiled:
+                self._compiled[key] = compile_machine(
                     self.bank(target), use_pallas=self.use_pallas,
-                    interpret=self.interpret)
-            return self._compiled[target]
+                    interpret=self.interpret, decider=decider)
+            return self._compiled[key]
         if target != "circuit":
             raise ValueError(
                 "budget-constrained deployment explores the circuit design "
@@ -370,7 +376,7 @@ class MixedKernelSVM:
             self.mc_state_["yield_floor"] = float(yield_floor)
             self.mc_state_["yield_confidence"] = (
                 None if yield_confidence is None else float(yield_confidence))
-        return self.deploy_assignment(self.assignment_)
+        return self.deploy_assignment(self.assignment_, decider=decider)
 
     # -- kernel-assignment design space (DESIGN.md §5) -------------------------
 
@@ -614,7 +620,7 @@ class MixedKernelSVM:
             hist=np.asarray(out["hist"][0]))
 
     def deploy_assignment(
-        self, assignment: Optional[list] = None
+        self, assignment: Optional[list] = None, decider: str = "votes"
     ) -> CompiledMachine:
         """Compile the machine for an explicit per-pair kernel assignment
         (default: the stored ``assignment_`` of a budgeted deploy)."""
@@ -629,10 +635,12 @@ class MixedKernelSVM:
                 for k in list(assignment)]
         key = "assignment:" + "".join("r" if k == "rbf" else "l"
                                       for k in kmap)
+        if decider != "votes":
+            key += f"@{decider}"
         if key not in self._compiled:
             self._compiled[key] = compile_machine(
                 self._assignment_bank(kmap), use_pallas=self.use_pallas,
-                interpret=self.interpret)
+                interpret=self.interpret, decider=decider)
         return self._compiled[key]
 
     def _assignment_bank(self, kmap: list[str]) -> MulticlassSVM:

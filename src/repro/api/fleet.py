@@ -52,13 +52,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.compiled import (
+    DECIDERS,
     CompiledMachine,
     _all_scores,
     _bank_arrays,
     _banks_from_entries,
+    _dag_labels,
+    _dag_row_maps,
+    _dag_step_plans,
     _Decider,
     _strip_ext,
 )
+from repro.core.ovo import pair_index_matrix
 
 _FLEET_FORMAT = "repro.api.FleetMachine"
 _FLEET_VERSION = 1
@@ -75,7 +80,8 @@ class FleetMachine:
     def __init__(self, model_ids: Sequence[str],
                  machines: Sequence[CompiledMachine],
                  use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 decider: str = "votes"):
         if len(model_ids) != len(machines) or not machines:
             raise ValueError("need one model id per member machine (>= 1)")
         if len(set(model_ids)) != len(model_ids):
@@ -106,6 +112,27 @@ class FleetMachine:
         self.interpret = interpret
 
         self._deciders = [_Decider.build(m.n_classes) for m in self._members]
+
+        # Decision front of the labels path: dense votes (seed semantics)
+        # or the per-member O(K) DAG elimination front.  The scores path
+        # (`decision_scores`/`predict_bits`) always runs dense — it is
+        # the bit-identity oracle either way.
+        if decider not in DECIDERS:
+            raise ValueError(
+                f"unknown decider {decider!r}; one of {DECIDERS}")
+        self.decider = decider
+        if decider == "dag":
+            self._pair_matrices = [
+                jnp.asarray(pair_index_matrix(m.n_classes))
+                for m in self._members]
+            self._row_maps = [
+                _dag_row_maps(m._linear_banks, m._kernel_banks, m.n_pairs)
+                for m in self._members]
+            self._step_plans = [
+                _dag_step_plans(m._linear_banks, m._kernel_banks,
+                                m.n_classes)
+                for m in self._members]
+
         self._forward_jit = jax.jit(self._forward)
         # Serving hot path: labels only, model_idx donated -> label buffer.
         self._labels_jit = jax.jit(self._labels, donate_argnums=(1,))
@@ -166,7 +193,25 @@ class FleetMachine:
         return routed, jnp.concatenate(cols, axis=1)
 
     def _labels(self, x: jnp.ndarray, model_idx: jnp.ndarray) -> jnp.ndarray:
-        """Serving hot path: routed labels only (scores concat DCE'd)."""
+        """Serving hot path: routed labels only.
+
+        ``decider="votes"``: the forward's scores concat is DCE'd, labels
+        come from the dense per-member decision encoders.  ``"dag"``:
+        each member runs its K-1-step elimination front — O(n*K) pair
+        evaluations per member instead of O(n*K^2).
+        """
+        if self.decider == "dag":
+            labels = []
+            for i, m in enumerate(self._members):
+                xm = x[:, : m.n_features] \
+                    if m.n_features != x.shape[1] else x
+                labels.append(_dag_labels(
+                    xm, m.n_classes, self._pair_matrices[i],
+                    m._linear_banks, m._kernel_banks,
+                    self._row_maps[i], self._step_plans[i]).astype(jnp.int32))
+            lab = jnp.stack(labels, axis=0)                  # (M, n)
+            return jnp.take_along_axis(
+                lab, model_idx[None, :].astype(jnp.int32), axis=0)[0]
         return self._forward(x, model_idx)[0]
 
     # -- host API ------------------------------------------------------------
@@ -194,8 +239,19 @@ class FleetMachine:
         return self._forward_jit(jnp.asarray(x), jnp.asarray(idx))
 
     def predict(self, x: np.ndarray, model) -> np.ndarray:
-        """Routed class labels (n,).  ``model`` is one id (str/int) for the
-        whole batch or a per-row sequence of ids."""
+        """Routed class labels (n,) via the compiled decision front.
+        ``model`` is one id (str/int) for the whole batch or a per-row
+        sequence of ids."""
+        if self.decider == "dag":
+            x = self._pad_features(x)
+            idx = self._resolve_idx(model, x.shape[0])
+            return np.asarray(
+                self._labels_jit(jnp.asarray(x), jnp.asarray(idx)))
+        return np.asarray(self._run(x, model)[0])
+
+    def predict_votes(self, x: np.ndarray, model) -> np.ndarray:
+        """Routed labels via the dense votes oracle, regardless of the
+        compiled ``decider``."""
         return np.asarray(self._run(x, model)[0])
 
     def decision_scores(self, x: np.ndarray, model: ModelRef) -> np.ndarray:
@@ -226,14 +282,15 @@ class FleetMachine:
             members.append({"model_id": mid, "n_classes": m.n_classes,
                             "kernel_map": m.kernel_map, "banks": meta_banks})
         meta = {"format": _FLEET_FORMAT, "version": _FLEET_VERSION,
-                "members": members}
+                "decider": self.decider, "members": members}
         np.savez(path + ".npz", **arrays)
         with open(path + ".json", "w") as f:
             json.dump(meta, f, indent=2)
 
     @classmethod
     def load(cls, path: str, use_pallas: Optional[bool] = None,
-             interpret: Optional[bool] = None) -> "FleetMachine":
+             interpret: Optional[bool] = None,
+             decider: Optional[str] = None) -> "FleetMachine":
         path = _strip_ext(path)
         with open(path + ".json") as f:
             meta = json.load(f)
@@ -249,7 +306,10 @@ class FleetMachine:
                 entry["n_classes"], linear_banks, kernel_banks,
                 kernel_map=entry.get("kernel_map"), use_pallas=use_pallas,
                 interpret=interpret))
-        return cls(ids, machines, use_pallas=use_pallas, interpret=interpret)
+        if decider is None:
+            decider = meta.get("decider", "votes")
+        return cls(ids, machines, use_pallas=use_pallas, interpret=interpret,
+                   decider=decider)
 
 
 def compile_fleet(
@@ -258,6 +318,7 @@ def compile_fleet(
                     Sequence[CompiledMachine]],
     use_pallas: Optional[bool] = None,
     interpret: Optional[bool] = None,
+    decider: str = "votes",
 ) -> FleetMachine:
     """Concatenate compiled machines into one co-batched :class:`FleetMachine`.
 
@@ -284,4 +345,4 @@ def compile_fleet(
                 f"compile_fleet takes CompiledMachine members, got "
                 f"{type(m).__name__}; lower with compile_machine first")
     return FleetMachine(ids, members, use_pallas=use_pallas,
-                        interpret=interpret)
+                        interpret=interpret, decider=decider)

@@ -61,6 +61,11 @@ MAX_EXHAUSTIVE_PAIRS = 12
 #: bounds the (n, CHUNK, P) selected-bits tensor.
 VOTES_CHUNK = 256
 
+#: Pair-axis chunk of the streamed votes recombination: bounds the
+#: selected-bits temporary at ``(B, n, VOTES_PAIR_CHUNK)`` per assignment
+#: row, so memory never scales with P (flat at P = 66).
+VOTES_PAIR_CHUNK = 16
+
 
 def assignment_from_kernel_map(kernel_map: Sequence[str]) -> np.ndarray:
     """``['linear'|'rbf', ...] -> (P,) bool`` (True = RBF candidate)."""
@@ -116,8 +121,60 @@ def _votes_accuracy(bits2, assignments, y, vote_a, vote_b):
     return jnp.mean((labels == y[:, None]).astype(jnp.float32), axis=0)
 
 
+def _votes_accuracy_paired(bits4, assignments, y, vote_a, vote_b,
+                           *, p_chunk: int = VOTES_PAIR_CHUNK):
+    """Pair-chunked votes recombination: ``bits4 (B, n, P, 2) -> (B, S)``.
+
+    The flat-memory sibling of ``_votes_accuracy`` for the streaming and
+    Monte-Carlo engines: instead of materializing a ``(B, n, S, P)``
+    selected-bits tensor, the PAIR axis is folded ``p_chunk`` columns at a
+    time into a ``(B, n, K)`` vote accumulator (one ``lax.map`` row per
+    assignment, one ``fori_loop`` over pair chunks inside it).  Peak
+    temporaries are ``(B, n, p_chunk)`` + the accumulator — independent of
+    both S and P.  The pair tail is zero-padded: padded vote rows are
+    all-zero, so padded selections are inert regardless of bit values.
+    Argmax keeps the lowest-index tiebreak of ``ovo.decide_votes``.
+    """
+    b, n, p_total = bits4.shape[:3]
+    k = vote_a.shape[1]
+    lin = bits4[..., 0].astype(jnp.float32)
+    rbf = bits4[..., 1].astype(jnp.float32)
+    va = vote_a.astype(jnp.float32)
+    vb = vote_b.astype(jnp.float32)
+    a = assignments
+    pad = -p_total % p_chunk
+    if pad:
+        lin = jnp.pad(lin, ((0, 0), (0, 0), (0, pad)))
+        rbf = jnp.pad(rbf, ((0, 0), (0, 0), (0, pad)))
+        va = jnp.pad(va, ((0, pad), (0, 0)))
+        vb = jnp.pad(vb, ((0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    n_chunks = (p_total + pad) // p_chunk
+    yy = y[None, :]
+
+    def one(a_row):
+        def fold(c, votes):
+            lo = c * p_chunk
+            lc = jax.lax.dynamic_slice_in_dim(lin, lo, p_chunk, axis=2)
+            rc = jax.lax.dynamic_slice_in_dim(rbf, lo, p_chunk, axis=2)
+            ac = jax.lax.dynamic_slice_in_dim(a_row, lo, p_chunk)
+            sel = jnp.where(ac[None, None, :] == 1, rc, lc)
+            vac = jax.lax.dynamic_slice_in_dim(va, lo, p_chunk, axis=0)
+            vbc = jax.lax.dynamic_slice_in_dim(vb, lo, p_chunk, axis=0)
+            return votes + sel @ vac + (1.0 - sel) @ vbc
+
+        votes = jax.lax.fori_loop(
+            0, n_chunks, fold, jnp.zeros((b, n, k), jnp.float32))
+        labels = jnp.argmax(votes, axis=-1)                # lowest-index tie
+        return jnp.mean((labels == yy).astype(jnp.float32), axis=1)
+
+    return jnp.moveaxis(jax.lax.map(one, a), 0, 1)         # (B, S)
+
+
 _sweep_encoder = jax.jit(_encoder_accuracy)
 _sweep_votes = jax.jit(_votes_accuracy)
+_sweep_votes_paired = jax.jit(_votes_accuracy_paired,
+                              static_argnames=("p_chunk",))
 
 #: The Monte-Carlo programs vmap the SAME recombination bodies over a
 #: leading variant axis of the bit tensor: ``bits3 (V, n, P, 2) -> (V, S)``.
@@ -145,13 +202,16 @@ def assignment_accuracies(
     y: np.ndarray,
     n_classes: int,
     max_table_bits: int = MAX_EXHAUSTIVE_PAIRS,
+    chunk: Optional[int] = None,
 ) -> np.ndarray:
     """Validation accuracy of every assignment: ``(S,)`` float64.
 
     ``bits2`` is the ``(n, P, 2)`` candidate-bit tensor of
     ``CandidateMachine.pair_bits``.  For ``P <= max_table_bits`` the packed
     encoder table scores all assignments in one program; beyond that the
-    votes matmul runs over ``VOTES_CHUNK``-sized assignment chunks.
+    votes matmul runs over ``chunk``-sized assignment chunks (default
+    :data:`VOTES_CHUNK`; the portfolio search passes a smaller chunk so
+    its P-sized flip batches are not padded 4x).
     """
     bits2 = np.asarray(bits2, np.int32)
     a = np.atleast_2d(np.asarray(assignments)).astype(np.int32)
@@ -166,17 +226,19 @@ def assignment_accuracies(
         acc = _sweep_encoder(bits2, a, y, jnp.asarray(table),
                              jnp.asarray(weights))
         return np.asarray(acc, np.float64)
+    if chunk is None:
+        chunk = VOTES_CHUNK
     va, vb = _vote_matrices(n_classes)
     va, vb = jnp.asarray(va), jnp.asarray(vb)
     out = np.empty(a.shape[0], np.float64)
     # Fixed-size chunks (tail padded with row 0) keep one compiled shape.
-    for lo in range(0, a.shape[0], VOTES_CHUNK):
-        chunk = a[lo: lo + VOTES_CHUNK]
-        pad = VOTES_CHUNK - chunk.shape[0]
+    for lo in range(0, a.shape[0], chunk):
+        block = a[lo: lo + chunk]
+        pad = chunk - block.shape[0]
         if pad:
-            chunk = np.concatenate([chunk, np.repeat(a[:1], pad, axis=0)])
-        acc = np.asarray(_sweep_votes(bits2, chunk, y, va, vb))
-        out[lo: lo + VOTES_CHUNK] = acc[: VOTES_CHUNK - pad or None]
+            block = np.concatenate([block, np.repeat(a[:1], pad, axis=0)])
+        acc = np.asarray(_sweep_votes(bits2, block, y, va, vb))
+        out[lo: lo + chunk] = acc[: chunk - pad or None]
     return out
 
 
@@ -259,19 +321,12 @@ def assignment_accuracies_mc(
                                       mc_chunk=mc_chunk), np.float64)
     va, vb = _vote_matrices(n_classes)
     va, vb = jnp.asarray(va), jnp.asarray(vb)
-    # The vmapped votes program materializes a (V, n, CHUNK, P) selected-
-    # bits tensor — V times the nominal path's footprint — so the chunk
-    # shrinks by V to keep the same memory bound.
-    chunk_size = max(1, VOTES_CHUNK // bits3.shape[0])
-    out = np.empty((bits3.shape[0], a.shape[0]), np.float64)
-    for lo in range(0, a.shape[0], chunk_size):
-        chunk = a[lo: lo + chunk_size]
-        pad = chunk_size - chunk.shape[0]
-        if pad:
-            chunk = np.concatenate([chunk, np.repeat(a[:1], pad, 0)])
-        acc = np.asarray(_sweep_votes_mc(bits3, chunk, y, va, vb))
-        out[:, lo: lo + chunk_size] = acc[:, : chunk_size - pad or None]
-    return out
+    # Pair-chunked recombination: the selected-bits temporary is bounded
+    # at (V, n, VOTES_PAIR_CHUNK) per assignment row — flat in both S and
+    # P, where the old vmapped-votes chunking shrank the assignment chunk
+    # by V and still scaled with P.
+    return np.asarray(
+        _sweep_votes_paired(bits3, a, y, va, vb), np.float64)
 
 
 def mc_statistics(
@@ -537,6 +592,16 @@ class SweepResult:
 # ---------------------------------------------------------------------------
 
 
+#: Compiled assignment-chunk of the portfolio search's evaluations (the
+#: search submits P-sized flip batches and W-sized walker batches — a
+#: full VOTES_CHUNK pad would waste 4x compute per call at P = 66).
+SEARCH_CHUNK = 64
+
+#: Front-polish cap: at most this many archive-front points get their full
+#: Hamming-1 neighborhood evaluated in the final portfolio stage.
+POLISH_FRONT_CAP = 24
+
+
 def _search_assignments(
     bits2: np.ndarray,
     y: np.ndarray,
@@ -546,13 +611,32 @@ def _search_assignments(
     n_random: int,
     rng_seed: int,
     max_rounds: int,
+    n_anneal: int = 8,
+    anneal_steps: int = 96,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Hill-climb over single-pair flips from seeded starts.
+    """Seeded search portfolio: greedy/flip + annealing + front polish.
 
-    Scalarizes accuracy against normalized cost over a small lambda ladder
-    (lambda = 0 is pure accuracy), archives EVERY evaluated point, and
-    returns ``(assignments, accuracies)`` for the archive — the caller
-    prices and Pareto-reduces it.  Deterministic given ``rng_seed``.
+    Three stages over the same scalarized objective (accuracy minus
+    ``lam`` x normalized cost; ``lam = 0`` is pure accuracy), all feeding
+    ONE deduplicating archive that the caller prices and Pareto-reduces:
+
+    1. **Greedy/flip** — steepest-ascent over single-pair flips from the
+       seeded starts (all-linear / all-RBF corners, the caller's seeds —
+       typically the Algorithm-1 assignment — and ``n_random`` random
+       draws), once per lambda of a small ladder.
+    2. **Annealing** — ``n_anneal`` Metropolis walkers stepping in
+       lockstep (one batched evaluation per step) under a geometric
+       temperature schedule: escapes the single-flip local optima stage 1
+       terminates in.
+    3. **Front polish** — the archive's accuracy/area/power Pareto front
+       (capped at :data:`POLISH_FRONT_CAP` points per round) gets its
+       full Hamming-1 neighborhood evaluated, repeated until the front
+       stops growing: every returned front point is a verified local
+       optimum in all objectives, and on small spaces the closure walks
+       the front to the exhaustive one.
+
+    Deterministic given ``rng_seed``.  Returns ``(assignments,
+    accuracies)`` for the whole archive.
     """
     p = bits2.shape[1]
     rng = np.random.RandomState(rng_seed)
@@ -566,7 +650,8 @@ def _search_assignments(
     def evaluate(batch: np.ndarray) -> np.ndarray:
         fresh = [a for a in batch if a.tobytes() not in archive]
         if fresh:
-            accs = assignment_accuracies(bits2, np.stack(fresh), y, n_classes)
+            accs = assignment_accuracies(bits2, np.stack(fresh), y,
+                                         n_classes, chunk=SEARCH_CHUNK)
             for a, acc in zip(fresh, accs):
                 archive[a.tobytes()] = float(acc)
         return np.asarray([archive[a.tobytes()] for a in batch])
@@ -594,6 +679,45 @@ def _search_assignments(
                 if s[best] <= cur_score + 1e-12:
                     break
                 cur, cur_score = flips[best], float(s[best])
+
+    if n_anneal > 0 and anneal_steps > 0:
+        t0, t1 = 2e-2, 1e-3
+        for lam in (0.0, 0.25):
+            cur = np.stack([starts[i % len(starts)].copy()
+                            for i in range(n_anneal)]).astype(bool)
+            # Half the walkers restart from fresh random corners so the
+            # two lambda passes do not retrace identical trajectories.
+            for i in range(n_anneal // 2, n_anneal):
+                cur[i] = rng.rand(p) < 0.5
+            cur_s = scores(cur, lam)
+            for t in range(anneal_steps):
+                temp = t0 * (t1 / t0) ** (t / max(anneal_steps - 1, 1))
+                flip = rng.randint(0, p, n_anneal)
+                prop = cur.copy()
+                prop[np.arange(n_anneal), flip] ^= True
+                prop_s = scores(prop, lam)
+                accept = (prop_s > cur_s) | (
+                    rng.rand(n_anneal) < np.exp(
+                        np.minimum(prop_s - cur_s, 0.0) / temp))
+                cur[accept] = prop[accept]
+                cur_s[accept] = prop_s[accept]
+
+    expanded: set[bytes] = set()
+    for _ in range(16):  # closure bound; each round must expand new points
+        pts = np.stack([np.frombuffer(k, bool) for k in archive])
+        acc = np.asarray([archive[a.tobytes()] for a in pts])
+        ar, pw = hwcost.assignment_costs(cost_table, pts)
+        front = pareto_front(acc, ar, pw)
+        todo = [i for i in front if pts[i].tobytes() not in expanded]
+        if not todo:
+            break
+        todo = sorted(todo, key=lambda i: -acc[i])[:POLISH_FRONT_CAP]
+        for i in todo:
+            expanded.add(pts[i].tobytes())
+            flips = np.repeat(pts[i][None, :], p, axis=0)
+            flips[np.arange(p), np.arange(p)] ^= True
+            evaluate(flips)
+
     out = np.stack([np.frombuffer(k, bool) for k in archive])
     return out, np.asarray([archive[a.tobytes()] for a in out])
 
@@ -652,6 +776,8 @@ class DesignSpace:
         n_random: int = 16,
         rng_seed: int = 0,
         max_rounds: int = 64,
+        n_anneal: int = 8,
+        anneal_steps: int = 96,
         mc_machine=None,
         accuracy_floor: Optional[float] = None,
     ) -> SweepResult:
@@ -659,8 +785,12 @@ class DesignSpace:
 
         With ``assignments=None``: exhaustive ``2^P`` when ``P <=
         max_exhaustive`` (two jit compiles total: candidate bits + the
-        recombination program), else the seeded greedy/flip search
-        (``seeds`` typically carries the Algorithm-1 assignment).
+        recombination program), else the seeded greedy/flip + annealing
+        portfolio (``seeds`` typically carries the Algorithm-1
+        assignment; ``n_anneal``/``anneal_steps`` size the annealing
+        stage, 0 disables it).  Passing ``max_exhaustive=0`` forces the
+        portfolio even at small P — the CI smoke uses that to check the
+        portfolio front covers the exhaustive oracle's.
 
         Monte-Carlo mode: pass an ``mc_machine``
         (``repro.api.compiled.MonteCarloMachine``, sampled with
@@ -698,7 +828,8 @@ class DesignSpace:
         else:
             assignments, search_acc = _search_assignments(
                 bits2, y_val, self.cost_table, self.n_classes,
-                seeds, n_random, rng_seed, max_rounds)
+                seeds, n_random, rng_seed, max_rounds,
+                n_anneal=n_anneal, anneal_steps=anneal_steps)
             exhaustive = False
         if mc_machine is not None:
             acc_vs = assignment_accuracies_mc(

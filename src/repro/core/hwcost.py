@@ -49,6 +49,7 @@ import numpy as np
 from repro.core import quant
 from repro.core.analog import AnalogBinaryClassifier
 from repro.core.ovo import (
+    MAX_TABLE_BITS,
     DigitalLinearClassifier,
     DigitalRBFClassifier,
     MulticlassSVM,
@@ -103,10 +104,24 @@ def squarer_ge(bits: int) -> float:
 
 
 def encoder_ge(n_classes: int) -> float:
-    """Decision encoder (Fig. 1): 2-level AND-OR from its truth table."""
-    table = build_encoder_table(n_classes)
+    """Decision encoder (Fig. 1): 2-level AND-OR from its truth table.
+
+    Past the packed-table regime (P > MAX_TABLE_BITS, i.e. K > 5) the
+    hardwired AND-OR plane is unbuildable (2^P minterms); the deployed
+    decision logic is then a votes realisation — K population counters
+    over each class's K-1 pair bits plus a log2(K)-deep argmax comparator
+    tree — costed from the same adder primitives.
+    """
     n_in = int(math.comb(n_classes, 2))
     out_bits = max(int(np.ceil(np.log2(max(n_classes, 2)))), 1)
+    if n_in > MAX_TABLE_BITS:
+        cnt_bits = out_bits  # ceil(log2(K)) >= ceil(log2(K-1+1)) counter width
+        counters = n_classes * adder_tree_ge(n_classes - 1, 1)
+        argmax = (n_classes - 1) * (
+            adder_ge(cnt_bits)             # magnitude comparator ~ subtractor
+            + AND_GE * (cnt_bits + out_bits))  # index/count muxes
+        return counters + argmax + out_bits * AND_GE
+    table = build_encoder_table(n_classes)
     # minterms where each output bit is 1; each minterm = one n_in-input AND.
     literals = 0
     for b in range(out_bits):

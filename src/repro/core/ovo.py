@@ -89,6 +89,69 @@ def decide_encoder(bits: np.ndarray, table: np.ndarray) -> np.ndarray:
     return table[codes]
 
 
+#: Packed-encoder regime bound: past P pair bits the 2^P truth table is
+#: unbuildable, and every consumer (MulticlassSVM, the compiled machines,
+#: the DSE) must route through votes or the DAG front instead.  Kept here —
+#: the OvO layer — so ``api.compiled.MAX_TABLE_BITS`` and the streaming MC
+#: engine share one definition of "the FE regime".
+MAX_TABLE_BITS = 12
+
+
+def pair_index_matrix(n_classes: int) -> np.ndarray:
+    """(K, K) int32: ``[i, j] -> p`` with ``class_pairs(K)[p] == (i, j)``
+    for i < j (symmetric; the diagonal is self-pairs and stays 0 — never a
+    legal lookup).  Closed form of the ``itertools.combinations`` order:
+    ``p = i*K - i*(i+1)/2 + (j - i - 1)``.
+    """
+    k = int(n_classes)
+    m = np.zeros((k, k), np.int32)
+    for p, (i, j) in enumerate(class_pairs(k)):
+        m[i, j] = p
+        m[j, i] = p
+    return m
+
+
+def decide_dag(bits: np.ndarray, n_classes: int) -> np.ndarray:
+    """DDAG elimination decision (Platt et al.): host-side reference.
+
+    Maintains a candidate interval ``[lo, hi]`` (initially the full class
+    range) and, for exactly K-1 steps, consults the single pair classifier
+    ``(lo, hi)``: bit == 1 means the pair's FIRST class (``lo``) wins, so
+    ``hi`` is eliminated (``hi -= 1``); bit == 0 eliminates ``lo``
+    (``lo += 1``).  After K-1 steps ``lo == hi`` is the label — only
+    O(K) of the P = K(K-1)/2 bits are ever consulted.
+
+    **Agreement contract** (tested in ``tests/test_dag.py``): whenever some
+    class wins ALL K-1 of its pairs (a Condorcet winner — it then holds
+    K-1 votes while every other class lost at least one pair and holds at
+    most K-2), the DAG returns exactly ``decide_votes``'s answer: that
+    class can never be eliminated (every pair involving it points its
+    way), and it is the unique vote argmax, so the lowest-index tiebreak
+    never fires.  Without a Condorcet winner (vote cycles, ties) the two
+    fronts may differ: votes resolves by total count + lowest index, the
+    DAG by its elimination path.  That residual disagreement is a measured
+    quantity (reported per dataset in BENCH_9.json), not a silent one.
+    """
+    bits = np.asarray(bits)
+    k = int(n_classes)
+    pm = pair_index_matrix(k)
+    lead = bits.shape[:-1]
+    lo = np.zeros(lead, np.int64)
+    hi = np.full(lead, k - 1, np.int64)
+    for _ in range(k - 1):
+        b = np.take_along_axis(bits, pm[lo, hi][..., None], axis=-1)[..., 0]
+        hi = np.where(b == 1, hi - 1, hi)
+        lo = np.where(b == 1, lo, lo + 1)
+    return lo
+
+
+def condorcet_mask(bits: np.ndarray, n_classes: int) -> np.ndarray:
+    """Boolean mask of samples whose vote winner is unambiguous (some class
+    won all K-1 of its pairs) — exactly where votes == DAG is guaranteed."""
+    votes = votes_from_bits(bits, n_classes)
+    return votes.max(axis=-1) == n_classes - 1
+
+
 # ---------------------------------------------------------------------------
 # Deployed digital classifiers (bit-producing, quantized datapaths)
 # ---------------------------------------------------------------------------
@@ -217,13 +280,21 @@ class MulticlassSVM:
 
     def __post_init__(self):
         assert len(self.classifiers) == len(class_pairs(self.n_classes))
-        self._table = build_encoder_table(self.n_classes)
+        # The 2^P packed table only exists in the FE regime; past it the
+        # machine decides by the equivalent vote counting (decide_votes) —
+        # building the table at K=12 (P=66) would be a 2^66 blowup.
+        self._table = (build_encoder_table(self.n_classes)
+                       if len(class_pairs(self.n_classes)) <= MAX_TABLE_BITS
+                       else None)
 
     def predict_bits(self, x: np.ndarray) -> np.ndarray:
         return np.stack([c.predict_bits(x) for c in self.classifiers], axis=-1)
 
     def predict(self, x: np.ndarray) -> np.ndarray:
-        return decide_encoder(self.predict_bits(x), self._table)
+        bits = self.predict_bits(x)
+        if self._table is None:
+            return decide_votes(bits, self.n_classes)
+        return decide_encoder(bits, self._table)
 
     def accuracy(self, x: np.ndarray, y: np.ndarray) -> float:
         return float(np.mean(self.predict(x) == np.asarray(y)))

@@ -167,6 +167,23 @@ class PaddedPairs:
             subsets=[self.subsets[i] for i in idx],
         )
 
+    def trim(self) -> "PaddedPairs":
+        """Re-pad to this stack's OWN max subset size.
+
+        ``take`` keeps the original global ``n_max``; a size-sharded
+        layout (``shard_lane_layout``) trims each shard so its solver
+        lanes pay only the shard's padding, not the global tail's.
+        Slicing is exact: rows past a pair's ``n_true`` are padding
+        (valid 0, y +1, mask 0) whatever the stack width.
+        """
+        m = max(self.n_true)
+        if m == self.n_max:
+            return self
+        return PaddedPairs(
+            pairs=self.pairs, x=self.x[:, :m], y=self.y[:, :m],
+            valid=self.valid[:, :m], fold_masks=self.fold_masks[:, :, :m],
+            n_true=self.n_true, subsets=self.subsets)
+
 
 def cv_fold_assignment(n: int, n_folds: int, seed: int) -> np.ndarray:
     """Fold id per sample — IDENTICAL to ``svm.cv_grid_accuracy`` (each pair
@@ -363,7 +380,17 @@ def _cell_cv_accuracy(kp, yp, mask, vp, c, n_epochs):
     return jnp.sum((pred == yp) * val) / jnp.clip(jnp.sum(val), 1.0, None)
 
 
-def _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, n_epochs):
+#: Gram-footprint gate for the batched CV grid: when the vmapped
+#: per-gamma Gram stack (P * G * n_max^2 f32 bytes) of one program would
+#: exceed this, the gamma axis runs sequentially under ``lax.map`` so at
+#: most one gamma's Grams are live per pair.  At the scale-out workload
+#: (P=66, G=7, n_max=1582) the vmapped stack is ~4.6 GB; sequential
+#: gammas bring it under 700 MB for the same lane math.
+CV_GRID_VMAP_BYTES = 1 << 30
+
+
+def _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, n_epochs,
+                  seq_gamma=False):
     """(G, C) mean CV accuracy of one pair; all folds x cells vmapped.
 
     The Gram matrix is built inside the gamma vmap, so the
@@ -371,6 +398,10 @@ def _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, n_epochs):
     hoisted to once per pair, and every fold x C lane closes over the
     finished per-gamma Gram.  The C x folds lanes are flattened into one
     vmap axis (smaller jaxpr, one fused solver loop nest).
+
+    ``seq_gamma`` trades the gamma vmap for ``lax.map`` — identical
+    results, one live Gram per gamma instead of G (see
+    :data:`CV_GRID_VMAP_BYTES`).
     """
     n_c, n_f = cs.shape[0], fm.shape[0]
     c_lanes = jnp.repeat(cs, n_f)                      # (C*F,)
@@ -383,7 +414,15 @@ def _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, n_epochs):
         )(c_lanes, m_lanes)
         return accs.reshape(n_c, n_f).mean(axis=1)      # (C,)
 
+    if seq_gamma:
+        return jax.lax.map(per_gamma, gammas).reshape(gammas.shape[0], n_c)
     return jax.vmap(per_gamma)(gammas).reshape(gammas.shape[0], n_c)
+
+
+def _seq_gamma(x, gammas) -> bool:
+    """Trace-time choice of the sequential-gamma CV grid from shapes."""
+    p, n = x.shape[0], x.shape[1]
+    return p * gammas.shape[0] * n * n * 4 > CV_GRID_VMAP_BYTES
 
 
 @partial(jax.jit, static_argnames=("kind", "n_epochs", "use_pallas",
@@ -402,9 +441,10 @@ def _cv_grid_all_pairs(x, y, fold_masks, valid, gammas, cs, kind, n_epochs,
         return cv_lanes_accuracy_pallas(
             x, y, fold_masks, valid, gammas_pg, cs, kind=kind,
             n_epochs=n_epochs, interpret=interpret, block=SOLVER_BLOCK)
+    seq = _seq_gamma(x, gammas)
     return jax.vmap(
         lambda xp, yp, fm, vp: _pair_cv_grid(xp, yp, fm, vp, gammas, cs,
-                                             kind, n_epochs)
+                                             kind, n_epochs, seq_gamma=seq)
     )(x, y, fold_masks, valid)
 
 
@@ -443,8 +483,11 @@ def _family_program(x, y, fold_masks, valid, gammas, cs, kind, cv_epochs,
             n_epochs=n_epochs, block=SOLVER_BLOCK, interpret=interpret)
         return acc, gi, ci, alpha[:, 0, 0]
 
+    seq = _seq_gamma(x, gammas)
+
     def per_pair(xp, yp, fm, vp):
-        acc = _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, cv_epochs)
+        acc = _pair_cv_grid(xp, yp, fm, vp, gammas, cs, kind, cv_epochs,
+                            seq_gamma=seq)
         flat = jnp.argmax(acc)                         # gamma-major order
         gi, ci = flat // n_c, flat % n_c
         kp = kern.kernel_matrix(kind, xp, xp, gammas[gi]) + 1.0
@@ -607,6 +650,111 @@ def _cv_grid_sharded(padded, kind, gammas, cs, n_epochs, mesh,
              jnp.asarray(vg), jnp.asarray(gg),
              jnp.asarray(cs, jnp.float32))
     return np.asarray(out)[:total].reshape(p, g, len(cs))
+
+
+# ---------------------------------------------------------------------------
+# Size-sharded lane layout: per-device programs padded to their own shard max
+# ---------------------------------------------------------------------------
+
+
+def shard_lane_layout(n_true: Sequence[int], n_shards: int
+                      ) -> list[np.ndarray]:
+    """Partition pairs into ``<= n_shards`` contiguous size-sorted shards.
+
+    The global-pad layout (`pad_pairs` + one program) makes every solver
+    lane pay ``n_max^2`` work; with the long-tailed subset sizes of a
+    K>=10 OvO grid (har12: 198..1582) most of that is padding.  This
+    layout sorts pairs by true subset size and chooses shard boundaries
+    by dynamic programming to minimize the MAKESPAN of padded work,
+    modeling a shard's cost as ``count * shard_max^2`` (the blocked
+    solver's dominant term).  Each shard is then trimmed to its own max
+    (``PaddedPairs.trim``) and dispatched as its own program, so the
+    padding waste is bounded by the within-shard size spread rather than
+    the global one.
+
+    Returns a list of index arrays into the ORIGINAL pair order; their
+    concatenation is a permutation of ``range(len(n_true))``.  At
+    ``n_shards=1`` this degenerates to the seed layout (one shard, global
+    max).  O(n_shards * P^2) — trivial at P=66.
+    """
+    p = len(n_true)
+    if p == 0:
+        return []
+    n_shards = max(1, min(int(n_shards), p))
+    order = np.argsort(np.asarray(n_true), kind="stable")
+    sizes = np.asarray(n_true)[order].astype(np.int64)
+
+    def cost(i, j):  # shard = sorted pairs [i, j)
+        return int(j - i) * int(sizes[j - 1]) ** 2
+
+    inf = float("inf")
+    best = [[inf] * (n_shards + 1) for _ in range(p + 1)]
+    cut = [[0] * (n_shards + 1) for _ in range(p + 1)]
+    best[0][0] = 0.0
+    for j in range(1, p + 1):
+        for s in range(1, min(n_shards, j) + 1):
+            for i in range(s - 1, j):
+                if best[i][s - 1] == inf:
+                    continue
+                c = max(best[i][s - 1], cost(i, j))
+                if c < best[j][s]:
+                    best[j][s], cut[j][s] = c, i
+    s_best = min(range(1, n_shards + 1), key=lambda s: best[p][s])
+    bounds, j = [], p
+    for s in range(s_best, 0, -1):
+        i = cut[j][s]
+        bounds.append((i, j))
+        j = i
+    bounds.reverse()
+    return [order[i:j] for i, j in bounds]
+
+
+def family_cv_grid_size_sharded(
+    padded: PaddedPairs,
+    kind,
+    gammas: np.ndarray,
+    cs: np.ndarray,
+    n_epochs: int,
+    devices=None,
+    use_pallas: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> np.ndarray:
+    """(P, G, C) CV grid via size-sharded per-device lane programs.
+
+    Where `_cv_grid_sharded` shard_maps ONE program padded to the global
+    ``n_max`` over the pair x gamma axis, this driver partitions pairs by
+    subset size (`shard_lane_layout`), trims each shard to its own max,
+    and dispatches one `_cv_grid_all_pairs` program per shard to its
+    device.  Dispatch is asynchronous (jit returns before completion), so
+    on a multi-device host shards overlap; results are gathered back into
+    the original pair order.  Compile budget: one compile per distinct
+    shard shape, i.e. <= len(devices) programs.
+
+    On a single-device host the win is the padded-work saving alone —
+    har12's size spread makes the summed ``count * shard_max^2`` roughly
+    3.9x smaller at 8 shards than the global pad, independent of device
+    count.
+    """
+    kind = _training_kernel(kind)
+    use_pallas = _family_use_pallas(resolve_use_pallas(use_pallas), kind)
+    if devices is None:
+        devices = jax.devices()
+    shards = shard_lane_layout(padded.n_true, len(devices))
+    g_host = np.asarray(gammas, np.float32)
+    c_host = np.asarray(cs, np.float32)
+    out = np.empty((padded.n_pairs, len(g_host), len(c_host)), np.float32)
+    pending = []
+    for shard_idx, dev in zip(shards, devices):
+        sub = padded.take([int(i) for i in shard_idx]).trim()
+        put = lambda a: jax.device_put(jnp.asarray(a), dev)
+        acc = _cv_grid_all_pairs(
+            put(sub.x), put(sub.y), put(sub.fold_masks), put(sub.valid),
+            put(g_host), put(c_host), kind=kind, n_epochs=n_epochs,
+            use_pallas=use_pallas, interpret=interpret)
+        pending.append((shard_idx, acc))
+    for shard_idx, acc in pending:
+        out[np.asarray(shard_idx)] = np.asarray(acc)
+    return out
 
 
 # ---------------------------------------------------------------------------

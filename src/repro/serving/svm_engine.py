@@ -191,9 +191,16 @@ class SVMEngine:
                  max_wait_ms: float = DEFAULT_MAX_WAIT_MS,
                  min_bucket: int = DEFAULT_MIN_BUCKET,
                  pipeline_depth: int = 1,
-                 stats: Optional[ServingStats] = None):
+                 stats: Optional[ServingStats] = None,
+                 decider: Optional[str] = None):
         if isinstance(machine, CompiledMachine):
-            machine = compile_fleet({"default": machine})
+            machine = compile_fleet({"default": machine},
+                                    decider=decider or machine.decider)
+        elif decider is not None and decider != machine.decider:
+            machine = FleetMachine(machine.model_ids, machine._members,
+                                   use_pallas=machine.use_pallas,
+                                   interpret=machine.interpret,
+                                   decider=decider)
         if not isinstance(machine, FleetMachine):
             raise TypeError(f"cannot serve a {type(machine).__name__}")
         self.fleet = machine

@@ -1,0 +1,339 @@
+"""Tests for the big-multiclass scale-out (DESIGN.md §11).
+
+Covers the PR's guarantees:
+
+  * DAG-vs-votes agreement contract: wherever the vote winner is
+    unambiguous (a Condorcet winner — some class won all K-1 of its
+    pairs), the O(K) DDAG decision EQUALS the votes decision, at
+    K in {3, 5, 10}.  Tie policy: on non-Condorcet samples the two rules
+    may legitimately differ — votes breaks ties toward the lowest class
+    index, while the DAG resolves them by elimination order — so
+    agreement there is measured, not asserted;
+  * the compiled DAG front (`decider="dag"`) is bit-identical to the
+    ``ovo.decide_dag`` host reference on the machine's own bits, and
+    ``predict_votes`` stays bit-identical to the dense votes path;
+  * ``decider="votes"`` machines are unchanged from the default build
+    (bit-identity with the seed semantics);
+  * the ``decider`` survives save/load and threads through
+    ``compile_fleet`` / ``SVMEngine``;
+  * the har12 scale workload: K=12, P=66, deterministic, registered in
+    ``SCALE_DATASETS`` (not ``DATASETS`` — cost-model calibration parity);
+  * pair-chunked votes scoring (`dse._votes_accuracy_paired`) is exact
+    against the dense recombination, and the streaming MC engine accepts
+    P > MAX_TABLE_BITS machines;
+  * the portfolio search (greedy/flip + annealing + front polish) covers
+    the exhaustive Pareto front on a small space.
+"""
+import numpy as np
+import pytest
+
+from repro.api import compile_machine
+from repro.api.compiled import DECIDERS, CompiledMachine
+from repro.api.fleet import compile_fleet
+from repro.core import dse, ovo, svm as svm_mod
+from repro.data import datasets
+
+
+# -- host reference: DAG vs votes property -----------------------------------
+
+
+@pytest.mark.parametrize("k", [3, 5, 10])
+def test_dag_agrees_with_votes_on_condorcet_samples(k):
+    """Exact agreement wherever some class won all its pairs; DAG output
+    is always a valid class id everywhere."""
+    rng = np.random.RandomState(k)
+    p = len(ovo.class_pairs(k))
+    bits = rng.randint(0, 2, size=(500, p))
+    lv = ovo.decide_votes(bits, k)
+    ld = ovo.decide_dag(bits, k)
+    mask = ovo.condorcet_mask(bits, k)
+    assert mask.any()
+    np.testing.assert_array_equal(ld[mask], lv[mask])
+    assert ld.min() >= 0 and ld.max() < k
+
+
+def test_dag_consults_o_k_bits():
+    """The DDAG consults exactly K-1 pairs: flipping every bit OUTSIDE the
+    consulted path never changes the decision."""
+    k = 6
+    rng = np.random.RandomState(0)
+    p = len(ovo.class_pairs(k))
+    pm = ovo.pair_index_matrix(k)
+    bits = rng.randint(0, 2, size=(64, p))
+    for row in bits:
+        lo, hi = 0, k - 1
+        consulted = []
+        for _ in range(k - 1):
+            pr = pm[lo, hi]
+            consulted.append(pr)
+            if row[pr] == 1:
+                hi -= 1
+            else:
+                lo += 1
+        flipped = row.copy()
+        untouched = np.setdiff1d(np.arange(p), consulted)
+        flipped[untouched] ^= 1
+        assert ovo.decide_dag(row[None], k)[0] == \
+            ovo.decide_dag(flipped[None], k)[0]
+
+
+# -- compiled DAG front ------------------------------------------------------
+
+
+def _float_bit_machine(k, n=200, seed=0, **kw):
+    rng = np.random.RandomState(seed)
+    x = rng.rand(n, 3)
+    y = rng.randint(0, k, n)
+    clfs = []
+    for (ci, cj) in ovo.class_pairs(k):
+        mask = (y == ci) | (y == cj)
+        yy = np.where(y[mask] == ci, 1.0, -1.0)
+        m = svm_mod.train_binary(x[mask], yy, "linear", c=1.0, n_epochs=40)
+        clfs.append(ovo.FloatBitClassifier(m))
+    return compile_machine(clfs, n_classes=k, **kw), x, y
+
+
+def _mixed_bit_machine(k, n=200, seed=0, **kw):
+    """Alternating linear/rbf pairs — exercises multi-bank DAG plans."""
+    rng = np.random.RandomState(seed)
+    x = rng.rand(n, 3)
+    y = rng.randint(0, k, n)
+    clfs = []
+    for pi, (ci, cj) in enumerate(ovo.class_pairs(k)):
+        mask = (y == ci) | (y == cj)
+        yy = np.where(y[mask] == ci, 1.0, -1.0)
+        kind = "linear" if pi % 2 == 0 else "rbf"
+        m = svm_mod.train_binary(x[mask], yy, kind, gamma=2.0, c=1.0,
+                                 n_epochs=40)
+        clfs.append(ovo.FloatBitClassifier(m))
+    return compile_machine(clfs, n_classes=k, **kw), x, y
+
+
+def test_dag_step_plans_reachability_and_slicing():
+    """The static per-step plans skip exactly the banks owning no
+    reachable pair and slice kernel gathers to the reachable true support
+    count."""
+    from repro.api.compiled import _dag_step_plans
+
+    k = 6
+    machine, _, _ = _mixed_bit_machine(k, decider="dag")
+    banks = list(machine._linear_banks) + list(machine._kernel_banks)
+    n_lin = len(machine._linear_banks)
+    assert machine._kernel_banks, "mixed machine must have a kernel bank"
+    plans = machine._step_plans
+    assert plans == _dag_step_plans(machine._linear_banks,
+                                    machine._kernel_banks, k)
+    assert len(plans) == k - 1
+    pair_of = ovo.class_pairs(k)
+    for t, plan in enumerate(plans):
+        assert len(plan) == len(banks)
+        gap = k - 1 - t
+        reach = {(j, j + gap) for j in range(t + 1)}
+        for bi, (bank, entry) in enumerate(zip(banks, plan)):
+            owned = {pair_of[int(g)] for g in np.asarray(bank.pair_idx)}
+            hit = owned & reach
+            if not hit:
+                assert entry is None
+            elif bi < n_lin:
+                assert entry == -1
+            else:
+                coef = np.abs(np.asarray(bank.coef_pos)) + \
+                    np.abs(np.asarray(bank.coef_neg))
+                true_m = {pair_of[int(g)]: int((c != 0).sum())
+                          for g, c in zip(np.asarray(bank.pair_idx), coef)}
+                want = max(max(true_m[p] for p in hit), 1)
+                assert entry == want
+                assert entry <= bank.sv.shape[1]
+
+
+def test_planned_dag_bit_identical_to_unplanned():
+    """Static step pruning/slicing drops only exact +0.0 terms: the
+    planned front equals both the unplanned gather front and the host
+    reference on a mixed multi-bank machine."""
+    import jax
+
+    from repro.api.compiled import _dag_labels
+
+    k = 6
+    machine, x, _ = _mixed_bit_machine(k, decider="dag")
+    got = machine.predict(x)
+    np.testing.assert_array_equal(
+        got, ovo.decide_dag(machine.predict_bits(x), k))
+    unplanned = jax.jit(lambda xx: _dag_labels(
+        xx, k, machine._pair_matrix, machine._linear_banks,
+        machine._kernel_banks, machine._row_maps, None))
+    np.testing.assert_array_equal(
+        got, np.asarray(unplanned(np.asarray(x, np.float32))))
+
+
+def test_compiled_dag_matches_host_reference():
+    machine, x, _ = _float_bit_machine(6, decider="dag")
+    bits = machine.predict_bits(x)
+    np.testing.assert_array_equal(machine.predict(x),
+                                  ovo.decide_dag(bits, 6))
+    np.testing.assert_array_equal(machine.predict_votes(x),
+                                  ovo.decide_votes(bits, 6))
+    mask = ovo.condorcet_mask(bits, 6)
+    agree = np.mean(machine.predict(x)[mask] ==
+                    machine.predict_votes(x)[mask])
+    assert agree == 1.0
+    assert machine.dag_votes_agreement(x) >= \
+        float(np.mean(mask))  # disagreement only possible off-Condorcet
+
+
+def test_votes_decider_bit_identity_with_default():
+    """decider='votes' is the default and produces the identical machine
+    output — the seed semantics are untouched by the DAG front."""
+    m_default, x, _ = _float_bit_machine(5)
+    m_votes, _, _ = _float_bit_machine(5, decider="votes")
+    m_dag, _, _ = _float_bit_machine(5, decider="dag")
+    assert m_default.decider == "votes"
+    np.testing.assert_array_equal(m_default.predict(x), m_votes.predict(x))
+    np.testing.assert_array_equal(m_default.predict(x),
+                                  m_dag.predict_votes(x))
+
+
+def test_decider_validation_and_votes_oracle_guard():
+    with pytest.raises(ValueError, match="decider"):
+        _float_bit_machine(3, decider="nope")
+    m_votes, x, _ = _float_bit_machine(3)
+    with pytest.raises(ValueError):
+        m_votes.dag_votes_agreement(x)
+    assert set(DECIDERS) == {"votes", "dag"}
+
+
+def test_decider_save_load_roundtrip(tmp_path):
+    m_dag, x, _ = _float_bit_machine(5, decider="dag")
+    path = str(tmp_path / "dag_machine")
+    m_dag.save(path)
+    loaded = CompiledMachine.load(path)
+    assert loaded.decider == "dag"
+    np.testing.assert_array_equal(loaded.predict(x), m_dag.predict(x))
+    as_votes = CompiledMachine.load(path, decider="votes")
+    np.testing.assert_array_equal(as_votes.predict(x),
+                                  m_dag.predict_votes(x))
+
+
+def test_fleet_and_engine_thread_decider():
+    from repro.serving.svm_engine import SVMEngine
+
+    m_a, x, _ = _float_bit_machine(5, seed=1)
+    m_b, _, _ = _float_bit_machine(5, seed=2)
+    fleet = compile_fleet({"a": m_a, "b": m_b}, decider="dag")
+    assert fleet.decider == "dag"
+    idx = np.array([0, 1] * 8, np.int32)
+    xq = x[:16]
+    labels = fleet.predict(xq, idx)
+    dag_a = ovo.decide_dag(m_a.predict_bits(xq), 5)
+    dag_b = ovo.decide_dag(m_b.predict_bits(xq), 5)
+    np.testing.assert_array_equal(labels,
+                                  np.where(idx == 0, dag_a, dag_b))
+    np.testing.assert_array_equal(fleet.predict_votes(xq, idx),
+                                  np.where(idx == 0,
+                                           ovo.decide_votes(
+                                               m_a.predict_bits(xq), 5),
+                                           ovo.decide_votes(
+                                               m_b.predict_bits(xq), 5)))
+    with SVMEngine(m_a, max_batch=16, decider="dag") as eng:
+        got = eng.predict(xq)
+    np.testing.assert_array_equal(got, dag_a)
+
+
+# -- har12 scale workload ----------------------------------------------------
+
+
+def test_har12_dataset_contract():
+    ds = datasets.load("har12")
+    assert ds.n_classes == 12
+    assert len(ovo.class_pairs(ds.n_classes)) == 66
+    n = len(ds.y_train) + len(ds.y_test)
+    assert n >= 5000
+    assert ds.x_train.shape[1] == 5  # paper's FE feature budget
+    np.testing.assert_array_equal(np.unique(ds.y_train), np.arange(12))
+    np.testing.assert_array_equal(np.unique(ds.y_test), np.arange(12))
+    ds2 = datasets.load("har12")
+    np.testing.assert_array_equal(ds.x_train, ds2.x_train)  # deterministic
+    assert "har12" in datasets.SCALE_DATASETS
+    assert "har12" not in datasets.DATASETS
+
+
+def test_har_feature_stage_shapes():
+    rng = np.random.RandomState(0)
+    w = rng.randn(7, datasets.HAR12_WINDOW, 3)
+    feats = datasets.har_feature_stage(w)
+    assert feats.shape == (7, 9)
+    assert np.isfinite(feats).all()
+
+
+# -- P > MAX_TABLE_BITS scoring paths ----------------------------------------
+
+
+def test_paired_votes_scoring_exact_vs_dense():
+    """The pair-chunked recombination equals the dense selected-bits path
+    bit-for-bit, including at P not divisible by the chunk."""
+    import jax.numpy as jnp
+
+    for k, s in ((6, 9), (12, 5)):
+        p = len(ovo.class_pairs(k))
+        rng = np.random.RandomState(k)
+        bits4 = rng.randint(0, 2, size=(2, 40, p, 2)).astype(np.int32)
+        a = rng.randint(0, 2, size=(s, p)).astype(np.int32)
+        y = rng.randint(0, k, 40).astype(np.int32)
+        va, vb = dse._vote_matrices(k)
+        got = np.asarray(dse._votes_accuracy_paired(
+            jnp.asarray(bits4), jnp.asarray(a), jnp.asarray(y),
+            jnp.asarray(va), jnp.asarray(vb)))
+        ref = np.stack([np.asarray(dse._votes_accuracy(
+            jnp.asarray(bits4[b]), jnp.asarray(a), jnp.asarray(y),
+            jnp.asarray(va), jnp.asarray(vb))) for b in range(2)])
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_multiclass_bank_past_table_bits():
+    """MulticlassSVM construction at K=6 (P=15 > MAX_TABLE_BITS) no longer
+    builds the 2^P table and decides via votes."""
+    assert ovo.MAX_TABLE_BITS == 12
+    machine, x, _ = _float_bit_machine(6)
+    assert machine._decider.table is None
+    assert machine.predict(x).shape == x[:, 0].shape
+
+
+# -- portfolio search covers the exhaustive front ----------------------------
+
+
+def test_portfolio_front_covers_exhaustive_front():
+    """Forced portfolio (max_exhaustive=0) finds every exhaustive-front
+    point on a small space — the small-P oracle contract."""
+    from repro.core import hwcost, trainer
+    from repro.core.analog import AnalogBinaryClassifier
+    from repro.core.ovo import DigitalLinearClassifier
+    from repro.core.svm import SVMModel
+
+    k, d, m = 4, 3, 6
+    rng = np.random.RandomState(0)
+    hw = trainer.default_hw(0)
+    gamma = float(trainer.hw_gamma_grid(hw)[3])
+    cands = []
+    for _ in ovo.class_pairs(k):
+        w = rng.randn(d)
+        lin = SVMModel(kind="linear", support_x=np.zeros((1, d)),
+                       support_y=np.ones(1), alpha=np.zeros(1),
+                       bias=float(-w.sum() / 2), gamma=1.0, c=1.0, w=w)
+        sv = rng.rand(m, d)
+        yv = np.where(rng.rand(m) > 0.5, 1.0, -1.0)
+        rbf = SVMModel(kind="hw", support_x=sv, support_y=yv,
+                       alpha=rng.rand(m) + 0.1,
+                       bias=float(rng.randn() * 0.1),
+                       gamma=gamma, c=1.0, kernel_fn=hw.kernel_response)
+        cands.append((DigitalLinearClassifier.deploy(lin),
+                      AnalogBinaryClassifier.deploy(rbf, hw)))
+    space = dse.DesignSpace.from_candidates(cands, k, hwcost.CostModel())
+    x = rng.rand(120, d)
+    y = rng.randint(0, k, 120)
+    ex = space.sweep(x, y)
+    po = space.sweep(x, y, max_exhaustive=0, rng_seed=0)
+    assert ex.exhaustive and not po.exhaustive
+    ex_keys = {tuple(a) for a in np.asarray(ex.assignments[ex.front], bool)}
+    po_keys = {tuple(a) for a in np.asarray(po.assignments[po.front], bool)}
+    missing = ex_keys - po_keys
+    assert not missing, f"portfolio missed {len(missing)} front points"

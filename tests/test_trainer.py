@@ -282,3 +282,106 @@ def test_sharded_cv_grid_matches_local():
                          capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
     assert "OK" in res.stdout
+
+
+# -- size-sharded lane layout (DESIGN.md §11) --------------------------------
+
+
+def test_seq_gamma_grid_matches_vmap():
+    """lax.map over the gamma axis is numerically identical to the vmap
+    (the memory heuristic must never change CV selections)."""
+    rng = np.random.RandomState(0)
+    x = rng.rand(40, 4).astype(np.float32)
+    y = np.where(rng.rand(40) > 0.5, 1.0, -1.0).astype(np.float32)
+    v = np.ones(40, np.float32)
+    fm = np.zeros((4, 40), np.float32)
+    for f in range(4):
+        fm[f, f::4] = 1.0
+    g = jnp.asarray([0.1, 0.5, 1.0], jnp.float32)
+    c = jnp.asarray([0.5, 2.0], jnp.float32)
+    args = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(fm), jnp.asarray(v),
+            g, c, "rbf", 20)
+    a_vmap = np.asarray(trainer._pair_cv_grid(*args, seq_gamma=False))
+    a_seq = np.asarray(trainer._pair_cv_grid(*args, seq_gamma=True))
+    np.testing.assert_allclose(a_seq, a_vmap, atol=1e-6)
+
+
+def test_seq_gamma_gate_engages_at_scale():
+    """The trace-time gate picks vmap at UCI shapes and lax.map at the
+    har12 scale-out shapes (P=66, n_max~1582, G=7: a ~4.6 GB Gram stack)."""
+    class Shaped:
+        def __init__(self, s):
+            self.shape = s
+
+    assert not trainer._seq_gamma(Shaped((10, 200, 5)), Shaped((7,)))
+    assert trainer._seq_gamma(Shaped((66, 1582, 5)), Shaped((7,)))
+
+
+def test_shard_lane_layout_partition_properties():
+    """Shards are a permutation partition, respect the shard cap, and the
+    makespan (count * shard_max^2) never worsens with more shards."""
+    sizes = [198, 220, 300, 420, 500, 640, 800, 1000, 1200, 1400, 1582, 1582]
+
+    def makespan(shards):
+        return max(len(s) * int(max(np.asarray(sizes)[s])) ** 2
+                   for s in shards)
+
+    prev = None
+    for d in (1, 2, 4, 8, 20):
+        shards = trainer.shard_lane_layout(sizes, d)
+        assert 1 <= len(shards) <= max(1, min(d, len(sizes)))
+        flat = np.sort(np.concatenate(shards))
+        np.testing.assert_array_equal(flat, np.arange(len(sizes)))
+        m = makespan(shards)
+        if prev is not None:
+            assert m <= prev
+        prev = m
+    assert len(trainer.shard_lane_layout(sizes, 1)) == 1
+
+
+def test_padded_pairs_trim_shard_local():
+    """take().trim() re-pads a shard to its own max; grid values on the
+    shard are identical to the globally padded program's."""
+    rng = np.random.RandomState(1)
+    x = rng.rand(90, 3)
+    y = rng.randint(0, 4, 90)
+    padded = trainer.pad_pairs(x, y, 4, n_folds=4, seed=0)
+    shards = trainer.shard_lane_layout(padded.n_true, 3)
+    assert len({padded.take([int(i) for i in s]).trim().n_max
+                for s in shards}) > 1  # shard maxima actually differ
+    g = np.array([0.5, 2.0])
+    c = np.array([1.0, 10.0])
+    ref = trainer.family_cv_grid(padded, "rbf", g, c, 15)
+    got = trainer.family_cv_grid_size_sharded(padded, "rbf", g, c, 15)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_size_sharded_grid_8_devices():
+    """Size-sharded per-device dispatch on 8 fake devices reproduces the
+    single-program grid (subprocess so XLA_FLAGS doesn't leak)."""
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        from repro.core import trainer
+
+        assert len(jax.devices()) == 8
+        rng = np.random.RandomState(0)
+        x = rng.rand(120, 3)
+        y = rng.randint(0, 5, 120)
+        padded = trainer.pad_pairs(x, y, 5, n_folds=4, seed=0)
+        g = np.array([0.5, 2.0]); c = np.array([1.0, 10.0])
+        ref = trainer.family_cv_grid(padded, "rbf", g, c, 15)
+        got = trainer.family_cv_grid_size_sharded(padded, "rbf", g, c, 15)
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+        shards = trainer.shard_lane_layout(padded.n_true, 8)
+        assert len(shards) <= 8
+        print("OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", body], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "OK" in res.stdout
