@@ -3,9 +3,10 @@
 Runs the three passes, merges findings against the baseline, writes the
 JSON report, prints the text summary, and exits non-zero iff any finding
 is not covered by a waiver.  ``--update-baseline`` rewrites the baseline
-to waive every current finding (each pre-filled with a placeholder reason
-that MUST be edited — ``load_baseline`` rejects empty justifications, and
-review rejects placeholders).
+to waive every current finding; NEW waivers take their justification from
+the mandatory ``--reason`` flag (prior waivers keep theirs), and
+``load_baseline`` rejects empty or ``TODO``-placeholder justifications so
+an unedited reason can never pass review silently.
 """
 from __future__ import annotations
 
@@ -61,7 +62,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="committed waiver baseline (analysis_baseline.json)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite --baseline waiving every current finding "
-                         "(placeholder reasons must be edited)")
+                         "(new waivers need --reason)")
+    ap.add_argument("--reason", metavar="TEXT", default=None,
+                    help="justification recorded on NEW waivers written by "
+                         "--update-baseline (prior waivers keep theirs)")
     ap.add_argument("--no-jaxpr", action="store_true",
                     help="skip Pass 1 (entry-point tracing)")
     ap.add_argument("--no-ast", action="store_true",
@@ -86,8 +90,16 @@ def main(argv: list[str] | None = None) -> int:
         waivers, seen = [], set()
         for f in report.findings:
             prior = next((w for w in old if w.covers(f)), None)
-            w = prior or Waiver(rule=f.rule, match=f.site,
-                                reason="TODO: justify this waiver")
+            if prior is None:
+                reason = (args.reason or "").strip()
+                if not reason or reason.upper().startswith("TODO"):
+                    ap.error(
+                        f"new finding {f.rule}::{f.site} needs a real "
+                        "justification: pass --reason \"why this is "
+                        "acceptable\" (TODO placeholders are rejected)")
+                w = Waiver(rule=f.rule, match=f.site, reason=reason)
+            else:
+                w = prior
             if (w.rule, w.match) not in seen:
                 seen.add((w.rule, w.match))
                 waivers.append(w)

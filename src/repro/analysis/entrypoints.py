@@ -131,6 +131,20 @@ def build_registry() -> list[EntryPoint]:
         check_donation=True, jit_fn=fleet._labels_jit,
         donation_args=(x_in, idx_in)))
 
+    # -- mesh-sharded serving forward (DESIGN.md §12.1) ---------------------
+    # Same labels program through the shard_map data-parallel leg on a
+    # 1-device serving mesh (valid on single-device CI): re-verifies that
+    # sharding preserves the model_idx -> label-output donation.
+    from repro.launch.mesh import make_serving_mesh
+
+    sharded = fleet.shard(make_serving_mesh(1))
+    entries.append(EntryPoint(
+        symbol="FleetMachine._labels[sharded]",
+        path="src/repro/api/fleet.py",
+        fn=fleet._labels, args=(x_in, idx_in),
+        check_donation=True, jit_fn=sharded._labels_jit,
+        donation_args=(x_in, idx_in)))
+
     # -- DAG decision front (O(K) pair evaluations; DESIGN.md §11) ----------
     machine_dag = api.compile_machine([lin, rbf, hw_clf], n_classes=3,
                                       decider="dag")

@@ -81,10 +81,16 @@ def load_baseline(path: Optional[str]) -> list[Waiver]:
         raise ValueError(f"{path} is not a {BASELINE_FORMAT} file")
     waivers = []
     for w in data.get("waivers", []):
-        if not w.get("reason", "").strip():
+        reason = w.get("reason", "").strip()
+        if not reason:
             raise ValueError(
                 f"baseline waiver {w.get('rule')}::{w.get('match')} has no "
                 "justification — every waiver must say why")
+        if reason.upper().startswith("TODO"):
+            raise ValueError(
+                f"baseline waiver {w.get('rule')}::{w.get('match')} has a "
+                f"placeholder justification ({reason!r}) — replace the TODO "
+                "with the actual reason this finding is acceptable")
         waivers.append(Waiver(rule=w["rule"], match=w["match"],
                               reason=w["reason"]))
     return waivers

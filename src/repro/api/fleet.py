@@ -136,6 +136,8 @@ class FleetMachine:
         self._forward_jit = jax.jit(self._forward)
         # Serving hot path: labels only, model_idx donated -> label buffer.
         self._labels_jit = jax.jit(self._labels, donate_argnums=(1,))
+        # Data-parallel serving legs, one per mesh (DESIGN.md §12.1).
+        self._sharded: dict = {}
 
     # -- introspection -------------------------------------------------------
 
@@ -213,6 +215,23 @@ class FleetMachine:
             return jnp.take_along_axis(
                 lab, model_idx[None, :].astype(jnp.int32), axis=0)[0]
         return self._forward(x, model_idx)[0]
+
+    # -- data-parallel serving leg (DESIGN.md §12.1) -------------------------
+
+    def shard(self, mesh) -> "ShardedFleetForward":
+        """The mesh-sharded labels program for ``mesh`` (cached per mesh).
+
+        ``mesh`` is a 1-D ``launch.mesh.make_serving_mesh`` mesh; the
+        returned :class:`ShardedFleetForward` runs this fleet's exact
+        ``_labels`` program on each device's row slice (banks replicated,
+        batch axis sharded, no collectives), so every per-device slice is
+        bit-identical to the single-device forward on the same rows.
+        """
+        fwd = self._sharded.get(mesh)
+        if fwd is None:
+            fwd = ShardedFleetForward(self, mesh)
+            self._sharded[mesh] = fwd
+        return fwd
 
     # -- host API ------------------------------------------------------------
 
@@ -310,6 +329,73 @@ class FleetMachine:
             decider = meta.get("decider", "votes")
         return cls(ids, machines, use_pallas=use_pallas, interpret=interpret,
                    decider=decider)
+
+
+class ShardedFleetForward:
+    """Data-parallel fleet labels over a ``make_serving_mesh`` (DESIGN.md §12.1).
+
+    ``shard_map`` splits the ``(n, d_max)`` batch across the mesh's
+    ``"batch"`` axis; banks are replicated (they are closed-over
+    constants of the member subgraphs) and there are NO collectives, so
+    each device executes the *identical* single-device ``_labels``
+    program on its ``n / n_devices`` row slice — the PR 7 bit-identity
+    contract extends per shard.  The jit keeps the serving hot path's
+    donation: ``model_idx`` (i32 ``(n,)``) is donated and reused for the
+    label output, verified by the analyzer on a 1-device mesh
+    (``FleetMachine._labels[sharded]`` entry point).
+
+    Callers pass HOST numpy arrays whose row count is a multiple of
+    ``n_devices`` (the engine rounds buckets to whole per-device slices
+    and validity-masks the tail padding); jit commits them straight to
+    the sharded layout — no per-dispatch ``device_put`` round trip.
+    """
+
+    def __init__(self, fleet: FleetMachine, mesh):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.launch.mesh import SERVING_AXIS
+
+        if tuple(mesh.axis_names) != (SERVING_AXIS,):
+            raise ValueError(
+                f"serving mesh needs the 1-D axis ({SERVING_AXIS!r},) "
+                f"(launch.mesh.make_serving_mesh); got {mesh.axis_names}")
+        self.fleet = fleet
+        self.mesh = mesh
+        self.n_devices = int(mesh.shape[SERVING_AXIS])
+        spec = PartitionSpec(SERVING_AXIS)
+        self._sharding = NamedSharding(mesh, spec)
+        self._labels_jit = jax.jit(
+            shard_map(fleet._labels, mesh=mesh, in_specs=(spec, spec),
+                      out_specs=spec),
+            in_shardings=(self._sharding, self._sharding),
+            out_shardings=self._sharding,
+            donate_argnums=(1,))
+
+    def global_rows(self, per_device_rows: int) -> int:
+        """Whole-slice rounding: the global batch for one device bucket."""
+        return int(per_device_rows) * self.n_devices
+
+    def __call__(self, x, model_idx) -> jnp.ndarray:
+        """Async sharded dispatch; rows must divide evenly over devices."""
+        n = x.shape[0]
+        if n % self.n_devices:
+            raise ValueError(
+                f"{n} rows not divisible into {self.n_devices} device "
+                f"slices; pad to whole per-device slices first")
+        return self._labels_jit(x, model_idx)
+
+    def predict(self, x: np.ndarray, model) -> np.ndarray:
+        """Blocking convenience wrapper: pads the tail to whole per-device
+        slices (zeros, model 0 — computed and discarded), trims on return."""
+        x = self.fleet._pad_features(x)
+        idx = self.fleet._resolve_idx(model, x.shape[0])
+        n = x.shape[0]
+        pad = -n % self.n_devices
+        if pad:
+            x = np.pad(x, ((0, pad), (0, 0)))
+            idx = np.pad(idx, (0, pad))
+        return np.asarray(self(x, idx))[:n]
 
 
 def compile_fleet(

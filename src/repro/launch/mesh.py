@@ -61,5 +61,24 @@ def make_variant_mesh(n_devices: int | None = None):
     return jax.make_mesh((n,), (VARIANTS_AXIS,), **_axis_kwargs(1))
 
 
+#: Mesh axis the serving engine's data-parallel forward shards over
+#: (DESIGN.md §12).
+SERVING_AXIS = "batch"
+
+
+def make_serving_mesh(n_devices: int | None = None):
+    """1-D mesh for the fleet serving engine's data-parallel forward.
+
+    The single axis is named ``"batch"`` (:data:`SERVING_AXIS`): the
+    engine's padded dispatch batch shards across it (banks replicated,
+    no collectives — each device runs the exact single-device labels
+    program on its row slice, DESIGN.md §12.1).  A 1-device mesh is
+    valid and is how the analyzer verifies the sharded program's
+    donation contract on single-device CI.
+    """
+    n = int(n_devices) if n_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), (SERVING_AXIS,), **_axis_kwargs(1))
+
+
 def dp_axes(multi_pod: bool) -> tuple:
     return ("pod", "data") if multi_pod else ("data",)

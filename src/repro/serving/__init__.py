@@ -3,11 +3,14 @@
 Two engines live here: the LLM prefill/decode substrate (``engine``, the
 seed's shape template) and the SVM fleet streaming engine
 (``svm_engine``): micro-batched, padding-bucketed, multi-model co-batched
-serving for compiled SVM fleets (DESIGN.md §9).
+serving for compiled SVM fleets, with deadline/priority continuous
+batching, admission control, and mesh-sharded dispatch (DESIGN.md §9,
+§12).
 """
 from repro.serving import engine  # noqa: F401
 from repro.serving.svm_engine import (  # noqa: F401
     BucketPolicy,
     ServingStats,
+    ShedError,
     SVMEngine,
 )

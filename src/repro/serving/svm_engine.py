@@ -5,10 +5,32 @@ one caller, one batch, one dispatch.  A deployed fleet instead sees a
 continuous stream of small queries from many tenants.  This engine turns
 that stream back into efficient device batches:
 
-* **Micro-batching** — requests accumulate in an async queue under a
-  max-wait / max-batch policy: a batch dispatches as soon as it is full
-  OR the oldest request has waited ``max_wait_ms``, trading a bounded
-  latency floor for device efficiency.
+* **Micro-batching** — requests accumulate in per-priority-class queues
+  under a max-wait / max-batch policy: a batch dispatches as soon as it
+  is full OR the oldest selected request has waited ``max_wait_ms``,
+  trading a bounded latency floor for device efficiency.
+
+* **Continuous batching with deadlines and priorities** — ``submit``
+  takes ``deadline_ms=`` and ``priority=`` (higher = more important).
+  The batch former serves priority classes in order, earliest deadline
+  first within a class, and BACKFILLS across classes: any request whose
+  deadline falls inside the expiry horizon is pulled into the next batch
+  in EDF order regardless of class, so low-priority work about to expire
+  rides along instead of dying in queue.  Non-expiring low-priority work
+  can never displace higher-priority work (no priority inversion).
+
+* **Admission control at saturation** — with ``queue_bound`` set, the
+  pending-row count is hard-bounded: on overflow the engine first sheds
+  already-expired queued work, then queued work of strictly lower
+  priority than the incoming request (latest deadline first), else the
+  incoming request itself.  Shed futures resolve with :class:`ShedError`
+  (``reason`` is ``"expired"`` or ``"overflow"``).  With
+  ``shed_expired=True`` the batch former also drops queued requests
+  whose deadline already passed instead of wasting device cycles on
+  them.  ``engine.backpressure`` is a high/low-watermark signal
+  (``True`` above ``high_watermark`` pending rows until the backlog
+  drains below ``low_watermark``) that ``submit`` keeps current so
+  open-loop producers can throttle.
 
 * **Padding buckets** — every dispatch is padded up to a power-of-two
   batch size (:class:`BucketPolicy`), so the engine touches at most
@@ -17,44 +39,61 @@ that stream back into efficient device batches:
   eagerly; the benchmark gates ``<= 1`` compile per bucket).  Padded rows
   carry zeros and model 0 — their labels are computed and discarded.
 
+* **Mesh-sharded dispatch** — with ``mesh=`` (a
+  ``launch.mesh.make_serving_mesh``), dispatches go through the fleet's
+  data-parallel :class:`~repro.api.fleet.ShardedFleetForward`:
+  ``max_batch``/``min_bucket`` become PER-DEVICE bucket sizes, the
+  global batch is the per-device bucket times the device count (buckets
+  round to whole per-device slices; the tail padding is validity-masked
+  by construction — padded rows' labels are discarded on unpack), and
+  every device runs the exact single-device labels program on its row
+  slice (DESIGN.md §12.1).
+
 * **Co-batching** — the engine serves a :class:`~repro.api.FleetMachine`,
   so one dispatch carries rows for ANY mix of member models, routed by
   model index in-graph and un-padded/re-split per request on return.  A
   bare :class:`~repro.api.CompiledMachine` is wrapped into a one-member
   fleet.
 
-* **Double-buffered donated staging** — each bucket owns TWO pinned host
-  staging buffers used alternately, and the jitted forward donates the
-  ``model_idx`` device buffer (reused for the label output, the alias the
-  static analyzer verifies).  Dispatch is asynchronous: after launching
-  batch *t* the batcher immediately stages batch *t+1* while the device
-  computes, and only blocks on batch *t*'s result when the pipeline is
-  ``pipeline_depth`` deep (default 1 = classic double buffering).
+* **Pipelined donated staging** — each bucket owns ``pipeline_depth + 1``
+  pinned host staging buffers used round-robin, and the jitted forward
+  donates the ``model_idx`` device buffer (reused for the label output,
+  the alias the static analyzer verifies).  Dispatch is asynchronous:
+  after launching batch *t* the batcher immediately stages batch *t+1*
+  while the device computes, and only blocks on the oldest batch once
+  ``pipeline_depth`` batches are in flight (default 1 = classic double
+  buffering; deeper pipelines keep a mesh busy across staging gaps).
 
 * **Observability** — per-request enqueue -> dispatch -> complete
-  timestamps feed a :class:`ServingStats` accumulator: queries/s, batch
-  occupancy and p50/p95/p99 latency (``benchmarks/serving.py`` turns
-  these into the BENCH trajectory numbers).
+  timestamps feed a :class:`ServingStats` accumulator with EXACT
+  streaming totals (counts, rows, span, mean/max latency) and a
+  fixed-size latency reservoir for percentiles, so memory stays flat
+  under sustained traffic (``benchmarks/serving.py`` turns these into
+  the BENCH trajectory numbers).
 
 Usage::
 
-    from repro.serving import SVMEngine
-    with SVMEngine(fleet, max_batch=256, max_wait_ms=2.0) as eng:
-        fut = eng.submit(x_row, model="balance")   # returns a Future
-        label = fut.result()
+    from repro.serving import SVMEngine, ShedError
+    with SVMEngine(fleet, max_batch=256, max_wait_ms=2.0,
+                   shed_expired=True, queue_bound=4096) as eng:
+        fut = eng.submit(x_row, model="balance", deadline_ms=20.0)
+        try:
+            label = fut.result()
+        except ShedError as e:
+            ...  # request shed under overload (e.reason)
         print(eng.stats.summary())
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
+import heapq
+import math
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Optional, Union
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api.compiled import CompiledMachine
@@ -63,6 +102,20 @@ from repro.api.fleet import FleetMachine, compile_fleet
 DEFAULT_MAX_BATCH = 256
 DEFAULT_MIN_BUCKET = 8
 DEFAULT_MAX_WAIT_MS = 2.0
+DEFAULT_RESERVOIR = 4096
+
+
+class ShedError(Exception):
+    """A request was shed by admission control instead of served.
+
+    ``reason`` is ``"expired"`` (deadline passed before dispatch) or
+    ``"overflow"`` (bounded queue full and the request lost the
+    priority/deadline comparison).
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(f"request shed ({reason})")
+        self.reason = reason
 
 
 def _is_pow2(n: int) -> bool:
@@ -74,7 +127,8 @@ class BucketPolicy:
 
     ``bucket_for(n)`` returns the smallest bucket holding ``n`` rows; the
     bucket set IS the engine's compiled-program set, so its size bounds
-    compile count and warm-up cost.
+    compile count and warm-up cost.  Under a serving mesh the buckets are
+    PER-DEVICE sizes; the engine multiplies by the device count.
     """
 
     def __init__(self, max_batch: int = DEFAULT_MAX_BATCH,
@@ -104,65 +158,136 @@ class BucketPolicy:
 
 
 class ServingStats:
-    """Per-request latency + per-batch occupancy accumulator.
+    """Streaming serving telemetry with FLAT memory under sustained load.
 
-    Timestamps (``time.perf_counter`` seconds) are recorded by the engine:
-    ``t_enqueue`` at ``submit``, ``t_dispatch`` when the batch launches on
-    device, ``t_complete`` when the request's future resolves.  Queries
-    are counted in ROWS (a k-row request is k queries).
+    Totals (request/row/batch counts, stream span, mean/max latency,
+    occupancy, shed counts) are EXACT streaming accumulators; latency
+    and queue-wait percentiles come from a fixed-size reservoir sample
+    (Algorithm R over per-request latencies), so a week of traffic costs
+    the same memory as a minute.  Timestamps are ``time.perf_counter``
+    seconds stamped by the engine: ``t_enqueue`` at ``submit``,
+    ``t_dispatch`` at device launch, ``t_complete`` when the future
+    resolves.  Queries are counted in ROWS (a k-row request is k
+    queries).
     """
 
-    def __init__(self):
+    def __init__(self, reservoir: int = DEFAULT_RESERVOIR, seed: int = 0):
         self._lock = threading.Lock()
+        self._capacity = int(reservoir)
+        self._seed = int(seed)
         self.reset()
 
     def reset(self) -> None:
         with self._lock:
-            self._req: list[tuple[float, float, float, int]] = []
-            self._batch: list[tuple[int, int]] = []   # (rows, bucket)
+            self._rng = np.random.RandomState(self._seed)
+            self._n_req = 0
+            self._n_rows = 0
+            self._n_batches = 0
+            self._sum_occupancy = 0.0
+            self._t_first = math.inf
+            self._t_last = -math.inf
+            self._sum_lat = 0.0
+            self._max_lat = 0.0
+            self._sum_wait = 0.0
+            self._n_deadline = 0          # requests that carried a deadline
+            self._n_deadline_met = 0
+            self._n_shed = 0
+            self._shed_rows = 0
+            self._shed_reasons: dict[str, int] = {}
+            # Fixed-size reservoirs: (latency_ms, wait_ms) per request.
+            self._res = np.zeros((self._capacity, 2), np.float64)
+            self._res_n = 0               # requests seen by the reservoir
 
-    def observe_batch(self, rows: int, bucket: int,
-                      requests) -> None:
+    # -- ingestion -----------------------------------------------------------
+
+    def observe_batch(self, rows: int, bucket: int, requests) -> None:
         with self._lock:
-            self._batch.append((rows, bucket))
+            self._n_batches += 1
+            self._sum_occupancy += rows / bucket
             for r in requests:
-                self._req.append(
-                    (r.t_enqueue, r.t_dispatch, r.t_complete, r.n_rows))
+                lat_ms = (r.t_complete - r.t_enqueue) * 1e3
+                wait_ms = (r.t_dispatch - r.t_enqueue) * 1e3
+                self._n_req += 1
+                self._n_rows += r.n_rows
+                self._t_first = min(self._t_first, r.t_enqueue)
+                self._t_last = max(self._t_last, r.t_complete)
+                self._sum_lat += lat_ms
+                self._max_lat = max(self._max_lat, lat_ms)
+                self._sum_wait += wait_ms
+                if r.deadline != math.inf:
+                    self._n_deadline += 1
+                    if r.t_complete <= r.deadline:
+                        self._n_deadline_met += 1
+                # Algorithm R: uniform sample over the full stream.
+                if self._res_n < self._capacity:
+                    self._res[self._res_n] = (lat_ms, wait_ms)
+                else:
+                    j = self._rng.randint(0, self._res_n + 1)
+                    if j < self._capacity:
+                        self._res[j] = (lat_ms, wait_ms)
+                self._res_n += 1
+
+    def observe_shed(self, request, reason: str) -> None:
+        with self._lock:
+            self._n_shed += 1
+            self._shed_rows += request.n_rows
+            self._shed_reasons[reason] = \
+                self._shed_reasons.get(reason, 0) + 1
+
+    # -- readout -------------------------------------------------------------
 
     @property
     def n_requests(self) -> int:
         with self._lock:
-            return len(self._req)
+            return self._n_req
+
+    @property
+    def n_shed(self) -> int:
+        with self._lock:
+            return self._n_shed
 
     def summary(self) -> dict:
         with self._lock:
-            req = list(self._req)
-            bat = list(self._batch)
-        if not req:
-            return {"n_requests": 0, "n_queries": 0, "n_batches": 0}
-        lat_ms = np.asarray([(done - enq) * 1e3
-                             for enq, _, done, _ in req])
-        wait_ms = np.asarray([(disp - enq) * 1e3
-                              for enq, disp, _, _ in req])
-        rows = sum(r[3] for r in req)
-        span = max(r[2] for r in req) - min(r[0] for r in req)
-        occ = np.asarray([r / b for r, b in bat])
-        return {
-            "n_requests": len(req),
-            "n_queries": int(rows),
-            "n_batches": len(bat),
-            "queries_per_s": round(rows / span, 1) if span > 0 else None,
-            "batch_occupancy": round(float(occ.mean()), 4),
-            "mean_batch_rows": round(rows / len(bat), 2),
-            "latency_ms": {
-                "p50": round(float(np.percentile(lat_ms, 50)), 3),
-                "p95": round(float(np.percentile(lat_ms, 95)), 3),
-                "p99": round(float(np.percentile(lat_ms, 99)), 3),
-                "mean": round(float(lat_ms.mean()), 3),
-                "max": round(float(lat_ms.max()), 3),
-            },
-            "queue_wait_ms_p50": round(float(np.percentile(wait_ms, 50)), 3),
-        }
+            if not self._n_req and not self._n_shed:
+                return {"n_requests": 0, "n_queries": 0, "n_batches": 0}
+            out = {
+                "n_requests": self._n_req,
+                "n_queries": self._n_rows,
+                "n_batches": self._n_batches,
+            }
+            if self._n_shed:
+                out["shed"] = {"n_requests": self._n_shed,
+                               "n_queries": self._shed_rows,
+                               "reasons": dict(self._shed_reasons)}
+            if not self._n_req:
+                return out
+            span = self._t_last - self._t_first
+            sample = self._res[: min(self._res_n, self._capacity)]
+            lat, wait = sample[:, 0], sample[:, 1]
+            out.update({
+                "queries_per_s": round(self._n_rows / span, 1)
+                if span > 0 else None,
+                "batch_occupancy": round(
+                    self._sum_occupancy / self._n_batches, 4),
+                "mean_batch_rows": round(self._n_rows / self._n_batches, 2),
+                "latency_ms": {
+                    "p50": round(float(np.percentile(lat, 50)), 3),
+                    "p95": round(float(np.percentile(lat, 95)), 3),
+                    "p99": round(float(np.percentile(lat, 99)), 3),
+                    "mean": round(self._sum_lat / self._n_req, 3),
+                    "max": round(self._max_lat, 3),
+                },
+                "queue_wait_ms_p50": round(float(np.percentile(wait, 50)), 3),
+                "latency_sample_n": int(min(self._res_n, self._capacity)),
+            })
+            if self._n_deadline:
+                out["deadlines"] = {
+                    "n_requests": self._n_deadline,
+                    "met": self._n_deadline_met,
+                    "met_rate": round(
+                        self._n_deadline_met / self._n_deadline, 4),
+                }
+            return out
 
 
 @dataclasses.dataclass
@@ -173,17 +298,26 @@ class _Request:
     scalar: bool             # 1-D submit -> scalar label result
     future: Future
     t_enqueue: float
+    deadline: float          # absolute perf_counter s; inf = none
+    priority: int            # higher = more important
+    seq: int                 # submit order, FIFO tie-break
     t_dispatch: float = 0.0
     t_complete: float = 0.0
 
+    @property
+    def order(self) -> tuple:
+        """Heap key inside a priority class: EDF, then FIFO."""
+        return (self.deadline, self.seq)
+
 
 class SVMEngine:
-    """Micro-batched, padding-bucketed, multi-model co-batched serving.
+    """Deadline/priority continuous-batched, bucketed, co-batched serving.
 
     See the module docstring for the design.  The engine owns ONE batcher
     thread; ``submit`` is thread-safe and non-blocking, returning a
     :class:`concurrent.futures.Future` that resolves to the request's
-    label(s).  Use as a context manager, or ``start()``/``stop()``.
+    label(s) — or raises :class:`ShedError` if admission control shed it.
+    Use as a context manager, or ``start()``/``stop()``.
     """
 
     def __init__(self, machine: Union[FleetMachine, CompiledMachine], *,
@@ -191,6 +325,12 @@ class SVMEngine:
                  max_wait_ms: float = DEFAULT_MAX_WAIT_MS,
                  min_bucket: int = DEFAULT_MIN_BUCKET,
                  pipeline_depth: int = 1,
+                 mesh=None,
+                 shed_expired: bool = False,
+                 queue_bound: Optional[int] = None,
+                 high_watermark: Optional[int] = None,
+                 low_watermark: Optional[int] = None,
+                 backfill_ms: Optional[float] = None,
                  stats: Optional[ServingStats] = None,
                  decider: Optional[str] = None):
         if isinstance(machine, CompiledMachine):
@@ -206,21 +346,58 @@ class SVMEngine:
         self.fleet = machine
         self.policy = BucketPolicy(max_batch=max_batch, min_bucket=min_bucket)
         self.max_wait_s = float(max_wait_ms) * 1e-3
+        if pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{pipeline_depth}")
         self.pipeline_depth = int(pipeline_depth)
+        self.shed_expired = bool(shed_expired)
+        self.queue_bound = None if queue_bound is None else int(queue_bound)
+        if self.queue_bound is not None and self.queue_bound < 1:
+            raise ValueError(f"queue_bound must be >= 1, got {queue_bound}")
+        if high_watermark is None:
+            high_watermark = self.queue_bound
+        if low_watermark is None:
+            low_watermark = None if high_watermark is None \
+                else max(1, high_watermark // 2)
+        self.high_watermark = high_watermark
+        self.low_watermark = low_watermark
+        # Cross-class EDF backfill horizon: a request whose deadline falls
+        # within `now + backfill` is treated as expiring and served EDF
+        # regardless of priority class (default: one max-wait plus the
+        # EMA batch service time, i.e. "would miss the batch after next").
+        self._backfill_s = None if backfill_ms is None \
+            else float(backfill_ms) * 1e-3
+        self._service_ema = 0.0
         self.stats = stats if stats is not None else ServingStats()
 
+        # Mesh-sharded forward: per-device buckets scale to whole-slice
+        # global batches (DESIGN.md §12.1).
+        if mesh is not None:
+            self._sharded = self.fleet.shard(mesh)
+            self.n_devices = self._sharded.n_devices
+        else:
+            self._sharded = None
+            self.n_devices = 1
+
         d = self.fleet.n_features
-        # Two pinned host staging buffers per bucket, used alternately:
-        # buffer A is refilled for batch t+1 while batch t (staged from
-        # buffer B) is still in flight on device.
+        # pipeline_depth + 1 pinned host staging buffers per bucket, used
+        # round-robin: with k batches in flight the batcher stages batch
+        # t+k into the free buffer while the device works through t..t+k-1.
         self._staging = {
-            b: [(np.zeros((b, d), np.float32), np.zeros((b,), np.int32))
-                for _ in range(2)]
+            b: [(np.zeros((b * self.n_devices, d), np.float32),
+                 np.zeros((b * self.n_devices,), np.int32))
+                for _ in range(self.pipeline_depth + 1)]
             for b in self.policy.buckets
         }
         self._flip = {b: 0 for b in self.policy.buckets}
 
-        self._queue: queue.Queue[_Request] = queue.Queue()
+        # Per-priority-class pending queues: priority -> heap of
+        # (deadline, seq, request); protected by _cond with _pending_rows.
+        self._cond = threading.Condition()
+        self._queues: dict[int, list] = {}
+        self._pending_rows = 0
+        self._seq = 0
+        self._backpressure = False
         self._inflight: deque = deque()
         self._carry: Optional[_Request] = None
         self._stop = threading.Event()
@@ -243,6 +420,8 @@ class SVMEngine:
         if self._thread is None:
             return
         self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
         self._thread.join()
         self._thread = None
 
@@ -256,22 +435,48 @@ class SVMEngine:
         """Compile every bucket's program eagerly (blocking)."""
         d = self.fleet.n_features
         for b in self.policy.buckets:
-            out = self.fleet._labels_jit(
-                jnp.zeros((b, d), jnp.float32), jnp.zeros((b,), jnp.int32))
+            g = b * self.n_devices
+            out = self._forward(np.zeros((g, d), np.float32),
+                                np.zeros((g,), np.int32))
             out.block_until_ready()
 
     @property
     def n_buckets(self) -> int:
         return len(self.policy.buckets)
 
+    @property
+    def max_rows(self) -> int:
+        """Largest single dispatch: max bucket x device count."""
+        return self.policy.max_batch * self.n_devices
+
+    @property
+    def backpressure(self) -> bool:
+        """High/low-watermark overload signal: ``True`` once pending rows
+        reach ``high_watermark``, until the backlog drains below
+        ``low_watermark``.  Open-loop producers should throttle on it."""
+        with self._cond:
+            return self._backpressure
+
+    def _forward(self, xbuf: np.ndarray, ibuf: np.ndarray):
+        """Async labels dispatch; host numpy goes straight into the jit
+        (single- or mesh-sharded), which commits it to the device layout."""
+        if self._sharded is not None:
+            return self._sharded(xbuf, ibuf)
+        return self.fleet._labels_jit(xbuf, ibuf)
+
     # -- request ingress -----------------------------------------------------
 
-    def submit(self, x: np.ndarray, model: Union[str, int] = 0) -> Future:
+    def submit(self, x: np.ndarray, model: Union[str, int] = 0, *,
+               deadline_ms: Optional[float] = None,
+               priority: int = 0) -> Future:
         """Enqueue one request (``(d,)`` row or ``(k, d)`` mini-batch).
 
         The returned future resolves to a scalar ``int`` label for a 1-D
-        input, else an ``(k,)`` int32 array.  ``model`` is a fleet member
-        id or index.
+        input, else an ``(k,)`` int32 array — or raises
+        :class:`ShedError` if admission control shed the request.
+        ``model`` is a fleet member id or index; ``deadline_ms`` is a
+        relative completion deadline (``None`` = never expires);
+        ``priority`` orders classes (higher = more important).
         """
         if self._thread is None:
             raise RuntimeError("engine not started (use `with SVMEngine(...)`)")
@@ -285,56 +490,184 @@ class SVMEngine:
             raise ValueError(
                 f"expected (k, <= {self.fleet.n_features}) features, "
                 f"got {x.shape}")
-        if not 0 < x.shape[0] <= self.policy.max_batch:
+        if not 0 < x.shape[0] <= self.max_rows:
             raise ValueError(
-                f"request rows {x.shape[0]} outside "
-                f"(0, {self.policy.max_batch}]")
+                f"request rows {x.shape[0]} outside (0, {self.max_rows}]")
+        now = time.perf_counter()
+        deadline = math.inf if deadline_ms is None \
+            else now + float(deadline_ms) * 1e-3
         req = _Request(x=x, model_idx=self.fleet.model_index(model),
                        n_rows=x.shape[0], scalar=scalar, future=Future(),
-                       t_enqueue=time.perf_counter())
-        self._queue.put(req)
+                       t_enqueue=now, deadline=deadline,
+                       priority=int(priority), seq=0)
+        with self._cond:
+            req.seq = self._seq
+            self._seq += 1
+            if self.queue_bound is not None and \
+                    self._pending_rows + req.n_rows > self.queue_bound:
+                self._admit_over_bound(req, now)
+            else:
+                self._enqueue(req)
+            if self.high_watermark is not None:
+                if self._pending_rows >= self.high_watermark:
+                    self._backpressure = True
+                elif self._pending_rows <= self.low_watermark:
+                    self._backpressure = False
+            self._cond.notify()
         return req.future
 
     def predict(self, x: np.ndarray, model: Union[str, int] = 0):
         """Synchronous convenience wrapper: ``submit(...).result()``."""
         return self.submit(x, model).result()
 
-    # -- batcher thread ------------------------------------------------------
+    def _enqueue(self, req: _Request) -> None:
+        heapq.heappush(
+            self._queues.setdefault(req.priority, []),
+            (req.deadline, req.seq, req))
+        self._pending_rows += req.n_rows
+
+    def _shed(self, req: _Request, reason: str) -> None:
+        req.future.set_exception(ShedError(reason))
+        self.stats.observe_shed(req, reason)
+
+    def _admit_over_bound(self, req: _Request, now: float) -> None:
+        """Bounded-queue admission (called with the lock held): make room
+        by shedding already-expired queued work, then strictly
+        lower-priority queued work (latest deadline first), else shed the
+        incoming request itself."""
+        self._shed_expired_locked(now)
+        while self._pending_rows + req.n_rows > self.queue_bound:
+            victim = self._lowest_victim_locked(below=req.priority)
+            if victim is None:
+                self._shed(req, "overflow")
+                return
+            self._remove_locked(victim)
+            self._shed(victim, "overflow")
+        self._enqueue(req)
+
+    def _shed_expired_locked(self, now: float) -> None:
+        for prio in list(self._queues):
+            q = self._queues[prio]
+            while q and q[0][0] <= now:
+                _, _, r = heapq.heappop(q)
+                self._pending_rows -= r.n_rows
+                self._shed(r, "expired")
+            if not q:
+                del self._queues[prio]
+
+    def _lowest_victim_locked(self, below: int) -> Optional[_Request]:
+        """Latest-deadline request of the lowest priority class < below."""
+        prios = [p for p in self._queues if p < below and self._queues[p]]
+        if not prios:
+            return None
+        q = self._queues[min(prios)]
+        return max(q, key=lambda e: (e[0], e[1]))[2]
+
+    def _remove_locked(self, req: _Request) -> None:
+        q = self._queues[req.priority]
+        q.remove((req.deadline, req.seq, req))
+        heapq.heapify(q)
+        self._pending_rows -= req.n_rows
+        if not q:
+            del self._queues[req.priority]
+
+    # -- batch former (batcher thread) ---------------------------------------
+
+    def _horizon(self, now: float) -> float:
+        """Deadlines at or before this instant count as *expiring* and are
+        backfilled EDF across priority classes."""
+        backfill = self._backfill_s if self._backfill_s is not None \
+            else self.max_wait_s + self._service_ema
+        return now + backfill
+
+    def _select_locked(self, now: float) -> Optional[_Request]:
+        """Pop the next request: expiring-EDF across classes first (ties to
+        the higher priority), then highest priority class, EDF within it.
+        With ``shed_expired``, already-dead work is shed instead of served.
+        Call with the lock held."""
+        if self.shed_expired:
+            self._shed_expired_locked(now)
+        if not self._queues:
+            return None
+        horizon = self._horizon(now)
+        best_prio, expiring = None, None
+        for prio, q in self._queues.items():
+            head = q[0]
+            if head[0] <= horizon:
+                # Expiring: earliest deadline wins; tie -> higher priority.
+                key = (head[0], -prio, head[1])
+                if expiring is None or key < expiring[0]:
+                    expiring = (key, prio)
+            if best_prio is None or prio > best_prio:
+                best_prio = prio
+        prio = expiring[1] if expiring is not None else best_prio
+        q = self._queues[prio]
+        _, _, req = heapq.heappop(q)
+        self._pending_rows -= req.n_rows
+        if not q:
+            del self._queues[prio]
+        if self.low_watermark is not None and \
+                self._pending_rows <= self.low_watermark:
+            self._backpressure = False
+        return req
+
+    def _take(self, timeout: float) -> Optional[_Request]:
+        """Blocking select: wait up to ``timeout`` for a request."""
+        deadline = time.perf_counter() + timeout
+        with self._cond:
+            while True:
+                req = self._select_locked(time.perf_counter())
+                if req is not None:
+                    return req
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 or self._stop.is_set():
+                    return None
+                self._cond.wait(remaining)
+
+    def _take_nowait(self) -> Optional[_Request]:
+        with self._cond:
+            return self._select_locked(time.perf_counter())
+
+    def _pending_empty(self) -> bool:
+        with self._cond:
+            return not self._queues
 
     def _loop(self) -> None:
+        max_rows = self.max_rows
         while True:
             batch: list[_Request] = []
             rows = 0
             if self._carry is not None:
+                # Carried requests lead the next batch with their ORIGINAL
+                # enqueue time anchoring its max-wait deadline — a large
+                # request can never starve behind a stream of small ones.
                 batch.append(self._carry)
                 rows = self._carry.n_rows
                 self._carry = None
             if not batch:
-                try:
-                    r = self._queue.get(timeout=0.005)
-                    batch.append(r)
-                    rows = r.n_rows
-                except queue.Empty:
+                r = self._take(timeout=0.005)
+                if r is None:
                     # Idle: complete any in-flight batch, then exit once
                     # stopped and fully drained.
                     self._resolve(all_pending=True)
-                    if self._stop.is_set() and self._queue.empty() \
+                    if self._stop.is_set() and self._pending_empty() \
                             and self._carry is None:
                         return
                     continue
-            deadline = batch[0].t_enqueue + self.max_wait_s
-            while rows < self.policy.max_batch:
-                timeout = deadline - time.perf_counter()
-                try:
-                    # Past the deadline we stop *waiting* but still drain
-                    # the immediately-available backlog — a burst that
-                    # outruns the batcher forms full batches instead of
-                    # degrading to per-request dispatch.
-                    r = self._queue.get(timeout=timeout) if timeout > 0 \
-                        else self._queue.get_nowait()
-                except queue.Empty:
+                batch.append(r)
+                rows = r.n_rows
+            wait_until = batch[0].t_enqueue + self.max_wait_s
+            while rows < max_rows:
+                timeout = wait_until - time.perf_counter()
+                # Past the deadline we stop *waiting* but still drain the
+                # immediately-available backlog — a burst that outruns the
+                # batcher forms full batches instead of degrading to
+                # per-request dispatch.
+                r = self._take(timeout) if timeout > 0 \
+                    else self._take_nowait()
+                if r is None:
                     break
-                if rows + r.n_rows > self.policy.max_batch:
+                if rows + r.n_rows > max_rows:
                     self._carry = r       # held for the next batch
                     break
                 batch.append(r)
@@ -342,9 +675,14 @@ class SVMEngine:
             self._dispatch(batch, rows)
 
     def _dispatch(self, batch: list[_Request], rows: int) -> None:
-        bucket = self.policy.bucket_for(rows)
+        # Whole per-device slices: bucket the PER-DEVICE row count, then
+        # scale back to the global batch (n_devices = 1 when unsharded).
+        per_dev = -(-rows // self.n_devices)
+        bucket = self.policy.bucket_for(per_dev)
+        global_rows = bucket * self.n_devices
         xbuf, ibuf = self._staging[bucket][self._flip[bucket]]
-        self._flip[bucket] ^= 1
+        self._flip[bucket] = (self._flip[bucket] + 1) % len(
+            self._staging[bucket])
         off = 0
         for r in batch:
             k, d = r.x.shape
@@ -353,31 +691,31 @@ class SVMEngine:
                 xbuf[off:off + k, d:] = 0.0
             ibuf[off:off + k] = r.model_idx
             off += k
-        if off < bucket:                   # padded rows: zeros, model 0
+        if off < global_rows:              # padded rows: zeros, model 0
             xbuf[off:] = 0.0
             ibuf[off:] = 0
         t_disp = time.perf_counter()
         for r in batch:
             r.t_dispatch = t_disp
         try:
-            labels = self.fleet._labels_jit(
-                jnp.asarray(xbuf), jnp.asarray(ibuf))   # async dispatch
+            labels = self._forward(xbuf, ibuf)          # async dispatch
         except Exception as e:             # pragma: no cover - defensive
             for r in batch:
                 r.future.set_exception(e)
             return
-        self._inflight.append((labels, batch, rows, bucket))
-        # Double buffering: block on the OLDEST batch only once the
-        # pipeline is full, so staging batch t+1 overlapped device compute
-        # of batch t.
+        self._inflight.append((labels, batch, rows, bucket, t_disp))
+        # Pipelining: block on the OLDEST batch only once the pipeline is
+        # full, so staging batch t+k overlaps device compute of t..t+k-1.
         while len(self._inflight) > self.pipeline_depth:
             self._resolve()
 
     def _resolve(self, all_pending: bool = False) -> None:
         while self._inflight:
-            labels, batch, rows, bucket = self._inflight.popleft()
+            labels, batch, rows, bucket, t_disp = self._inflight.popleft()
             out = np.asarray(labels)       # blocks until device completes
             t_done = time.perf_counter()
+            self._service_ema = 0.8 * self._service_ema + \
+                0.2 * (t_done - t_disp)
             off = 0
             for r in batch:
                 lab = out[off:off + r.n_rows]

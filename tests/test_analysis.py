@@ -344,6 +344,51 @@ def test_waiver_requires_reason(tmp_path):
         load_baseline(str(p))
 
 
+def test_waiver_rejects_todo_placeholder(tmp_path):
+    # an unedited placeholder reason must fail loudly, not pass review
+    p = tmp_path / "baseline.json"
+    for reason in ("TODO: justify this waiver", "todo later"):
+        p.write_text(json.dumps({
+            "format": "repro.analysis.baseline", "version": 1,
+            "waivers": [{"rule": "KEY-REUSE", "match": "x.py::f",
+                         "reason": reason}]}))
+        with pytest.raises(ValueError, match="placeholder"):
+            load_baseline(str(p))
+
+
+def test_update_baseline_requires_real_reason(tmp_path, monkeypatch):
+    # --update-baseline on a new finding must demand --reason and reject
+    # TODO placeholders; with a real reason the waiver records it.
+    from repro.analysis.__main__ import main
+
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "bad.py").write_text(
+        "import jax\n\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key)\n"
+        "    b = jax.random.normal(key)\n"
+        "    return a + b\n")
+    baseline = tmp_path / "baseline.json"
+    args = ["--root", str(tmp_path), "--no-jaxpr", "--no-pallas",
+            "--baseline", str(baseline), "--update-baseline"]
+    with pytest.raises(SystemExit):
+        main(args)                                   # no --reason
+    with pytest.raises(SystemExit):
+        main(args + ["--reason", "TODO: fill in"])   # placeholder reason
+    assert not baseline.exists()
+    rc = main(args + ["--reason", "intentional correlated draws"])
+    assert rc == 0
+    waivers = load_baseline(str(baseline))
+    assert waivers and all(
+        w.reason == "intentional correlated draws" for w in waivers)
+    # prior waivers keep their own justification on re-update
+    rc = main(args + ["--reason", "a different reason"])
+    assert rc == 0
+    assert [w.reason for w in load_baseline(str(baseline))] == \
+        [w.reason for w in waivers]
+
+
 def test_waiver_glob_and_unused_tracking(tmp_path):
     f = Finding(rule="KEY-REUSE", path="benchmarks/fig4.py", symbol="run",
                 message="m")

@@ -16,6 +16,8 @@ Covers the PR's correctness contracts:
 All machines are hand-built at tiny shapes (no training), mirroring the
 analysis registry's ``_tiny_models`` so the suite stays fast.
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -284,3 +286,394 @@ def test_engine_lifecycle_and_bare_machine():
         eng.submit(np.zeros(3, np.float32))
     with pytest.raises(TypeError, match="cannot serve"):
         SVMEngine(object())
+
+
+# -- ServingStats memory bound -----------------------------------------------
+
+
+class _FakeReq:
+    def __init__(self, t0, wait, service, n_rows=1, deadline=None):
+        import math
+        self.t_enqueue = t0
+        self.t_dispatch = t0 + wait
+        self.t_complete = t0 + wait + service
+        self.n_rows = n_rows
+        self.deadline = math.inf if deadline is None else deadline
+
+
+def test_stats_memory_stays_flat_with_tolerable_percentiles():
+    """Streaming totals are exact and the latency sample is a fixed-size
+    reservoir: feeding 200x the reservoir capacity must not grow memory,
+    and reservoir percentiles must track the exact ones."""
+    stats = ServingStats(reservoir=512, seed=0)
+    gen = np.random.default_rng(0)
+    exact = []
+    n_total = 512 * 200
+    batch = 64
+    footprint = stats._res.nbytes
+    t = 0.0
+    for start in range(0, n_total, batch):
+        reqs = []
+        for _ in range(batch):
+            wait = float(gen.exponential(0.001))
+            service = float(gen.exponential(0.002))
+            reqs.append(_FakeReq(t, wait, service))
+            exact.append((wait + service) * 1e3)
+            t += 1e-4
+        stats.observe_batch(batch, 64, reqs)
+    # memory: the reservoir never grew, and no per-request list exists
+    assert stats._res.nbytes == footprint
+    assert stats._res.shape == (512, 2)
+    assert not any(isinstance(v, list) and len(v) > 1024
+                   for v in vars(stats).values())
+    s = stats.summary()
+    # exact streaming totals
+    assert s["n_requests"] == n_total
+    assert s["n_queries"] == n_total
+    # summary() rounds to 3 decimals; the totals behind it are exact
+    assert s["latency_ms"]["mean"] == pytest.approx(
+        float(np.mean(exact)), abs=5e-4)
+    assert s["latency_ms"]["max"] == pytest.approx(
+        float(np.max(exact)), abs=5e-4)
+    # reservoir percentiles within sampling tolerance of the exact ones
+    for q in (50, 95, 99):
+        want = float(np.percentile(exact, q))
+        got = s["latency_ms"][f"p{q}"]
+        assert got == pytest.approx(want, rel=0.25), (q, got, want)
+    assert s["latency_sample_n"] == 512
+
+
+# -- deadline / priority batch former ----------------------------------------
+
+
+def _mk_req(eng, seq, *, n_rows=1, priority=0, deadline=None, t0=None):
+    """Hand-built queued request for direct batch-former tests."""
+    import math
+    import time
+    from concurrent.futures import Future
+
+    from repro.serving.svm_engine import _Request
+
+    now = time.perf_counter() if t0 is None else t0
+    d = eng.fleet.n_features
+    return _Request(x=np.zeros((n_rows, d), np.float32), model_idx=0,
+                    n_rows=n_rows, scalar=n_rows == 1, future=Future(),
+                    t_enqueue=now, priority=priority, seq=seq,
+                    deadline=math.inf if deadline is None else deadline)
+
+
+def test_batch_former_priority_and_edf_backfill(engine_fleet):
+    """Selection order: expiring requests EDF across classes (backfill),
+    then strictly by priority class; low-priority non-expiring work never
+    precedes high-priority work (no inversion)."""
+    import time
+
+    eng = SVMEngine(engine_fleet, max_batch=32, max_wait_ms=1.0)
+    now = time.perf_counter()
+    horizon = eng._horizon(now)
+    a = _mk_req(eng, 0, priority=2)                       # high, no deadline
+    b = _mk_req(eng, 1, priority=0)                       # low, no deadline
+    c = _mk_req(eng, 2, priority=0, deadline=horizon)     # low, expiring
+    d = _mk_req(eng, 3, priority=2, deadline=horizon - 1e-4)  # high, expiring
+    with eng._cond:
+        for r in (a, b, c, d):
+            eng._enqueue(r)
+        order = [eng._select_locked(now) for _ in range(4)]
+    # d, c expiring -> EDF (d earlier); then a (high class); b last
+    assert [r.seq for r in order] == [3, 2, 0, 1]
+
+    # equal expiring deadlines tie-break to the higher priority class
+    e = _mk_req(eng, 4, priority=0, deadline=horizon)
+    f = _mk_req(eng, 5, priority=1, deadline=horizon)
+    with eng._cond:
+        eng._enqueue(e)
+        eng._enqueue(f)
+        assert eng._select_locked(now).seq == 5
+        assert eng._select_locked(now).seq == 4
+
+
+def test_batch_former_sheds_expired_when_enabled(engine_fleet):
+    import time
+
+    from repro.serving import ShedError
+
+    eng = SVMEngine(engine_fleet, max_batch=32, shed_expired=True)
+    now = time.perf_counter()
+    dead = _mk_req(eng, 0, deadline=now - 1.0)
+    live = _mk_req(eng, 1)
+    with eng._cond:
+        eng._enqueue(dead)
+        eng._enqueue(live)
+        assert eng._select_locked(now).seq == 1
+        assert eng._select_locked(now) is None
+    with pytest.raises(ShedError, match="expired"):
+        dead.future.result(timeout=0)
+    assert eng.stats.summary()["shed"]["reasons"] == {"expired": 1}
+
+    # without shed_expired the expired request is still served
+    eng2 = SVMEngine(engine_fleet, max_batch=32)
+    stale = _mk_req(eng2, 0, deadline=now - 1.0)
+    with eng2._cond:
+        eng2._enqueue(stale)
+        assert eng2._select_locked(now).seq == 0
+
+
+def test_admission_sheds_expired_then_lowest_priority(engine_fleet):
+    """Bounded-queue admission: room is made by shedding already-expired
+    work first, then strictly lower-priority work (latest deadline
+    first); an incoming request with no lower class is itself shed."""
+    import time
+
+    from repro.serving import ShedError
+
+    eng = SVMEngine(engine_fleet, max_batch=32, queue_bound=4)
+    now = time.perf_counter()
+    expired = _mk_req(eng, 0, priority=5, deadline=now - 1.0)
+    lo_late = _mk_req(eng, 1, priority=0, deadline=now + 9.0)
+    lo_soon = _mk_req(eng, 2, priority=0, deadline=now + 1.0)
+    with eng._cond:
+        for r in (expired, lo_late, lo_soon):
+            eng._enqueue(r)
+        # over bound by 2: the expired one goes first ("expired"), then
+        # the LATEST-deadline low-priority one ("overflow")
+        incoming = _mk_req(eng, 3, priority=1, n_rows=3)
+        eng._admit_over_bound(incoming, now)
+        assert eng._pending_rows == 4      # lo_soon (1) + incoming (3)
+    with pytest.raises(ShedError, match="expired"):
+        expired.future.result(timeout=0)
+    with pytest.raises(ShedError, match="overflow"):
+        lo_late.future.result(timeout=0)
+    assert not lo_soon.future.done()
+    assert not incoming.future.done()
+
+    # no strictly-lower class left -> the incoming request is shed
+    with eng._cond:
+        loser = _mk_req(eng, 4, priority=0, n_rows=3)
+        eng._admit_over_bound(loser, now)
+    with pytest.raises(ShedError, match="overflow"):
+        loser.future.result(timeout=0)
+    assert not lo_soon.future.done()
+    assert eng.stats.summary()["shed"]["reasons"] == \
+        {"expired": 1, "overflow": 2}
+
+
+def test_overload_burst_sheds_only_lowest_priority(engine_fleet):
+    """End-to-end overload: a burst larger than the queue bound against a
+    slowed-down device sheds SOME priority-0 work and NO priority-1 work;
+    everything not shed completes correctly."""
+    import time
+
+    from repro.serving import ShedError
+
+    fleet = engine_fleet
+    eng = SVMEngine(fleet, max_batch=8, max_wait_ms=0.5, queue_bound=16,
+                    shed_expired=True)
+    slow, orig = 0.02, eng._forward
+
+    def slow_forward(xbuf, ibuf):
+        time.sleep(slow)
+        return orig(xbuf, ibuf)
+
+    eng._forward = slow_forward
+    gen = np.random.default_rng(5)
+    with eng:
+        eng.warmup()
+        x = _queries(gen, 1, 3)[0]
+        lo = [eng.submit(x, "a", priority=0) for _ in range(120)]
+        # high-priority burst below the queue bound: admission makes room
+        # for every one of these by evicting queued priority-0 work
+        hi = [eng.submit(x, "a", priority=1) for _ in range(12)]
+        want = int(fleet.member("a").predict(x[None])[0])
+        shed_lo = 0
+        for f in lo:
+            try:
+                assert f.result(timeout=60.0) == want
+            except ShedError as e:
+                assert e.reason in ("overflow", "expired")
+                shed_lo += 1
+        for f in hi:          # high priority is NEVER shed here
+            assert f.result(timeout=60.0) == want
+    assert shed_lo > 0
+    assert eng.stats.n_shed == shed_lo
+
+
+def test_backpressure_watermarks(engine_fleet):
+    import time
+
+    eng = SVMEngine(engine_fleet, max_batch=8, max_wait_ms=0.5,
+                    queue_bound=64, high_watermark=32, low_watermark=8)
+    slow, orig = 0.01, eng._forward
+
+    def slow_forward(xbuf, ibuf):
+        time.sleep(slow)
+        return orig(xbuf, ibuf)
+
+    eng._forward = slow_forward
+    gen = np.random.default_rng(6)
+    with eng:
+        eng.warmup()
+        assert eng.backpressure is False
+        futs = [eng.submit(_queries(gen, 8, 3), "a") for _ in range(6)]
+        assert eng.backpressure is True        # 48 pending rows >= 32
+        for f in futs:
+            f.result(timeout=60.0)
+        deadline = time.monotonic() + 10.0
+        while eng.backpressure and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert eng.backpressure is False       # drained below low watermark
+
+
+def test_carry_leads_next_batch_with_original_enqueue(engine_fleet):
+    """A request that overflows the forming batch is carried and MUST be
+    row 0 of the next dispatch, keeping its original enqueue time (its
+    max-wait anchor) — large requests cannot starve behind small ones."""
+    dispatched = []
+    eng = SVMEngine(engine_fleet, max_batch=8, max_wait_ms=30.0)
+    orig = eng._dispatch
+
+    def record(batch, rows):
+        dispatched.append(list(batch))
+        orig(batch, rows)
+
+    eng._dispatch = record
+    gen = np.random.default_rng(7)
+    with eng:
+        eng.warmup()
+        dispatched.clear()
+        f1 = eng.submit(_queries(gen, 5, 3), "a")
+        time.sleep(0.005)                      # batcher anchors on f1
+        f2 = eng.submit(_queries(gen, 6, 3), "a")   # 5 + 6 > 8 -> carry
+        r1 = f1.result(timeout=30.0)
+        r2 = f2.result(timeout=30.0)
+        assert len(r1) == 5 and len(r2) == 6
+    assert len(dispatched) >= 2
+    assert [r.n_rows for r in dispatched[0]] == [5]
+    carry_batch = dispatched[1]
+    assert carry_batch[0].n_rows == 6          # carried -> batch[0]
+    # original enqueue preserved: it waited across BOTH batches
+    assert carry_batch[0].t_enqueue <= dispatched[0][0].t_dispatch
+
+
+def test_pipeline_depth_k(engine_fleet):
+    """pipeline_depth=k keeps k batches in flight over k+1 staging
+    buffers and still resolves every request correctly."""
+    fleet = engine_fleet
+    m = fleet.member("a")
+    gen = np.random.default_rng(8)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        SVMEngine(fleet, pipeline_depth=0)
+    with SVMEngine(fleet, max_batch=16, max_wait_ms=0.2,
+                   pipeline_depth=3) as eng:
+        assert all(len(bufs) == 4 for bufs in eng._staging.values())
+        eng.warmup()
+        xs = [_queries(gen, 3, 3) for _ in range(50)]
+        futs = [eng.submit(x, "a") for x in xs]
+        for x, f in zip(xs, futs):
+            np.testing.assert_array_equal(f.result(timeout=30.0),
+                                          m.predict(x))
+
+
+def test_engine_mesh_on_one_device(engine_fleet):
+    """mesh= dispatch on a 1-device serving mesh: labels identical to the
+    plain engine, buckets become per-device sizes."""
+    from repro.launch.mesh import make_serving_mesh
+
+    fleet = engine_fleet
+    mesh = make_serving_mesh(1)
+    gen = np.random.default_rng(9)
+    with SVMEngine(fleet, max_batch=16, max_wait_ms=0.5, mesh=mesh) as eng:
+        assert eng.n_devices == 1 and eng.max_rows == 16
+        eng.warmup()
+        for mid in fleet.model_ids:
+            m = fleet.member(mid)
+            x = _queries(gen, 11, m.n_features)
+            np.testing.assert_array_equal(eng.predict(x, mid), m.predict(x))
+
+
+# -- mesh-sharded forward (8 virtual devices, subprocess) --------------------
+
+
+def test_sharded_fleet_forward_bit_identity_subprocess():
+    """8-fake-device shard_map serving leg: every per-device slice of the
+    sharded labels output is bit-identical to the single-device forward
+    on the same rows, on ragged mixed-model batches; the engine serves
+    through the mesh end-to-end (subprocess so XLA_FLAGS doesn't leak)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    body = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        from tests.test_serving_svm import tiny_machine, _queries
+        from repro.api import compile_fleet
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving import SVMEngine
+
+        fleet = compile_fleet({
+            "tiny": tiny_machine(0, d=3, m=6, n_classes=3),
+            "wide": tiny_machine(1, d=5, m=8, n_classes=4),
+            "analog": tiny_machine(2, d=4, m=6, n_classes=3,
+                                   analog_pairs=(1,)),
+        })
+        mesh = make_serving_mesh()
+        fwd = fleet.shard(mesh)
+        assert fwd.n_devices == 8
+        gen = np.random.default_rng(0)
+
+        # ragged mixed-model batch, whole per-device slices (8 x 16 rows)
+        n = fwd.global_rows(16)
+        x = fleet._pad_features(_queries(gen, n, fleet.n_features))
+        idx = fleet._resolve_idx(
+            [fleet.model_ids[i] for i in gen.integers(0, 3, size=n)], n)
+        sharded = np.asarray(fwd(x, idx.copy()))
+        local = np.asarray(fleet._labels_jit(x, idx.copy()))
+        # global AND per-device-slice bit identity (i32 labels)
+        np.testing.assert_array_equal(sharded, local)
+        per = n // 8
+        for dev in range(8):
+            s = slice(dev * per, (dev + 1) * per)
+            np.testing.assert_array_equal(
+                sharded[s],
+                np.asarray(fleet._labels_jit(x[s], idx[s].copy())))
+
+        # ragged row count: predict pads to whole slices and trims
+        x27 = _queries(gen, 27, 4)
+        np.testing.assert_array_equal(fwd.predict(x27, "analog"),
+                                      fleet.predict(x27, "analog"))
+
+        # engine end-to-end through the mesh, mixed models + deadlines
+        with SVMEngine(fleet, max_batch=16, max_wait_ms=1.0,
+                       mesh=mesh) as eng:
+            assert eng.max_rows == 16 * 8
+            eng.warmup()
+            futs = []
+            for i in range(40):
+                mid = fleet.model_ids[i % 3]
+                m = fleet.member(mid)
+                q = _queries(gen, 3, m.n_features)
+                futs.append((mid, q, eng.submit(q, mid, deadline_ms=5e3)))
+            for mid, q, f in futs:
+                np.testing.assert_array_equal(
+                    f.result(timeout=60.0), fleet.member(mid).predict(q))
+        print("OK")
+    """)
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.path.join(os.path.dirname(__file__), "..")]))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", body], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "OK" in res.stdout
+
+
+def test_serving_mesh_requires_batch_axis(engine_fleet):
+    from repro.launch import mesh as mesh_mod
+
+    m = mesh_mod.make_test_mesh(shape=(1,), axes=("data",))
+    with pytest.raises(ValueError, match="batch"):
+        engine_fleet.shard(m)
